@@ -1,0 +1,128 @@
+"""Diagnostic: per-op FLOP attribution from a compiled cell's HLO.
+
+    PYTHONPATH=src python benchmarks/analyze_dots.py --arch mixtral-8x7b \
+        --shape train_4k [--unroll]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import re            # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+import jax           # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.launch import specs as specs_mod  # noqa: E402
+from repro.launch.dryrun import make_step_fn  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?.*?)\s+([a-z][a-z0-9\-]*)\("
+)
+OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def dims_of(s):
+    return [int(x) for x in s.split(",") if x]
+
+
+def nelems(shape_str):
+    n = 1
+    for d in dims_of(shape_str):
+        n *= d
+    return n
+
+
+def analyze(text, top=18):
+    shapes: dict[str, str] = {}
+    for line in text.splitlines():
+        m = INSTR_RE.match(line)
+        if m:
+            sh = SHAPE_RE.search(m.group(2))
+            if sh:
+                shapes[m.group(1)] = sh.group(2)
+
+    by_sig = defaultdict(lambda: [0, 0.0])
+    for line in text.splitlines():
+        m = INSTR_RE.match(line)
+        if m is None:
+            continue
+        name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+        result = SHAPE_RE.search(type_str)
+        if not result:
+            continue
+        out_elems = nelems(result.group(2))
+        flops = 0.0
+        sig = opcode
+        if opcode == "dot":
+            cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+            args = line[m.end() - 1:]
+            op_names = OPERAND_RE.findall(args.split("),", 1)[0])
+            lhs_shape = shapes.get(op_names[0], "") if op_names else ""
+            contract = 1
+            if cm and lhs_shape:
+                lhs = dims_of(lhs_shape)
+                for d in [int(x) for x in cm.group(1).split(",") if x]:
+                    if d < len(lhs):
+                        contract *= lhs[d]
+            flops = 2.0 * out_elems * contract
+            sig = f"dot [{lhs_shape}] c={contract} -> [{result.group(2)}]"
+        elif opcode == "reduce-window":
+            wm = re.search(r"window=\{size=([0-9x]+)", line)
+            wsize = 1
+            if wm:
+                for d in wm.group(1).split("x"):
+                    wsize *= int(d)
+            flops = float(out_elems) * wsize
+            sig = f"reduce-window w={wm.group(1) if wm else '?'} [{result.group(2)}]"
+        elif opcode in ("reduce", "multiply", "add", "subtract", "divide",
+                         "exponential", "tanh", "rsqrt", "fusion", "compare",
+                         "maximum", "select", "convert"):
+            flops = float(out_elems)
+            sig = opcode
+        else:
+            continue
+        by_sig[sig][0] += 1
+        by_sig[sig][1] += flops
+
+    total = sum(v[1] for v in by_sig.values())
+    rows = sorted(by_sig.items(), key=lambda kv: -kv[1][1])[:top]
+    print(f"sum of attributed flops: {total:.4g}")
+    for sig, (count, flops) in rows:
+        print(f"{flops:12.3g} ({100*flops/max(total,1):5.1f}%) x{count:<5} {sig[:130]}")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="mixtral-8x7b")
+    p.add_argument("--shape", default="train_4k")
+    p.add_argument("--unroll", action="store_true")
+    args = p.parse_args()
+
+    cfg = configs.get(args.arch).replace(unroll_layers=args.unroll)
+    shape = configs.SHAPES[args.shape]
+    mesh = make_production_mesh()
+    specs = specs_mod.input_specs(cfg, shape, mesh)
+
+    import repro.launch.dryrun as dr
+    orig = configs.get
+    configs.get = lambda a, smoke=False: cfg
+    fn = dr.make_step_fn(cfg, shape, mesh)
+    configs.get = orig
+    with mesh:
+        if shape.kind == "train":
+            compiled = jax.jit(fn).lower(specs["state"], specs["batch"]).compile()
+        elif shape.kind == "prefill":
+            compiled = jax.jit(fn).lower(specs["params"], specs["batch"]).compile()
+        else:
+            compiled = jax.jit(fn).lower(
+                specs["params"], specs["tokens_new"], specs["cache"],
+                specs["position"]).compile()
+    print("cost_analysis flops:", compiled.cost_analysis()["flops"])
+    analyze(compiled.as_text())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+
+PASS_FLOW = {
+    "StartAt": "Noop",
+    "States": {"Noop": {"Type": "Pass", "End": True}},
+}
+
+SLEEP_FLOW = {
+    "StartAt": "Sleep",
+    "States": {
+        "Sleep": {
+            "Type": "Action",
+            "ActionUrl": "ap://sleep",
+            "Parameters": {"seconds.$": "$.seconds"},
+            "ResultPath": "$.slept",
+            "End": True,
+        }
+    },
+}
+
+
+def virtual_stack(polling=None, auth=None):
+    """FlowsService + registry on a VirtualClock (deterministic)."""
+    from repro.core.actions import ActionRegistry
+    from repro.core.clock import VirtualClock
+    from repro.core.flows_service import FlowsService
+    from repro.core.providers import EchoProvider, SleepProvider
+
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock, auth=auth))
+    sleep = SleepProvider(clock=clock, auth=auth)
+    registry.register(sleep)
+    flows = FlowsService(registry, clock=clock, auth=auth, polling=polling)
+    sleep.scheduler = flows.engine.scheduler
+    return flows, clock, registry
+
+
+def real_stack(polling=None, max_workers=8):
+    from repro.core.actions import ActionRegistry
+    from repro.core.clock import RealClock
+    from repro.core.flows_service import FlowsService
+    from repro.core.providers import EchoProvider, SleepProvider
+
+    clock = RealClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    sleep = SleepProvider(clock=clock)
+    registry.register(sleep)
+    flows = FlowsService(registry, clock=clock, polling=polling,
+                         max_workers=max_workers)
+    sleep.scheduler = flows.engine.scheduler
+    return flows, clock, registry
+
+
+def stats(values) -> dict:
+    arr = np.asarray(values, dtype=np.float64)
+    if arr.size == 0:
+        return {"n": 0}
+    return {
+        "n": int(arr.size),
+        "min": float(arr.min()),
+        "max": float(arr.max()),
+        "mean": float(arr.mean()),
+        "std": float(arr.std()),
+        "p50": float(np.percentile(arr, 50)),
+        "p95": float(np.percentile(arr, 95)),
+    }
+
+
+def save_results(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    return path
+
+
+def csv_line(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

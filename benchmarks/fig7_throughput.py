@@ -1,0 +1,79 @@
+"""Figure 7 reproduction: flow throughput/latency vs concurrent clients.
+
+Paper setup: N concurrent clients each repeatedly invoke a flow comprising a
+single Pass state and wait for the response; measure per-request response
+time and aggregate requests/second.  Paper observed ~25 flows/s saturation
+with failures (timeouts) past 64 clients.
+
+Ours is an in-process engine (no HTTPS/ASF round trips), so absolute numbers
+are far higher; the *shape* — saturation of RPS and growing tail latency as
+clients exceed worker parallelism — is the reproduced phenomenon.  A
+client-side timeout marks failures exactly like the paper's.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from benchmarks.common import PASS_FLOW, csv_line, real_stack, save_results, stats
+
+
+def run(clients_sweep=(1, 2, 4, 8, 16, 32, 64, 128), requests_per_client=20,
+        timeout_s=5.0, max_workers=8):
+    rows = []
+    for n_clients in clients_sweep:
+        flows, clock, _ = real_stack(max_workers=max_workers)
+        record = flows.publish_flow(PASS_FLOW, title="fig7-pass")
+        latencies: list[float] = []
+        failures = [0]
+        lock = threading.Lock()
+
+        def client():
+            for _ in range(requests_per_client):
+                t0 = time.time()
+                run_ = flows.run_flow(record.flow_id, {})
+                flows.engine.wait(run_.run_id, timeout=timeout_s)
+                dt = time.time() - t0
+                with lock:
+                    if run_.status == "SUCCEEDED":
+                        latencies.append(dt)
+                    else:
+                        failures[0] += 1
+
+        threads = [threading.Thread(target=client) for _ in range(n_clients)]
+        t0 = time.time()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.time() - t0
+        flows.engine.shutdown()
+        total = n_clients * requests_per_client
+        rows.append({
+            "clients": n_clients,
+            "requests": total,
+            "failures": failures[0],
+            "rps": (total - failures[0]) / wall,
+            "latency": stats(latencies),
+        })
+    return rows
+
+
+def main(quick: bool = False):
+    sweep = (1, 4, 16, 64) if quick else (1, 2, 4, 8, 16, 32, 64, 128)
+    rows = run(clients_sweep=sweep,
+               requests_per_client=10 if quick else 20)
+    save_results("fig7_throughput", rows)
+    lines = []
+    for r in rows:
+        lines.append(csv_line(
+            f"fig7/clients={r['clients']}",
+            r["latency"].get("mean", 0) * 1e6,
+            f"rps={r['rps']:.1f};failures={r['failures']}",
+        ))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,84 @@
+"""Figure 8 reproduction: per-flow overhead vs action duration.
+
+Paper setup: a flow consisting of a single action that sleeps for a
+specified duration; overhead = flow completion time - sleep time.  With the
+paper's polling policy (first poll at 2 s, doubling, 600 s cap) the paper
+measured 2.88 s mean overhead for no-op flows, declining to 1.2% of total
+time for 1024 s flows.
+
+We reproduce the full 0..1024 s x-axis deterministically under a virtual
+clock, with the paper's exact backoff policy (the *paper-faithful baseline*)
+and with the beyond-paper completion-callback policy (overhead -> ~0) for
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import SLEEP_FLOW, csv_line, save_results, virtual_stack
+from repro.core.engine import PollingPolicy
+
+PAPER_POLICY = PollingPolicy(initial_seconds=2.0, multiplier=2.0,
+                             cap_seconds=600.0)
+#: The paper's *measured* Fig 8 (1.2% overhead at 1024 s) is inconsistent
+#: with its *stated* doubling-to-600s policy (whose poll gaps near t grow
+#: ~linearly with t, i.e. ~50% overhead).  An interval cap of ~12 s
+#: reproduces their measured curve — their deployed pollers evidently kept
+#: the effective interval far below the stated cap.  Documented in
+#: EXPERIMENTS.md as a reproduction discrepancy.
+EMPIRICAL_POLICY = PollingPolicy(initial_seconds=2.0, multiplier=2.0,
+                                 cap_seconds=12.0)
+OPTIMIZED_POLICY = PollingPolicy(initial_seconds=2.0, multiplier=2.0,
+                                 cap_seconds=600.0, use_callbacks=True)
+
+SLEEPS = [0, 1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024]
+#: paper §6.1: jitter in when the action actually finishes relative to poll
+#: boundaries — sample several offsets per nominal sleep
+OFFSETS = [0.0, 0.1, 0.33, 0.5, 0.77, 0.9]
+
+
+def run(policy: PollingPolicy) -> list[dict]:
+    rows = []
+    for sleep in SLEEPS:
+        overheads = []
+        for off in OFFSETS:
+            seconds = max(sleep + off * min(sleep, 1.0), sleep)
+            flows, clock, _ = virtual_stack(polling=policy)
+            record = flows.publish_flow(SLEEP_FLOW, title="fig8-sleep")
+            run_ = flows.run_flow(record.flow_id, {"seconds": seconds})
+            flows.engine.run_to_completion(run_.run_id)
+            assert run_.status == "SUCCEEDED", run_.error
+            total = run_.completion_time - run_.start_time
+            overheads.append(total - seconds)
+        mean_overhead = sum(overheads) / len(overheads)
+        rows.append({
+            "sleep_s": sleep,
+            "mean_overhead_s": mean_overhead,
+            "max_overhead_s": max(overheads),
+            "overhead_pct": 100.0 * mean_overhead / sleep if sleep else None,
+        })
+    return rows
+
+
+def main(quick: bool = False):
+    paper = run(PAPER_POLICY)
+    empirical = run(EMPIRICAL_POLICY)
+    optimized = run(OPTIMIZED_POLICY)
+    save_results("fig8_overhead", {"paper_stated_policy": paper,
+                                   "paper_empirical_cap12": empirical,
+                                   "callback_policy": optimized})
+    lines = []
+    for label, rows in (("stated", paper), ("empirical", empirical),
+                        ("callbacks", optimized)):
+        for row in rows:
+            pct = (f"{row['overhead_pct']:.2f}%"
+                   if row["overhead_pct"] is not None else "n/a")
+            lines.append(csv_line(
+                f"fig8/{label}/sleep={row['sleep_s']}s",
+                row["mean_overhead_s"] * 1e6,
+                f"overhead={row['mean_overhead_s']:.3f}s;pct={pct}",
+            ))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

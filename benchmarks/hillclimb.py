@@ -1,0 +1,105 @@
+"""Perf hillclimbing over dry-run cells (EXPERIMENTS.md §Perf).
+
+Runs named variants of a cell — each a (cfg override, sharding-rule
+override, train-config) tuple — records tagged dry-run JSONs, and prints the
+three roofline terms vs the baseline.
+
+    PYTHONPATH=src python benchmarks/hillclimb.py --arch mixtral-8x7b \
+        --shape train_4k --variants dots_remat,bf16_grads,slot_sharding
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+
+from repro.configs.base import TrainConfig  # noqa: E402
+from repro.launch.dryrun import run_cell    # noqa: E402
+from repro.launch.roofline import analyze   # noqa: E402
+
+VARIANTS = {
+    # hypothesis: 'full' remat recomputes the whole forward (~+33% FLOPs);
+    # checkpointing only non-matmul outputs trades memory for compute-term
+    "dots_remat": dict(cfg_override={"remat_policy": "dots"}),
+    "no_remat": dict(cfg_override={"remat_policy": "none"}),
+    # hypothesis: backward collectives carry f32 gradients; computing grads
+    # against a bf16 param view halves backward collective bytes
+    "bf16_grads": dict(tcfg=TrainConfig(grad_compression="bf16")),
+    # hypothesis: with n_experts < model-axis, dispatch/combine einsums are
+    # replicated across "model"; slot-sharding capacity distributes them
+    "slot_sharding": dict(rules_override={"expert_capacity": "model"}),
+    # hypothesis: microbatching shrinks live activations (memory term) at
+    # the cost of more (smaller) collectives
+    "microbatch4": dict(tcfg=TrainConfig(microbatches=4)),
+    "microbatch8": dict(tcfg=TrainConfig(microbatches=8)),
+    # decode cells: KV cache sequence-sharded over the model axis when
+    # kv_heads cannot split it
+    "kv_seq_model": dict(rules_override={"kv_seq": "model"}),
+    # hypothesis: XLA emits all-reduce(+slice) for FSDP grad reductions;
+    # constraining grads to the param sharding lets it use reduce-scatter
+    "rs_grads": dict(constrain_grads=True),
+    "rs_bf16": dict(constrain_grads=True,
+                    tcfg=TrainConfig(grad_compression="bf16")),
+    # combined winners (filled in per-cell during the perf loop)
+    "combo_moe": dict(
+        cfg_override={"remat_policy": "dots"},
+        tcfg=TrainConfig(grad_compression="bf16"),
+        rules_override={"expert_capacity": "model"},
+    ),
+    "combo_dense": dict(
+        cfg_override={"remat_policy": "dots"},
+        tcfg=TrainConfig(grad_compression="bf16"),
+    ),
+}
+
+
+def show(rec, label):
+    if rec.get("status") != "ok":
+        print(f"{label:>16}: ERROR {rec.get('error', '')[:140]}")
+        return None
+    row = analyze(rec)
+    print(
+        f"{label:>16}: compute {row['compute_s']:8.3f}s  "
+        f"memory {row['memory_s']:8.3f}s  collective {row['collective_s']:8.3f}s"
+        f"  dominant={row['dominant']:<10} frac={row['roofline_fraction']:.4f}"
+        f"  useful={row['useful_ratio']:.2f}"
+        f"  temp/dev={(rec.get('memory', {}).get('temp_size_in_bytes') or 0)/2**30:.1f}GiB"
+    )
+    return row
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--mesh", default="single")
+    p.add_argument("--variants", required=True,
+                   help="comma list from: " + ",".join(VARIANTS))
+    p.add_argument("--rerun-baseline", action="store_true")
+    args = p.parse_args()
+
+    base_path = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "results", "dryrun",
+        f"{args.arch}__{args.shape}__{args.mesh}.json",
+    )
+    if os.path.exists(base_path) and not args.rerun_baseline:
+        base = json.load(open(base_path))
+    else:
+        base = run_cell(args.arch, args.shape, args.mesh)
+    show(base, "baseline")
+
+    for name in args.variants.split(","):
+        spec = VARIANTS[name]
+        rec = run_cell(
+            args.arch, args.shape, args.mesh,
+            tcfg=spec.get("tcfg"),
+            rules_override=spec.get("rules_override"),
+            cfg_override=spec.get("cfg_override"),
+            constrain_grads=spec.get("constrain_grads", False),
+            tag=name,
+        )
+        show(rec, name)
+
+
+if __name__ == "__main__":
+    main()

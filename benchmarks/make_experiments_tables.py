@@ -1,0 +1,82 @@
+"""Regenerate the roofline tables inside EXPERIMENTS.md from dry-run records.
+
+    PYTHONPATH=src python benchmarks/make_experiments_tables.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+from repro import configs
+from repro.launch import roofline
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MD = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def cell_order():
+    order = []
+    for arch in configs.ARCH_IDS:
+        for shape in configs.shapes_for(arch):
+            order.append((arch, shape.name))
+    return order
+
+
+def table_for(mesh: str) -> str:
+    recs = {(r["arch"], r["shape"]): r
+            for r in roofline.load_records(mesh=mesh, tag="")}
+    header = (
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful | roofline frac | temp GiB/dev | note |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for arch, shape in cell_order():
+        rec = recs.get((arch, shape))
+        if rec is None:
+            lines.append(f"| {arch} | {shape} | — | — | — | — | — | — | — | "
+                         f"not yet computed |")
+            continue
+        if rec.get("status") != "ok":
+            err = rec.get("error", "")[:60]
+            lines.append(f"| {arch} | {shape} | — | — | — | — | — | — | — | "
+                         f"ERROR: {err} |")
+            continue
+        row = roofline.analyze(rec)
+        temp = (rec.get("memory", {}).get("temp_size_in_bytes") or 0) / 2**30
+        lines.append(
+            f"| {arch} | {shape} | {row['compute_s']:.3f} | "
+            f"{row['memory_s']:.3f} | {row['collective_s']:.3f} | "
+            f"{row['dominant']} | {row['useful_ratio']:.2f} | "
+            f"{row['roofline_fraction']:.4f} | {temp:.1f} | |"
+        )
+    done = sum(1 for a, s in cell_order() if (a, s) in recs
+               and recs[(a, s)].get("status") == "ok")
+    footer = f"\n{done}/{len(cell_order())} cells compiled OK on this mesh.\n"
+    return header + "\n".join(lines) + "\n" + footer
+
+
+def main():
+    with open(MD) as fh:
+        text = fh.read()
+    for marker, mesh in (("<!-- ROOFLINE_TABLE_SINGLE -->", "single"),
+                          ("<!-- ROOFLINE_TABLE_MULTI -->", "multi")):
+        block = marker + "\n" + table_for(mesh)
+        pattern = re.escape(marker) + r"(?:\n\|.*?(?:\n\n|\n(?=#))|\n(?=#)|\s*\n)"
+        # simple replacement: marker + everything until the next blank-line+
+        # heading is regenerated
+        parts = text.split(marker)
+        if len(parts) == 2:
+            rest = parts[1]
+            # drop a previously generated table (up to the next heading)
+            m = re.search(r"\n(?=## |### )", rest)
+            tail = rest[m.start():] if m else ""
+            text = parts[0] + block + tail
+    with open(MD, "w") as fh:
+        fh.write(text)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

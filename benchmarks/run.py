@@ -1,0 +1,87 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus a roofline summary if
+dry-run records exist).  ``--quick`` shrinks repetition counts.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig8,table1]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = ["fig7", "fig8", "fig9", "table1", "fig10", "soak", "roofline"]
+
+
+def _run_roofline() -> list[str]:
+    from benchmarks.common import csv_line
+    from repro.launch import roofline
+
+    lines = []
+    recs = roofline.load_records(mesh=None)
+    ok = [r for r in recs if r.get("status") == "ok"]
+    for rec in ok:
+        row = roofline.analyze(rec)
+        lines.append(csv_line(
+            f"roofline/{row['arch']}/{row['shape']}/{row['mesh']}",
+            max(row["compute_s"], row["memory_s"], row["collective_s"]) * 1e6,
+            f"dominant={row['dominant']};frac={row['roofline_fraction']:.3f};"
+            f"useful={row['useful_ratio']:.2f}",
+        ))
+    if not lines:
+        lines.append(csv_line("roofline/none", 0.0,
+                              "no dry-run records; run repro.launch.dryrun"))
+    return lines
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true")
+    parser.add_argument("--only", default=None,
+                        help="comma-separated subset of " + ",".join(BENCHES))
+    args = parser.parse_args()
+    selected = args.only.split(",") if args.only else BENCHES
+
+    runners = {}
+    if "fig7" in selected:
+        from benchmarks import fig7_throughput
+        runners["fig7"] = fig7_throughput.main
+    if "fig8" in selected:
+        from benchmarks import fig8_overhead
+        runners["fig8"] = fig8_overhead.main
+    if "fig9" in selected:
+        from benchmarks import fig9_actions
+        runners["fig9"] = fig9_actions.main
+    if "table1" in selected:
+        from benchmarks import table1_production
+        runners["table1"] = table1_production.main
+    if "fig10" in selected:
+        from benchmarks import fig10_adoption
+        runners["fig10"] = fig10_adoption.main
+    if "soak" in selected:
+        from benchmarks import soak
+        runners["soak"] = soak.main
+    if "roofline" in selected:
+        runners["roofline"] = lambda quick=False: _run_roofline()
+
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, fn in runners.items():
+        t0 = time.time()
+        try:
+            for line in fn(quick=args.quick):
+                print(line)
+            print(f"# {name} completed in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

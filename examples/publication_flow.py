@@ -1,0 +1,197 @@
+"""Data-publication flow with authorization delegation (paper §2.1.3, MDF).
+
+All eight steps of the Materials Data Facility publication process:
+allocate storage, transfer user data, request submitter metadata, automated
+metadata extraction, curator approval, DOI minting, search indexing, final
+access permissions.
+
+Authorization is the point of this example (paper §4.2.1/§5.1): the flow
+runs as the *submitter*, but the DOI-minting and permission steps run under
+the ``MDFAdmin`` RunAs role — the service identity's tokens, captured when
+the run starts.  Full OAuth-style plumbing is active: flow scope with
+dependent AP scopes, consents, delegated token wallets.
+
+    PYTHONPATH=src python examples/publication_flow.py
+"""
+
+import os
+import tempfile
+
+from repro.core import AuthService, Caller, FlowsService, VirtualClock
+from repro.core.actions import ActionRegistry
+from repro.core.engine import PollingPolicy
+from repro.core.providers import (
+    ComputeProvider,
+    DOIProvider,
+    SearchProvider,
+    TransferProvider,
+    UserSelectionProvider,
+)
+from repro.core.providers.user_selection import AutoRespond
+
+
+def main():
+    clock = VirtualClock()
+    auth = AuthService()
+    workdir = tempfile.mkdtemp(prefix="mdf-")
+
+    registry = ActionRegistry()
+    transfer = TransferProvider(clock=clock, auth=auth, workspace=workdir)
+    user_src = transfer.create_endpoint("user-laptop")
+    transfer.create_endpoint("mdf-storage")
+    doi = DOIProvider(clock=clock, auth=auth, namespace="10.18126")
+    search = SearchProvider(clock=clock, auth=auth)
+    selection = UserSelectionProvider(
+        clock=clock, auth=auth,
+        auto_respond=AutoRespond(delay_s=3600.0, choice="approve"),
+    )  # the curator takes an hour
+    compute = ComputeProvider(clock=clock, auth=auth)
+    for p in (transfer, doi, search, selection, compute):
+        registry.register(p)
+
+    eid = compute.register_endpoint("mdf-extractors")
+    f_extract = compute.register_function(
+        lambda path: {"format": "vasp", "files": 1, "elements": ["Si", "O"]},
+        name="extract_metadata",
+        modeled_duration=lambda kw: 45.0,
+    )
+
+    flows = FlowsService(registry, clock=clock, auth=auth,
+                         polling=PollingPolicy(use_callbacks=True))
+
+    definition = {
+        "Comment": "MDF publication (paper §2.1.3 steps 1-8)",
+        "StartAt": "AllocateStorage",
+        "States": {
+            # 1. allocate storage (system credentials: RunAs MDFAdmin)
+            "AllocateStorage": {
+                "Type": "Action", "ActionUrl": "ap://transfer",
+                "RunAs": "MDFAdmin",
+                "Parameters": {"operation": "mkdir", "endpoint": "mdf-storage",
+                                "path.$": "$.dataset_id"},
+                "ResultPath": "$.alloc", "Next": "UploadData"},
+            # 2. transfer data (the submitter's credentials)
+            "UploadData": {
+                "Type": "Action", "ActionUrl": "ap://transfer",
+                "Parameters": {
+                    "operation": "transfer", "source_endpoint": "user-laptop",
+                    "destination_endpoint": "mdf-storage",
+                    "source_path.$": "$.source_path",
+                    "destination_path.$": "$.dest_path"},
+                "ResultPath": "$.upload", "Next": "RequestMetadata"},
+            # 3. submitter provides metadata via a web form
+            "RequestMetadata": {
+                "Type": "Action", "ActionUrl": "ap://user_selection",
+                "Parameters": {
+                    "prompt": "Confirm dataset title",
+                    "options": ["approve", "edit"],
+                    "respondents.$": "$.submitter"},
+                "ResultPath": "$.meta_form", "Next": "ExtractMetadata"},
+            # 4. automated metadata extraction
+            "ExtractMetadata": {
+                "Type": "Action", "ActionUrl": "ap://compute",
+                "Parameters": {"endpoint_id": eid, "function_id": f_extract,
+                                "kwargs": {"path.$": "$.dataset_id"}},
+                "ResultPath": "$.extracted", "Next": "CuratorReview"},
+            # 5. curator approval (may reject -> Fail)
+            "CuratorReview": {
+                "Type": "Action", "ActionUrl": "ap://user_selection",
+                "Parameters": {
+                    "prompt": "Approve dataset for publication?",
+                    "options": ["approve", "reject"]},
+                "ResultPath": "$.review", "Next": "CheckApproval"},
+            "CheckApproval": {
+                "Type": "Choice",
+                "Choices": [{"Variable": "$.review.details.selection",
+                              "StringEquals": "approve", "Next": "MintDOI"}],
+                "Default": "Rejected"},
+            "Rejected": {"Type": "Fail", "Error": "CurationRejected",
+                          "Cause": "curator returned dataset to submitter"},
+            # 6. DOI (system-owned namespace: RunAs MDFAdmin)
+            "MintDOI": {
+                "Type": "Action", "ActionUrl": "ap://doi",
+                "RunAs": "MDFAdmin",
+                "Parameters": {
+                    "url.$": "$.landing_page",
+                    "metadata.$": "$.extracted.details.results[0]"},
+                "ResultPath": "$.doi", "Next": "IndexMetadata"},
+            # 7. index in search
+            "IndexMetadata": {
+                "Type": "Action", "ActionUrl": "ap://search",
+                "Parameters": {
+                    "operation": "ingest", "index": "mdf",
+                    "subject.$": "$.doi.details.doi",
+                    "entry.$": "$.extracted.details.results[0]"},
+                "ResultPath": "$.indexed", "Next": "SetPermissions"},
+            # 8. final access permissions (system credentials)
+            "SetPermissions": {
+                "Type": "Action", "ActionUrl": "ap://transfer",
+                "RunAs": "MDFAdmin",
+                "Parameters": {
+                    "operation": "set_permissions", "endpoint": "mdf-storage",
+                    "path.$": "$.dataset_id",
+                    "principals": ["public"]},
+                "ResultPath": "$.perms", "End": True},
+        },
+    }
+    record = flows.publish_flow(
+        definition,
+        input_schema={
+            "type": "object",
+            "properties": {
+                "dataset_id": {"type": "string"},
+                "source_path": {"type": "string"},
+                "landing_page": {"type": "string"},
+                "submitter": {"type": "array"},
+            },
+            "required": ["dataset_id", "source_path", "landing_page"],
+        },
+        title="MDF publication",
+        owner="mdf-service",
+        starters=["all_authenticated_users"],
+    )
+
+    # identities + the OAuth dance: both the submitter and the admin role
+    # consent to the flow scope (covering its dependent AP scopes)
+    auth.create_identity("alice")
+    auth.create_identity("mdf-admin")
+    auth.grant_consent("alice", record.scope)
+    auth.grant_consent("mdf-admin", record.scope)
+    alice = Caller(identity=auth.get_identity("alice"),
+                   tokens={record.scope: auth.issue_token("alice", record.scope)})
+    admin = Caller(identity=auth.get_identity("mdf-admin"),
+                   tokens={record.scope: auth.issue_token("mdf-admin",
+                                                          record.scope)})
+
+    # the dataset on alice's laptop
+    with open(os.path.join(user_src.root, "dft_results.json"), "w") as fh:
+        fh.write('{"energy": -132.7}')
+
+    run = flows.run_flow(
+        record.flow_id,
+        {"dataset_id": "si-o2-dft", "source_path": "dft_results.json",
+         "dest_path": "si-o2-dft/dft_results.json",
+         "landing_page": "https://mdf.example/si-o2-dft",
+         "submitter": ["auto"]},
+        caller=alice,
+        run_as={"MDFAdmin": admin},
+        label="alice-publication",
+    )
+    flows.engine.run_to_completion(run.run_id)
+    print(f"run: {run.status} at virtual t={run.completion_time/3600:.2f} h")
+    assert run.status == "SUCCEEDED", run.error
+    minted = run.context["doi"]["details"]["doi"]
+    print("DOI:", minted, "->", doi.resolve(minted)["url"])
+    print("indexed:", list(search.entries("mdf")))
+    print("storage now public:",
+          transfer.endpoint("mdf-storage").writers == set())
+    # provenance: who did what (Fig 2-style events view)
+    for e in run.events:
+        if e["code"] == "ActionStarted":
+            print(f"  t={e['time']:8.1f}  {e['details']['state']:<16} "
+                  f"via {e['details']['provider']}")
+    print("Publication flow complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""SSX serial-crystallography pipeline (paper §2.1.1).
+
+Two flows, exactly as the paper describes:
+
+* **per-image flow** (7 steps): transfer image -> DIALS stills processing ->
+  extract hit metadata -> generate visualization -> transfer for publication
+  -> ingest to the SSX catalog -> return results to the beamline;
+* **structure flow** (2 steps): PRIME post-refinement over accumulated hits
+  -> copy the structure back to the beamline.
+
+A Trigger watches the instrument queue and starts the per-image flow per
+detector frame; a second Trigger fires the structure flow once enough hits
+accumulate.  "DIALS" and "PRIME" are stand-in JAX computations over the real
+staged bytes.
+
+    PYTHONPATH=src python examples/ssx_pipeline.py [--images 24]
+"""
+
+import argparse
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import FlowsService, VirtualClock
+from repro.core.actions import ActionRegistry
+from repro.core.engine import PollingPolicy
+from repro.core.providers import ComputeProvider, SearchProvider, TransferProvider
+from repro.core.queues import QueueService
+from repro.core.triggers import TriggerConfig, TriggerService
+
+
+def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--images", type=int, default=24)
+    parser.add_argument("--hits-needed", type=int, default=6)
+    args = parser.parse_args()
+
+    rng = np.random.default_rng(7)
+    clock = VirtualClock()
+    workdir = tempfile.mkdtemp(prefix="ssx-")
+    registry = ActionRegistry()
+    transfer = TransferProvider(clock=clock, workspace=workdir)
+    beamline = transfer.create_endpoint("beamline", bandwidth_bps=37e6,
+                                        latency_s=0.5)  # paper: 37 MB/s
+    transfer.create_endpoint("hpc", latency_s=0.5)
+    transfer.create_endpoint("portal", latency_s=0.5)
+    compute = ComputeProvider(clock=clock)
+    search = SearchProvider(clock=clock)
+    registry.register(transfer)
+    registry.register(compute)
+    registry.register(search)
+
+    import jax.numpy as jnp
+
+    hits_accumulator: list[dict] = []
+
+    def dials_stills(image: str):
+        """Stand-in for DIALS: peak-count the staged image bytes."""
+        data = np.frombuffer(
+            open(transfer.endpoint("hpc").path(image), "rb").read(), np.uint8
+        )
+        peaks = int(jnp.sum(jnp.asarray(data.astype(np.float32)) > 250))
+        hit = bool(peaks > 40)
+        if hit:
+            hits_accumulator.append({"image": image, "peaks": peaks})
+        return {"image": image, "peaks": peaks, "hit": hit}
+
+    def make_viz(image: str, peaks: int):
+        out = transfer.endpoint("hpc").path(image + ".viz.png")
+        with open(out, "wb") as fh:
+            fh.write(b"PNG" + bytes([peaks % 256]) * 32)
+        return {"viz": image + ".viz.png"}
+
+    def prime_solve():
+        """Stand-in for PRIME: 'solve' from accumulated hits."""
+        arr = jnp.asarray([h["peaks"] for h in hits_accumulator], jnp.float32)
+        structure = {"n_hits": len(hits_accumulator),
+                     "unit_cell_score": float(jnp.mean(arr))}
+        out = transfer.endpoint("hpc").path("structure.pdb")
+        with open(out, "w") as fh:
+            fh.write(str(structure))
+        return structure
+
+    eid = compute.register_endpoint("polaris")
+    f_dials = compute.register_function(
+        dials_stills, modeled_duration=lambda kw: float(rng.lognormal(2.2, 0.5)))
+    f_viz = compute.register_function(
+        make_viz, modeled_duration=lambda kw: 3.0)
+    f_prime = compute.register_function(
+        prime_solve, modeled_duration=lambda kw: 120.0)
+
+    flows = FlowsService(registry, clock=clock,
+                         polling=PollingPolicy(use_callbacks=True))
+
+    def compute_state(fid, kwargs):
+        return {"Type": "Action", "ActionUrl": "ap://compute",
+                "Parameters": {"endpoint_id": eid, "function_id": fid,
+                                "kwargs": kwargs}}
+
+    per_image = flows.publish_flow({
+        "Comment": "SSX per-image flow (paper steps 1-7)",
+        "StartAt": "TransferToHPC",
+        "States": {
+            "TransferToHPC": {
+                "Type": "Action", "ActionUrl": "ap://transfer",
+                "Parameters": {
+                    "operation": "transfer", "source_endpoint": "beamline",
+                    "destination_endpoint": "hpc",
+                    "source_path.$": "$.image",
+                    "destination_path.$": "$.image"},
+                "ResultPath": "$.t1", "Next": "DIALS"},
+            "DIALS": {**compute_state(f_dials, {"image.$": "$.image"}),
+                       "ResultPath": "$.dials", "Next": "CheckHit"},
+            "CheckHit": {
+                "Type": "Choice",
+                "Choices": [{"Variable": "$.dials.details.results[0].hit",
+                              "BooleanEquals": True, "Next": "Visualize"}],
+                "Default": "ReturnResults"},
+            "Visualize": {**compute_state(
+                f_viz, {"image.$": "$.image",
+                        "peaks.$": "$.dials.details.results[0].peaks"}),
+                "ResultPath": "$.viz", "Next": "PublishArtifacts"},
+            "PublishArtifacts": {
+                "Type": "Action", "ActionUrl": "ap://transfer",
+                "Parameters": {
+                    "operation": "transfer", "source_endpoint": "hpc",
+                    "destination_endpoint": "portal",
+                    "source_path.$": "$.viz.details.results[0].viz",
+                    "destination_path.$": "$.viz.details.results[0].viz"},
+                "ResultPath": "$.t2", "Next": "Ingest"},
+            "Ingest": {
+                "Type": "Action", "ActionUrl": "ap://search",
+                "Parameters": {"operation": "ingest", "index": "ssx",
+                                "subject.$": "$.image",
+                                "entry.$": "$.dials.details.results[0]"},
+                "ResultPath": "$.ingested", "Next": "ReturnResults"},
+            "ReturnResults": {
+                "Type": "Action", "ActionUrl": "ap://transfer",
+                "Parameters": {"operation": "ls", "endpoint": "hpc",
+                                "path": "/"},
+                "ResultPath": "$.returned", "End": True},
+        },
+    }, title="SSX per-image")
+
+    structure_flow = flows.publish_flow({
+        "Comment": "SSX structure flow (PRIME)",
+        "StartAt": "PRIME",
+        "States": {
+            "PRIME": {**compute_state(f_prime, {}),
+                       "ResultPath": "$.structure", "Next": "CopyBack"},
+            "CopyBack": {
+                "Type": "Action", "ActionUrl": "ap://transfer",
+                "Parameters": {
+                    "operation": "transfer", "source_endpoint": "hpc",
+                    "destination_endpoint": "beamline",
+                    "source_path": "structure.pdb",
+                    "destination_path": "structure.pdb"},
+                "ResultPath": "$.copied", "End": True},
+        },
+    }, title="SSX structure")
+
+    # triggers: detector frames -> per-image flow; hit threshold -> PRIME
+    queues = QueueService(clock=clock)
+    frames_q = queues.create_queue("detector-frames")
+    hits_q = queues.create_queue("hit-counter")
+    triggers = TriggerService(queues, clock=clock,
+                              scheduler=flows.engine.scheduler)
+    image_runs, structure_runs = [], []
+
+    def run_image(body, caller):
+        r = flows.run_flow(per_image.flow_id, body, label=body["image"])
+        image_runs.append(r.run_id)
+        r.completion_callbacks.append(
+            lambda run_: queues.send(
+                hits_q.queue_id, {"hits": len(hits_accumulator)})
+        )
+        return r.run_id
+
+    def run_structure(body, caller):
+        if structure_runs:          # solve once per accumulation window
+            return structure_runs[0]
+        r = flows.run_flow(structure_flow.flow_id, body, label="solve")
+        structure_runs.append(r.run_id)
+        return r.run_id
+
+    t1 = triggers.create_trigger(TriggerConfig(
+        queue_id=frames_q.queue_id,
+        predicate='image.endswith(".cbf")',
+        transform={"image": "image"},
+        action_invoker=run_image))
+    t2 = triggers.create_trigger(TriggerConfig(
+        queue_id=hits_q.queue_id,
+        predicate=f"hits >= {args.hits_needed}",
+        transform={"n_hits": "hits"},
+        action_invoker=run_structure))
+    triggers.enable(t1.trigger_id)
+    triggers.enable(t2.trigger_id)
+
+    # the instrument: 10 Hz frame generation (paper rate), ~1.5 MB images
+    for i in range(args.images):
+        name = f"img_{i:04d}.cbf"
+        with open(os.path.join(beamline.root, name), "wb") as fh:
+            fh.write(rng.integers(0, 256, size=150_000, dtype=np.uint8)
+                     .tobytes())
+        queues.send(frames_q.queue_id, {"image": name}, delay=i * 0.1)
+
+    flows.engine.scheduler.drain(until=100_000.0, max_events=5_000_000)
+
+    done = sum(1 for rid in image_runs
+               if flows.engine.get_run(rid).status == "SUCCEEDED")
+    print(f"per-image runs: {done}/{len(image_runs)} succeeded")
+    print(f"hits found: {len(hits_accumulator)}")
+    print(f"catalog entries: {len(search.entries('ssx'))}")
+    for rid in structure_runs:
+        r = flows.engine.get_run(rid)
+        print(f"structure run {rid}: {r.status} -> "
+              f"{r.context.get('structure', {}).get('details')}")
+    assert done == len(image_runs) == args.images
+    assert structure_runs, "structure flow should have been triggered"
+    print("SSX pipeline complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Architecture registry: ``get("phi3-mini-3.8b")`` etc."""
+
+from .base import (
+    ARCH_IDS,
+    LONG_CONTEXT_ARCHS,
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    TrainConfig,
+    XLSTMConfig,
+    ZambaConfig,
+    get,
+    shapes_for,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "LONG_CONTEXT_ARCHS",
+    "SHAPES",
+    "ModelConfig",
+    "MoEConfig",
+    "ShapeConfig",
+    "SSMConfig",
+    "TrainConfig",
+    "XLSTMConfig",
+    "ZambaConfig",
+    "get",
+    "shapes_for",
+]

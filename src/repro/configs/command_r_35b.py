@@ -1,0 +1,34 @@
+"""command-r-35b [dense] — hf:CohereForAI/c4ai-command-r-v01.
+
+40L d_model=8192 64H (GQA kv=8) d_ff=22528 vocab=256000; no-bias LayerNorm,
+parallel residual (attention and FFN read the same normed input), tied
+embeddings, rope_theta=8e6.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="command-r-35b",
+    family="dense",
+    n_layers=40,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22528,
+    vocab_size=256_000,
+    rope_theta=8_000_000.0,
+    norm_type="layernorm",
+    mlp_type="swiglu",
+    parallel_residual=True,
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=160,
+    vocab_size=256,
+    remat_policy="none",
+)

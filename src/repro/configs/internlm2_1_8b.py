@@ -1,0 +1,31 @@
+"""internlm2-1.8b [dense] — arXiv:2403.17297 / hf:internlm/internlm2-1_8b.
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92544; RoPE (theta 1e6),
+RMSNorm, SwiGLU.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="internlm2-1.8b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92544,
+    rope_theta=1_000_000.0,
+    norm_type="rmsnorm",
+    mlp_type="swiglu",
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    remat_policy="none",
+)

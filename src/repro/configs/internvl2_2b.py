@@ -1,0 +1,34 @@
+"""internvl2-2b [vlm] — arXiv:2404.16821 (InternViT-300M + InternLM2-1.8B).
+
+Backbone: 24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553.  The
+InternViT frontend is a STUB: ``input_specs()`` supplies precomputed,
+MLP-projected patch embeddings occupying the first 256 positions.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92553,
+    rope_theta=1_000_000.0,
+    norm_type="rmsnorm",
+    mlp_type="swiglu",
+    n_image_tokens=256,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    n_image_tokens=8,
+    remat_policy="none",
+)

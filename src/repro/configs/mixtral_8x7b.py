@@ -1,0 +1,36 @@
+"""mixtral-8x7b [moe] — arXiv:2401.04088.
+
+32L d_model=4096 32H (GQA kv=8), MoE 8 experts top-2 with per-expert
+d_ff=14336, vocab=32000; sliding-window attention (4096), RoPE theta 1e6,
+RMSNorm, SwiGLU experts.
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    rope_theta=1_000_000.0,
+    sliding_window=4096,
+    norm_type="rmsnorm",
+    mlp_type="swiglu",
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff=14336),
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    sliding_window=32,
+    moe=MoEConfig(n_experts=4, top_k=2, d_ff=128),
+    remat_policy="none",
+)

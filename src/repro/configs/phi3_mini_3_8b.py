@@ -1,0 +1,31 @@
+"""phi3-mini-3.8b [dense] — arXiv:2404.14219.
+
+32L d_model=3072 32H (GQA kv=32, i.e. MHA) d_ff=8192 vocab=32064; RoPE,
+SwiGLU, RMSNorm.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="phi3-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    rope_theta=10_000.0,
+    norm_type="rmsnorm",
+    mlp_type="swiglu",
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=256,
+    remat_policy="none",
+)

@@ -1,0 +1,36 @@
+"""qwen3-moe-235b-a22b [moe] — hf:Qwen/Qwen3-235B-A22B (per assignment).
+
+94L d_model=4096 64H (GQA kv=4, head_dim=128 explicit), MoE 128 experts
+top-8 with fine-grained per-expert d_ff=1536, vocab=151936; RoPE theta 1e6,
+RMSNorm, SwiGLU experts.  (Qwen3's q/k-norm is omitted — noted in DESIGN.md.)
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=151_936,
+    rope_theta=1_000_000.0,
+    norm_type="rmsnorm",
+    mlp_type="swiglu",
+    moe=MoEConfig(n_experts=128, top_k=8, d_ff=1536),
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=32,
+    vocab_size=256,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff=32),
+    remat_policy="none",
+)

@@ -1,0 +1,34 @@
+"""starcoder2-15b [dense] — arXiv:2402.19173 / hf:bigcode/starcoder2-15b.
+
+40L d_model=6144 48H (GQA kv=4) d_ff=24576 vocab=49152; RoPE (theta 1e5),
+LayerNorm with bias, GELU MLP, qkv bias.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="starcoder2-15b",
+    family="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    d_ff=24576,
+    vocab_size=49152,
+    rope_theta=100_000.0,
+    norm_type="layernorm",
+    norm_eps=1e-5,
+    mlp_type="gelu",
+    use_bias=True,
+    use_qkv_bias=True,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+    remat_policy="none",
+)

@@ -1,0 +1,39 @@
+"""whisper-medium [audio] — arXiv:2212.04356.
+
+Enc-dec: 24+24L d_model=1024 16H d_ff=4096 vocab=51865; LayerNorm+bias,
+GELU MLP, sinusoidal encoder positions, learned decoder positions capped at
+448.  The conv/log-mel frontend is a STUB: ``input_specs()`` supplies
+precomputed frame embeddings.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="whisper-medium",
+    family="encdec",
+    n_layers=24,            # decoder layers
+    n_encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    norm_type="layernorm",
+    mlp_type="gelu",
+    use_bias=True,
+    use_qkv_bias=True,
+    tie_embeddings=True,
+    max_target_positions=448,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2,
+    n_encoder_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=256,
+    max_target_positions=32,
+    remat_policy="none",
+)

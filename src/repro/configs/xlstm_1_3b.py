@@ -1,0 +1,35 @@
+"""xlstm-1.3b [ssm] — arXiv:2405.04517 (xLSTM[7:1]).
+
+48L d_model=2048 4H vocab=50304; 7 mLSTM blocks (matrix memory, chunkwise
+parallel) per 1 sLSTM block (scalar memory, recurrent).  d_ff=0 per the
+assignment: there is no separate transformer FFN — the mLSTM block carries
+its own 2x up-projection and the sLSTM block a 4/3 GeGLU projection, as in
+the paper's block designs.
+"""
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+
+CONFIG = ModelConfig(
+    arch="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    norm_type="layernorm",
+    xlstm=XLSTMConfig(slstm_every=8, conv_width=4, chunk_size=64,
+                      proj_factor=2.0),
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=4,
+    d_model=64,
+    n_heads=2,
+    n_kv_heads=2,
+    vocab_size=256,
+    xlstm=XLSTMConfig(slstm_every=2, conv_width=4, chunk_size=16,
+                      proj_factor=2.0),
+    remat_policy="none",
+)

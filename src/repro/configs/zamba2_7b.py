@@ -1,0 +1,41 @@
+"""zamba2-7b [hybrid] — arXiv:2411.15242.
+
+81L d_model=3584; Mamba2 backbone (ssm_state=64) with a SHARED attention +
+MLP block (32H MHA, d_ff=14336) applied every 6 layers with per-application
+LoRA (rank 128) on its projections; vocab=32000.  Simplifications vs. the
+released model (single shared block instead of two alternating; shared-block
+input is the hidden state rather than concat(hidden, embedding)) are noted
+in DESIGN.md §Arch-applicability.
+"""
+
+from repro.configs.base import ModelConfig, SSMConfig, ZambaConfig
+
+CONFIG = ModelConfig(
+    arch="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    rope_theta=10_000.0,
+    norm_type="rmsnorm",
+    mlp_type="swiglu",
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4,
+                  chunk_size=128),
+    zamba=ZambaConfig(shared_period=6, lora_rank=128),
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=7,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=256,
+    ssm=SSMConfig(state_dim=8, head_dim=8, expand=2, conv_width=4,
+                  chunk_size=16),
+    zamba=ZambaConfig(shared_period=3, lora_rank=8),
+    remat_policy="none",
+)

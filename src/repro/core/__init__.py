@@ -1,0 +1,54 @@
+"""Globus automation services, reimplemented as an embeddable control plane.
+
+The paper's four services — Flows, Queues, Triggers, Timers — plus the
+action-provider API, the ASL-derived flow language, the authorization
+delegation model, and a durable journaled engine.  This package is JAX-free;
+the training fabric plugs in through action providers
+(:mod:`repro.train.providers`).
+"""
+
+from .actions import ACTIVE, FAILED, SUCCEEDED, ActionProvider, ActionRegistry, ActionStatus
+from .asl import Flow, parse as parse_flow
+from .auth import AuthService, Caller, Identity
+from .clock import RealClock, VirtualClock
+from .engine import (
+    RUN_ACTIVE,
+    RUN_CANCELLED,
+    RUN_FAILED,
+    RUN_SUCCEEDED,
+    FlowEngine,
+    PollingPolicy,
+    Run,
+    Scheduler,
+)
+from .errors import (
+    ActionFailedException,
+    ActionTimeout,
+    AuthError,
+    AutomationError,
+    FlowValidationError,
+    Forbidden,
+    InputValidationError,
+    NodeFailure,
+    NotFound,
+)
+from .flows_service import FlowsService
+from .journal import Journal
+from .queues import QueueService
+from .timers import TimerService
+from .triggers import TriggerConfig, TriggerService
+
+__all__ = [
+    "ACTIVE", "FAILED", "SUCCEEDED",
+    "ActionProvider", "ActionRegistry", "ActionStatus",
+    "Flow", "parse_flow",
+    "AuthService", "Caller", "Identity",
+    "RealClock", "VirtualClock",
+    "RUN_ACTIVE", "RUN_CANCELLED", "RUN_FAILED", "RUN_SUCCEEDED",
+    "FlowEngine", "PollingPolicy", "Run", "Scheduler",
+    "AutomationError", "ActionFailedException", "ActionTimeout", "AuthError",
+    "FlowValidationError", "Forbidden", "InputValidationError", "NodeFailure",
+    "NotFound",
+    "FlowsService", "Journal", "QueueService", "TimerService",
+    "TriggerConfig", "TriggerService",
+]

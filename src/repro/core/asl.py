@@ -1,0 +1,393 @@
+"""The declarative flow-definition language (paper §4.2.1).
+
+A flow definition is a JSON document extending the Amazon States Language:
+``StartAt`` plus a map of named ``States``.  Five state types come from the
+paper — four essentially unchanged from ASL (``Choice``, ``Pass``, ``Fail``,
+``Wait``) plus ``Action`` which invokes an action provider.  We additionally
+support ``Succeed`` (explicit normal termination), ``Retry`` clauses, and a
+``Parallel`` state (branch fan-out/join) — the latter two are ASL-standard
+extensions beyond the paper, used by the training flows for concurrent data
+staging; they are validated and executed with ASL semantics.
+
+This module validates definitions at publish time (the paper's Flows service
+"validates the flow definition and input schema" before deployment) and
+compiles them to typed state objects the engine executes.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+from dataclasses import dataclass, field
+from typing import Any
+
+from . import jsonpath
+from .errors import FlowValidationError
+
+STATE_TYPES = ("Action", "Pass", "Choice", "Wait", "Fail", "Succeed", "Parallel")
+
+_NUMERIC = (int, float)
+
+
+# --------------------------------------------------------------------------
+# Choice rules
+# --------------------------------------------------------------------------
+
+_DATA_TESTS = {
+    "StringEquals": lambda v, x: isinstance(v, str) and v == x,
+    "StringLessThan": lambda v, x: isinstance(v, str) and v < x,
+    "StringGreaterThan": lambda v, x: isinstance(v, str) and v > x,
+    "StringLessThanEquals": lambda v, x: isinstance(v, str) and v <= x,
+    "StringGreaterThanEquals": lambda v, x: isinstance(v, str) and v >= x,
+    "StringMatches": lambda v, x: isinstance(v, str) and fnmatch.fnmatchcase(v, x),
+    "NumericEquals": lambda v, x: _is_num(v) and v == x,
+    "NumericLessThan": lambda v, x: _is_num(v) and v < x,
+    "NumericGreaterThan": lambda v, x: _is_num(v) and v > x,
+    "NumericLessThanEquals": lambda v, x: _is_num(v) and v <= x,
+    "NumericGreaterThanEquals": lambda v, x: _is_num(v) and v >= x,
+    "BooleanEquals": lambda v, x: isinstance(v, bool) and v == x,
+    "IsNull": lambda v, x: (v is None) == x,
+    "IsPresent": None,  # special-cased: tests path existence
+    "IsNumeric": lambda v, x: _is_num(v) == x,
+    "IsString": lambda v, x: isinstance(v, str) == x,
+    "IsBoolean": lambda v, x: isinstance(v, bool) == x,
+}
+
+
+def _is_num(v: Any) -> bool:
+    return isinstance(v, _NUMERIC) and not isinstance(v, bool)
+
+
+@dataclass
+class ChoiceRule:
+    """One rule in a Choice state; either a data test or a combinator."""
+
+    next: str | None = None  # only on top-level rules
+    variable: str | None = None
+    test: str | None = None
+    expected: Any = None
+    combinator: str | None = None  # "And" | "Or" | "Not"
+    children: list["ChoiceRule"] = field(default_factory=list)
+
+    def evaluate(self, context: Any) -> bool:
+        if self.combinator == "And":
+            return all(c.evaluate(context) for c in self.children)
+        if self.combinator == "Or":
+            return any(c.evaluate(context) for c in self.children)
+        if self.combinator == "Not":
+            return not self.children[0].evaluate(context)
+        if self.test == "IsPresent":
+            return jsonpath.exists(context, self.variable) == self.expected
+        if not jsonpath.exists(context, self.variable):
+            return False
+        value = jsonpath.get(context, self.variable)
+        expected = self.expected
+        # "...Path" variants compare against another context location
+        if self.test.endswith("Path"):
+            expected = jsonpath.get(context, expected)
+            fn = _DATA_TESTS[self.test[:-4]]
+        else:
+            fn = _DATA_TESTS[self.test]
+        return bool(fn(value, expected))
+
+
+def _parse_choice_rule(doc: dict, where: str, top: bool) -> ChoiceRule:
+    if not isinstance(doc, dict):
+        raise FlowValidationError(f"{where}: choice rule must be an object")
+    nxt = doc.get("Next")
+    if top and not isinstance(nxt, str):
+        raise FlowValidationError(f"{where}: top-level choice rule needs Next")
+    if not top and nxt is not None:
+        raise FlowValidationError(f"{where}: nested choice rule may not have Next")
+    for comb in ("And", "Or", "Not"):
+        if comb in doc:
+            sub = doc[comb]
+            if comb == "Not":
+                sub = [sub]
+            if not isinstance(sub, list) or not sub:
+                raise FlowValidationError(f"{where}: {comb} needs rule(s)")
+            return ChoiceRule(
+                next=nxt,
+                combinator=comb,
+                children=[
+                    _parse_choice_rule(s, f"{where}/{comb}[{i}]", top=False)
+                    for i, s in enumerate(sub)
+                ],
+            )
+    variable = doc.get("Variable")
+    if not isinstance(variable, str) or not variable.startswith("$"):
+        raise FlowValidationError(f"{where}: Variable must be a JSONPath")
+    tests = [
+        k
+        for k in doc
+        if k in _DATA_TESTS or (k.endswith("Path") and k[:-4] in _DATA_TESTS)
+    ]
+    if len(tests) != 1:
+        raise FlowValidationError(
+            f"{where}: exactly one comparison operator required, got {tests}"
+        )
+    return ChoiceRule(next=nxt, variable=variable, test=tests[0], expected=doc[tests[0]])
+
+
+# --------------------------------------------------------------------------
+# States
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class RetryRule:
+    error_equals: list[str]
+    interval_seconds: float = 1.0
+    max_attempts: int = 3
+    backoff_rate: float = 2.0
+
+
+@dataclass
+class CatchRule:
+    error_equals: list[str]
+    next: str
+    result_path: str | None = None
+
+
+@dataclass
+class State:
+    name: str
+    kind: str
+    comment: str = ""
+    next: str | None = None
+    end: bool = False
+    # Action
+    action_url: str | None = None
+    parameters: Any = None
+    input_path: str | None = None
+    result_path: str | None = None
+    result: Any = None  # Pass only
+    wait_time: float | None = None  # action timeout (paper: WaitTime)
+    run_as: str | None = None
+    exception_on_action_failure: bool = True
+    retry: list[RetryRule] = field(default_factory=list)
+    catch: list[CatchRule] = field(default_factory=list)
+    # Choice
+    choices: list[ChoiceRule] = field(default_factory=list)
+    default: str | None = None
+    # Wait
+    seconds: float | None = None
+    seconds_path: str | None = None
+    # Fail
+    error: str = "States.Error"
+    cause: str = ""
+    # Parallel
+    branches: list["Flow"] = field(default_factory=list)
+
+
+@dataclass
+class Flow:
+    start_at: str
+    states: dict[str, State]
+    comment: str = ""
+    definition: dict = field(default_factory=dict)
+
+    def state(self, name: str) -> State:
+        return self.states[name]
+
+
+def _opt(doc: dict, key: str, types, where: str, default=None):
+    value = doc.get(key, default)
+    if value is not None and not isinstance(value, types):
+        raise FlowValidationError(f"{where}: {key} must be {types}")
+    return value
+
+
+def _parse_state(name: str, doc: dict, where: str) -> State:
+    if not isinstance(doc, dict):
+        raise FlowValidationError(f"{where}: state must be an object")
+    kind = doc.get("Type")
+    if kind == "Task":  # ASL alias accepted for Action
+        kind = "Action"
+    if kind not in STATE_TYPES:
+        raise FlowValidationError(f"{where}: unknown state Type {doc.get('Type')!r}")
+    st = State(name=name, kind=kind, comment=_opt(doc, "Comment", str, where, "") or "")
+
+    terminal = kind in ("Fail", "Succeed")
+    st.next = _opt(doc, "Next", str, where)
+    st.end = bool(doc.get("End", False))
+    if terminal:
+        if st.next or st.end:
+            raise FlowValidationError(f"{where}: terminal state takes no Next/End")
+    elif kind != "Choice":
+        if bool(st.next) == bool(st.end):
+            raise FlowValidationError(f"{where}: exactly one of Next/End required")
+
+    if kind == "Action":
+        st.action_url = _opt(doc, "ActionUrl", str, where) or _opt(
+            doc, "Resource", str, where
+        )
+        if not st.action_url:
+            raise FlowValidationError(f"{where}: Action state requires ActionUrl")
+        st.parameters = doc.get("Parameters")
+        st.input_path = _opt(doc, "InputPath", str, where)
+        st.result_path = _opt(doc, "ResultPath", str, where)
+        st.wait_time = _opt(doc, "WaitTime", _NUMERIC, where)
+        st.run_as = _opt(doc, "RunAs", str, where)
+        st.exception_on_action_failure = bool(
+            doc.get("ExceptionOnActionFailure", True)
+        )
+        for i, r in enumerate(doc.get("Retry", []) or []):
+            st.retry.append(
+                RetryRule(
+                    error_equals=list(r.get("ErrorEquals", ["States.ALL"])),
+                    interval_seconds=float(r.get("IntervalSeconds", 1.0)),
+                    max_attempts=int(r.get("MaxAttempts", 3)),
+                    backoff_rate=float(r.get("BackoffRate", 2.0)),
+                )
+            )
+        for i, c in enumerate(doc.get("Catch", []) or []):
+            if "ErrorEquals" not in c or "Next" not in c:
+                raise FlowValidationError(
+                    f"{where}/Catch[{i}]: needs ErrorEquals and Next"
+                )
+            st.catch.append(
+                CatchRule(
+                    error_equals=list(c["ErrorEquals"]),
+                    next=c["Next"],
+                    result_path=c.get("ResultPath"),
+                )
+            )
+    elif kind == "Pass":
+        st.parameters = doc.get("Parameters")
+        st.result = doc.get("Result")
+        st.input_path = _opt(doc, "InputPath", str, where)
+        st.result_path = _opt(doc, "ResultPath", str, where)
+    elif kind == "Choice":
+        rules = doc.get("Choices")
+        if not isinstance(rules, list) or not rules:
+            raise FlowValidationError(f"{where}: Choice requires Choices rules")
+        st.choices = [
+            _parse_choice_rule(r, f"{where}/Choices[{i}]", top=True)
+            for i, r in enumerate(rules)
+        ]
+        st.default = _opt(doc, "Default", str, where)
+        if st.next or st.end:
+            raise FlowValidationError(f"{where}: Choice takes no Next/End")
+    elif kind == "Wait":
+        st.seconds = _opt(doc, "Seconds", _NUMERIC, where)
+        st.seconds_path = _opt(doc, "SecondsPath", str, where)
+        if (st.seconds is None) == (st.seconds_path is None):
+            raise FlowValidationError(
+                f"{where}: Wait requires exactly one of Seconds/SecondsPath"
+            )
+    elif kind == "Fail":
+        st.error = _opt(doc, "Error", str, where, "States.Error") or "States.Error"
+        st.cause = _opt(doc, "Cause", str, where, "") or ""
+    elif kind == "Parallel":
+        branches = doc.get("Branches")
+        if not isinstance(branches, list) or not branches:
+            raise FlowValidationError(f"{where}: Parallel requires Branches")
+        st.branches = [
+            parse(b, where=f"{where}/Branches[{i}]") for i, b in enumerate(branches)
+        ]
+        st.result_path = _opt(doc, "ResultPath", str, where)
+        st.parameters = doc.get("Parameters")
+        for i, c in enumerate(doc.get("Catch", []) or []):
+            st.catch.append(
+                CatchRule(
+                    error_equals=list(c["ErrorEquals"]),
+                    next=c["Next"],
+                    result_path=c.get("ResultPath"),
+                )
+            )
+    return st
+
+
+def parse(definition: dict, where: str = "flow") -> Flow:
+    """Validate and compile a flow definition document."""
+    if not isinstance(definition, dict):
+        raise FlowValidationError(f"{where}: definition must be an object")
+    start_at = definition.get("StartAt")
+    states_doc = definition.get("States")
+    if not isinstance(start_at, str):
+        raise FlowValidationError(f"{where}: StartAt is required")
+    if not isinstance(states_doc, dict) or not states_doc:
+        raise FlowValidationError(f"{where}: States map is required")
+    states = {
+        name: _parse_state(name, doc, f"{where}/States/{name}")
+        for name, doc in states_doc.items()
+    }
+    flow = Flow(
+        start_at=start_at,
+        states=states,
+        comment=str(definition.get("Comment", "")),
+        definition=definition,
+    )
+    _check_graph(flow, where)
+    return flow
+
+
+def _check_graph(flow: Flow, where: str) -> None:
+    names = set(flow.states)
+    if flow.start_at not in names:
+        raise FlowValidationError(f"{where}: StartAt {flow.start_at!r} not in States")
+
+    def targets(st: State) -> list[str]:
+        out = []
+        if st.next:
+            out.append(st.next)
+        out.extend(r.next for r in st.choices if r.next)
+        if st.default:
+            out.append(st.default)
+        out.extend(c.next for c in st.catch)
+        return out
+
+    for st in flow.states.values():
+        for t in targets(st):
+            if t not in names:
+                raise FlowValidationError(
+                    f"{where}/States/{st.name}: transition to unknown state {t!r}"
+                )
+    # reachability (unreachable states are a validation error, like ASF)
+    seen: set[str] = set()
+    stack = [flow.start_at]
+    while stack:
+        cur = stack.pop()
+        if cur in seen:
+            continue
+        seen.add(cur)
+        stack.extend(t for t in targets(flow.states[cur]) if t not in seen)
+    unreachable = names - seen
+    if unreachable:
+        raise FlowValidationError(
+            f"{where}: unreachable states: {sorted(unreachable)}"
+        )
+
+
+def action_urls(flow: Flow) -> list[str]:
+    """All action-provider URLs a flow references (incl. Parallel branches).
+
+    The Flows service uses this at publish time to register the flow's scope
+    with each provider's scope as a *dependent scope* (paper §5.3.1).
+    """
+    urls: list[str] = []
+
+    def walk(f: Flow) -> None:
+        for st in f.states.values():
+            if st.kind == "Action" and st.action_url not in urls:
+                urls.append(st.action_url)
+            for b in st.branches:
+                walk(b)
+
+    walk(flow)
+    return urls
+
+
+def run_as_roles(flow: Flow) -> list[str]:
+    """Distinct RunAs roles referenced by the flow (paper §4.2.1)."""
+    roles: list[str] = []
+
+    def walk(f: Flow) -> None:
+        for st in f.states.values():
+            if st.run_as and st.run_as not in roles:
+                roles.append(st.run_as)
+            for b in st.branches:
+                walk(b)
+
+    walk(flow)
+    return roles

@@ -1,0 +1,264 @@
+"""Authorization-delegation model (paper §5.1), offline.
+
+Structural reproduction of the Globus Auth mechanics the automation services
+rely on:
+
+* every service / action provider / flow is registered as a **resource
+  server** owning one or more **scopes** (URN-like strings);
+* a scope may declare **dependent scopes** — downstream operations the
+  service performs on the caller's behalf (e.g. a flow's run scope depends on
+  the scopes of every action provider it invokes);
+* users grant **consents** for (client, scope) pairs; a consent covers the
+  scope's transitive dependency closure;
+* clients obtain **access tokens** bound to (identity, scope); services
+  **introspect** tokens to authenticate callers, and may exchange a token for
+  **dependent tokens** to call downstream services — the paper's delegation
+  chain;
+* ``RunAs`` roles map to alternate identities whose tokens are captured when
+  the run starts (paper §4.2.1 / §5.3.2).
+
+Everything is in-process, but the *protocol shape* (introspection, dependent
+token issuance, consent checks) matches the paper so that authorization
+failures propagate exactly like the real system's (cf. Fig 2f — a run failing
+on an invalid credential).
+"""
+
+from __future__ import annotations
+
+import secrets
+import threading
+from dataclasses import dataclass, field
+
+from .errors import AuthError, ConsentRequired, NotFound
+
+
+@dataclass
+class Identity:
+    username: str
+    id: str = field(default_factory=lambda: "id-" + secrets.token_hex(8))
+    groups: set[str] = field(default_factory=set)
+
+
+@dataclass
+class Scope:
+    urn: str
+    resource_server: str
+    dependent_scopes: list[str] = field(default_factory=list)
+
+
+@dataclass
+class TokenInfo:
+    token: str
+    identity: Identity
+    scope: str
+    active: bool = True
+
+    def as_introspection(self) -> dict:
+        return {
+            "active": self.active,
+            "username": self.identity.username,
+            "identity_id": self.identity.id,
+            "scope": self.scope,
+        }
+
+
+class AuthService:
+    """In-process stand-in for the Globus Auth platform."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._identities: dict[str, Identity] = {}
+        self._resource_servers: set[str] = set()
+        self._scopes: dict[str, Scope] = {}
+        self._tokens: dict[str, TokenInfo] = {}
+        # consents: identity_id -> set of scope URNs the user has consented to
+        self._consents: dict[str, set[str]] = {}
+
+    # -- identities ---------------------------------------------------------
+    def create_identity(self, username: str, groups: set[str] | None = None) -> Identity:
+        with self._lock:
+            if username in self._identities:
+                return self._identities[username]
+            ident = Identity(username=username, groups=set(groups or ()))
+            self._identities[username] = ident
+            return ident
+
+    def get_identity(self, username: str) -> Identity:
+        with self._lock:
+            if username not in self._identities:
+                raise NotFound(f"unknown identity {username!r}")
+            return self._identities[username]
+
+    # -- resource servers & scopes -------------------------------------------
+    def register_resource_server(self, name: str) -> str:
+        with self._lock:
+            self._resource_servers.add(name)
+            return name
+
+    def register_scope(
+        self,
+        resource_server: str,
+        urn: str,
+        dependent_scopes: list[str] | None = None,
+    ) -> Scope:
+        with self._lock:
+            if resource_server not in self._resource_servers:
+                raise NotFound(f"unknown resource server {resource_server!r}")
+            for dep in dependent_scopes or []:
+                if dep not in self._scopes:
+                    raise NotFound(f"dependent scope {dep!r} is not registered")
+            scope = Scope(urn, resource_server, list(dependent_scopes or []))
+            self._scopes[urn] = scope
+            return scope
+
+    def get_scope(self, urn: str) -> Scope:
+        with self._lock:
+            if urn not in self._scopes:
+                raise NotFound(f"unknown scope {urn!r}")
+            return self._scopes[urn]
+
+    def add_dependent_scope(self, urn: str, dependent: str) -> None:
+        with self._lock:
+            scope = self.get_scope(urn)
+            self.get_scope(dependent)
+            if dependent not in scope.dependent_scopes:
+                scope.dependent_scopes.append(dependent)
+
+    def dependency_closure(self, urn: str) -> list[str]:
+        """Transitive closure of dependent scopes (includes ``urn`` itself)."""
+        with self._lock:
+            out: list[str] = []
+            seen: set[str] = set()
+            stack = [urn]
+            while stack:
+                cur = stack.pop()
+                if cur in seen:
+                    continue
+                seen.add(cur)
+                out.append(cur)
+                stack.extend(self.get_scope(cur).dependent_scopes)
+            return out
+
+    # -- consents & tokens ----------------------------------------------------
+    def grant_consent(self, username: str, scope_urn: str) -> None:
+        """User consents to ``scope_urn`` *and its dependency closure*.
+
+        This mirrors the OAuth consent screen the paper describes: when a user
+        runs a flow, "the list of all action providers used on their behalf
+        will be displayed and the user must provide consent".
+        """
+        ident = self.get_identity(username)
+        with self._lock:
+            closure = self.dependency_closure(scope_urn)
+            self._consents.setdefault(ident.id, set()).update(closure)
+
+    def revoke_consent(self, username: str, scope_urn: str) -> None:
+        ident = self.get_identity(username)
+        with self._lock:
+            self._consents.get(ident.id, set()).discard(scope_urn)
+            # revoking a consent invalidates outstanding tokens for the scope
+            for info in self._tokens.values():
+                if info.identity.id == ident.id and info.scope == scope_urn:
+                    info.active = False
+
+    def has_consent(self, username: str, scope_urn: str) -> bool:
+        ident = self.get_identity(username)
+        with self._lock:
+            return scope_urn in self._consents.get(ident.id, set())
+
+    def issue_token(self, username: str, scope_urn: str) -> str:
+        """Issue an access token for (identity, scope); requires consent."""
+        ident = self.get_identity(username)
+        with self._lock:
+            if scope_urn not in self._scopes:
+                raise NotFound(f"unknown scope {scope_urn!r}")
+            if scope_urn not in self._consents.get(ident.id, set()):
+                raise ConsentRequired(
+                    f"{username} has not consented to scope {scope_urn}"
+                )
+            token = "tok-" + secrets.token_hex(16)
+            self._tokens[token] = TokenInfo(token, ident, scope_urn)
+            return token
+
+    def introspect(self, token: str) -> dict:
+        """OAuth-style token introspection (paper §5.1)."""
+        with self._lock:
+            info = self._tokens.get(token)
+            if info is None:
+                return {"active": False}
+            return info.as_introspection()
+
+    def get_dependent_tokens(self, token: str) -> dict[str, str]:
+        """Exchange a token for tokens on each *direct* dependent scope.
+
+        This is the paper's delegation step: a service holding a user token
+        for its own scope retrieves downstream tokens to invoke the actions a
+        flow defines.  The returned map is scope URN -> token.
+        """
+        with self._lock:
+            info = self._tokens.get(token)
+            if info is None or not info.active:
+                raise AuthError("invalid or revoked token")
+            scope = self.get_scope(info.scope)
+            out = {}
+            for dep in scope.dependent_scopes:
+                if dep not in self._consents.get(info.identity.id, set()):
+                    raise ConsentRequired(
+                        f"{info.identity.username} lacks consent for {dep}"
+                    )
+                t = "tok-" + secrets.token_hex(16)
+                self._tokens[t] = TokenInfo(t, info.identity, dep)
+                out[dep] = t
+            return out
+
+    def invalidate_token(self, token: str) -> None:
+        with self._lock:
+            if token in self._tokens:
+                self._tokens[token].active = False
+
+    # -- authorization helper ---------------------------------------------------
+    def require(self, token: str | None, scope_urn: str) -> Identity:
+        """Validate ``token`` grants ``scope_urn``; return the caller identity."""
+        if token is None:
+            raise AuthError(f"missing access token for scope {scope_urn}")
+        with self._lock:
+            info = self._tokens.get(token)
+            if info is None or not info.active:
+                raise AuthError("invalid or revoked token")
+            if info.scope != scope_urn:
+                raise AuthError(
+                    f"token scope {info.scope} does not grant {scope_urn}"
+                )
+            return info.identity
+
+
+@dataclass
+class Caller:
+    """Authenticated caller context passed to services.
+
+    ``tokens`` maps scope URN -> access token (the caller's wallet); services
+    pull the token for their own scope and pass dependent tokens downstream.
+    """
+
+    identity: Identity
+    tokens: dict[str, str] = field(default_factory=dict)
+
+    def token_for(self, scope_urn: str) -> str | None:
+        return self.tokens.get(scope_urn)
+
+
+def principal_matches(identity: Identity, principal: str) -> bool:
+    """RBAC principal matching (paper §4.3).
+
+    Principals may be ``user:<name>``, ``group:<name>``, ``public``, or
+    ``all_authenticated_users``.
+    """
+    if principal == "public":
+        return True
+    if principal == "all_authenticated_users":
+        return identity is not None
+    if principal.startswith("user:"):
+        return identity is not None and identity.username == principal[5:]
+    if principal.startswith("group:"):
+        return identity is not None and principal[6:] in identity.groups
+    return False

@@ -1,0 +1,77 @@
+"""Run Context handling (paper §4.2.2).
+
+Each run of a flow has a *Context* — a JSON document initialized with the
+run's input.  States read from it (``InputPath`` / ``Parameters`` with
+JSONPath references) and write to it (``ResultPath``), and the final Context
+is returned to whoever invoked the flow.
+
+Parameter templates follow both conventions found in the paper's examples:
+
+* ASL style — keys ending in ``.$`` take a JSONPath value that is resolved
+  against the Context (``"tasks.$": "$.input.tasks"``);
+* paper §4.2.1 style — plain string values with a ``$.`` prefix are treated
+  as JSONPath references ("The prefix ``$.`` on these values signals that
+  they should be treated as JSONPath references into the run Context").
+  A value may opt out with a ``\\$`` escape.
+"""
+
+from __future__ import annotations
+
+import copy
+from typing import Any
+
+from . import jsonpath
+
+
+def evaluate_parameters(template: Any, context: Any) -> Any:
+    """Recursively instantiate a Parameters template against the Context."""
+    if isinstance(template, dict):
+        out = {}
+        for key, value in template.items():
+            if isinstance(key, str) and key.endswith(".$"):
+                if not jsonpath.is_reference(value):
+                    raise jsonpath.JSONPathError(
+                        f"parameter {key!r}: value must be a JSONPath, got {value!r}"
+                    )
+                out[key[:-2]] = copy.deepcopy(jsonpath.get(context, value))
+            else:
+                out[key] = evaluate_parameters(value, context)
+        return out
+    if isinstance(template, list):
+        return [evaluate_parameters(v, context) for v in template]
+    if isinstance(template, str):
+        if template.startswith("\\$"):
+            return template[1:]
+        if jsonpath.is_reference(template):
+            return copy.deepcopy(jsonpath.get(context, template))
+    return template
+
+
+def state_input(context: Any, input_path: str | None, parameters: Any) -> Any:
+    """Compute a state's effective input document."""
+    doc = context
+    if input_path:
+        doc = jsonpath.get(context, input_path)
+    if parameters is not None:
+        doc = evaluate_parameters(parameters, context if input_path is None else doc)
+    return copy.deepcopy(doc)
+
+
+def apply_result(context: dict, result_path: str | None, result: Any) -> dict:
+    """Write a state result into the Context per ``ResultPath`` semantics.
+
+    * ``None``  — result replaces the whole Context **only for Pass states
+      without a declared path in ASL**; flows here follow the paper's
+      services, which default to *discarding* the result unless a
+      ``ResultPath`` is given (the run Context is long-lived state, not a
+      pipeline register).  Callers that want replacement pass ``"$"``.
+    * ``"$"``   — result becomes the Context.
+    * ``"$.x"`` — result is inserted at that path.
+    """
+    if result_path is None:
+        return context
+    if result_path == "$":
+        if not isinstance(result, dict):
+            result = {"result": result}
+        return result
+    return jsonpath.put(context, result_path, result)

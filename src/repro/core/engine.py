@@ -1,0 +1,897 @@
+"""FlowEngine: the state-machine executor (paper §5.3).
+
+The paper's Flows service deploys each flow to Amazon Step Functions; action
+states send invocation messages to an SQS action queue, and Lambda workers
+invoke/poll the action providers with an exponential-backoff schedule (first
+poll after 2 s, doubling up to a 600 s cap — §5.3.2 / §6.1).  Offline, this
+engine provides the same execution semantics on one machine:
+
+* a **scheduler** (time-ordered event heap) plays the role of SQS deferred
+  delivery — every dispatch, poll, retry and Wait is a scheduled event;
+* a **worker pool** plays the role of Lambda — events execute on a thread
+  pool in real-time mode, or inline and deterministically under a
+  :class:`~repro.core.clock.VirtualClock`;
+* the **journal** plays the role of ASF's managed state — every transition is
+  written ahead, and :meth:`FlowEngine.recover` resumes unfinished runs after
+  a crash.
+
+The *paper-faithful* polling policy (2 s initial, x2, 600 s cap) is the
+default; :class:`PollingPolicy` exposes the knobs, and ``use_callbacks=True``
+enables the beyond-paper completion-callback optimization measured in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import heapq
+import secrets
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from . import actions as ap
+from . import asl, context as ctx
+from .auth import Caller
+from .clock import Clock, MonotonicId, RealClock
+from .errors import (
+    ActionFailedException,
+    ActionTimeout,
+    AutomationError,
+    BranchFailed,
+    NotFound,
+    StateMachineError,
+    error_matches,
+)
+from .journal import Journal, RunImage, replay
+
+RUN_ACTIVE = "ACTIVE"
+RUN_SUCCEEDED = "SUCCEEDED"
+RUN_FAILED = "FAILED"
+RUN_CANCELLED = "CANCELLED"
+#: stalled runs (paper §7: e.g. expired credentials) — kept, not terminal
+RUN_INACTIVE = "INACTIVE"
+
+
+@dataclass
+class PollingPolicy:
+    """Paper §5.3.2: initial 2 s, doubled per poll, capped at 600 s."""
+
+    initial_seconds: float = 2.0
+    multiplier: float = 2.0
+    cap_seconds: float = 600.0
+    #: beyond-paper: subscribe to in-process completion callbacks and fall
+    #: back to (rare) guard polls.  The paper's Lambda pollers cannot do this
+    #: across a network boundary; an in-process control plane can.
+    use_callbacks: bool = False
+
+    def next_interval(self, current: float) -> float:
+        return min(current * self.multiplier, self.cap_seconds)
+
+
+@dataclass
+class Run:
+    run_id: str
+    flow: asl.Flow
+    flow_id: str
+    creator: str
+    caller: Caller | None
+    run_as: dict[str, Caller] = field(default_factory=dict)
+    label: str = ""
+    tags: list[str] = field(default_factory=list)
+    monitor_by: set[str] = field(default_factory=set)
+    manage_by: set[str] = field(default_factory=set)
+
+    context: Any = None
+    current_state: str | None = None
+    attempt: int = 0
+    status: str = RUN_ACTIVE
+    error: dict | None = None
+    start_time: float = 0.0
+    completion_time: float | None = None
+    cancel_requested: bool = False
+
+    # live action being waited on
+    action_id: str | None = None
+    action_provider_url: str | None = None
+    action_deadline: float | None = None
+    poll_generation: int = 0  # invalidates stale scheduled polls
+
+    # Parallel support
+    parent: "Run | None" = None
+    branch_index: int = 0
+    parent_state: str | None = None
+    children: "list[Run]" = field(default_factory=list)
+
+    # events log (web-app Events tab, Fig 2c)
+    events: list[dict] = field(default_factory=list)
+    # invoked on terminal status (flow-as-action composition, watchers)
+    completion_callbacks: list[Callable[["Run"], None]] = field(default_factory=list)
+
+    lock: threading.RLock = field(default_factory=threading.RLock)
+    done: threading.Event = field(default_factory=threading.Event)
+
+    def log_event(self, t: float, code: str, **details: Any) -> None:
+        self.events.append({"time": t, "code": code, "details": details})
+
+    def as_status(self) -> dict:
+        return {
+            "run_id": self.run_id,
+            "flow_id": self.flow_id,
+            "label": self.label,
+            "status": self.status,
+            "current_state": self.current_state,
+            "creator": self.creator,
+            "start_time": self.start_time,
+            "completion_time": self.completion_time,
+            "details": (
+                {"output": self.context}
+                if self.status == RUN_SUCCEEDED
+                else {"error": self.error}
+                if self.error
+                else {}
+            ),
+        }
+
+
+class Scheduler:
+    """Time-ordered event heap shared by real and virtual modes."""
+
+    def __init__(self, clock: Clock):
+        self.clock = clock
+        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = MonotonicId()
+        self._cv = threading.Condition()
+        self._stopped = False
+
+    def call_at(self, t: float, fn: Callable[[], None]) -> None:
+        with self._cv:
+            heapq.heappush(self._heap, (t, self._seq.next(), fn))
+            self._cv.notify_all()
+
+    def call_later(self, delay: float, fn: Callable[[], None]) -> None:
+        self.call_at(self.clock.now() + max(0.0, delay), fn)
+
+    def submit(self, fn: Callable[[], None]) -> None:
+        self.call_later(0.0, fn)
+
+    # -- virtual-time drive --------------------------------------------------
+    def drain(
+        self,
+        until: float | None = None,
+        max_events: int = 10_000_000,
+        stop: Callable[[], bool] | None = None,
+    ) -> int:
+        """Execute events in time order, advancing a virtual clock.
+
+        Returns the number of events executed.  Only meaningful with a
+        VirtualClock (deterministic single-threaded execution).  ``stop`` is
+        checked between events so callers can drain "until run X completes"
+        without executing the (unbounded) tail of poll events behind it.
+        """
+        n = 0
+        while n < max_events:
+            if stop is not None and stop():
+                return n
+            with self._cv:
+                if not self._heap:
+                    return n
+                t, _, fn = self._heap[0]
+                if until is not None and t > until:
+                    return n
+                heapq.heappop(self._heap)
+            if hasattr(self.clock, "advance_to"):
+                self.clock.advance_to(t)
+            fn()
+            n += 1
+        return n
+
+    # -- real-time drive -------------------------------------------------------
+    def run_forever(self, executor) -> None:
+        while True:
+            with self._cv:
+                if self._stopped:
+                    return
+                now = self.clock.now()
+                if self._heap and self._heap[0][0] <= now:
+                    _, _, fn = heapq.heappop(self._heap)
+                else:
+                    timeout = (
+                        max(0.0, self._heap[0][0] - now) if self._heap else None
+                    )
+                    self.clock.wait(self._cv, timeout)
+                    continue
+            executor(fn)
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stopped = True
+            self._cv.notify_all()
+
+    def pending(self) -> int:
+        with self._cv:
+            return len(self._heap)
+
+
+class FlowEngine:
+    """Executes flow runs against an :class:`~repro.core.actions.ActionRegistry`."""
+
+    def __init__(
+        self,
+        registry: ap.ActionRegistry,
+        clock: Clock | None = None,
+        journal: Journal | None = None,
+        polling: PollingPolicy | None = None,
+        max_workers: int = 8,
+        start_threads: bool | None = None,
+    ):
+        self.registry = registry
+        self.clock = clock or RealClock()
+        self.journal = journal or Journal()
+        self.polling = polling or PollingPolicy()
+        self.scheduler = Scheduler(self.clock)
+        self.runs: dict[str, Run] = {}
+        self._lock = threading.RLock()
+        self.stats = {
+            "runs_started": 0,
+            "runs_succeeded": 0,
+            "runs_failed": 0,
+            "runs_cancelled": 0,
+            "actions_dispatched": 0,
+            "polls": 0,
+            "retries": 0,
+        }
+        # real-time execution machinery (not used under a virtual clock)
+        self._threads: list[threading.Thread] = []
+        if start_threads is None:
+            start_threads = not self.clock.virtual
+        if start_threads:
+            self._start_threads(max_workers)
+
+    # ------------------------------------------------------------------ infra
+    def _start_threads(self, max_workers: int) -> None:
+        from concurrent.futures import ThreadPoolExecutor
+
+        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+        t = threading.Thread(
+            target=self.scheduler.run_forever,
+            args=(lambda fn: self._pool.submit(self._guarded, fn),),
+            daemon=True,
+            name="flow-engine-dispatcher",
+        )
+        t.start()
+        self._threads.append(t)
+
+    @staticmethod
+    def _guarded(fn: Callable[[], None]) -> None:
+        try:
+            fn()
+        except Exception:  # never kill the pool on a bug; runs fail instead
+            import traceback
+
+            traceback.print_exc()
+
+    def shutdown(self) -> None:
+        self.scheduler.stop()
+        pool = getattr(self, "_pool", None)
+        if pool is not None:
+            pool.shutdown(wait=False)
+
+    def drain(self, until: float | None = None) -> int:
+        """Virtual-time drive: run all due events deterministically."""
+        return self.scheduler.drain(until=until)
+
+    # ------------------------------------------------------------------- runs
+    def start_run(
+        self,
+        flow: asl.Flow,
+        flow_input: dict,
+        flow_id: str = "flow",
+        creator: str = "anonymous",
+        caller: Caller | None = None,
+        run_as: dict[str, Caller] | None = None,
+        label: str = "",
+        tags: list[str] | None = None,
+        monitor_by: list[str] | None = None,
+        manage_by: list[str] | None = None,
+        run_id: str | None = None,
+    ) -> Run:
+        run = Run(
+            run_id=run_id or "run-" + secrets.token_hex(8),
+            flow=flow,
+            flow_id=flow_id,
+            creator=creator,
+            caller=caller,
+            run_as=dict(run_as or {}),
+            label=label,
+            tags=list(tags or ()),
+            monitor_by=set(monitor_by or ()),
+            manage_by=set(manage_by or ()),
+            context=dict(flow_input),
+            start_time=self.clock.now(),
+        )
+        with self._lock:
+            self.runs[run.run_id] = run
+            self.stats["runs_started"] += 1
+        self.journal.append(
+            {
+                "type": "run_created",
+                "run_id": run.run_id,
+                "flow_id": flow_id,
+                "input": run.context,
+                "creator": creator,
+                "label": label,
+                "t": run.start_time,
+            }
+        )
+        run.log_event(run.start_time, "FlowStarted", input=flow_input)
+        self.scheduler.submit(lambda: self._enter_state(run, flow.start_at))
+        return run
+
+    def get_run(self, run_id: str) -> Run:
+        with self._lock:
+            run = self.runs.get(run_id)
+        if run is None:
+            raise NotFound(f"unknown run {run_id!r}")
+        return run
+
+    def cancel_run(self, run_id: str) -> Run:
+        run = self.get_run(run_id)
+        with run.lock:
+            if run.status != RUN_ACTIVE:
+                return run
+            run.cancel_requested = True
+            action_id, url = run.action_id, run.action_provider_url
+        if action_id and url:
+            try:
+                provider = self.registry.lookup(url)
+                provider.cancel(action_id, self._caller_for(run, None))
+            except AutomationError:
+                pass
+        self.scheduler.submit(lambda: self._check_cancel(run))
+        return run
+
+    def _check_cancel(self, run: Run) -> None:
+        with run.lock:
+            if run.status == RUN_ACTIVE and run.cancel_requested:
+                self._complete_run(run, RUN_CANCELLED)
+
+    def wait(self, run_id: str, timeout: float | None = None) -> Run:
+        """Block until a run completes (real-time mode)."""
+        run = self.get_run(run_id)
+        run.done.wait(timeout)
+        return run
+
+    def run_to_completion(
+        self,
+        run_id: str,
+        until: float | None = None,
+        max_events: int = 10_000_000,
+    ) -> Run:
+        """Virtual-time mode: drain the scheduler until this run completes.
+
+        ``until`` bounds virtual time — needed for runs that stall on
+        external input (e.g. a pending UserSelection keeps generating poll
+        events forever, exactly like the real service would).
+        """
+        run = self.get_run(run_id)
+        self.scheduler.drain(
+            until=until,
+            max_events=max_events,
+            stop=lambda: run.status != RUN_ACTIVE,
+        )
+        return run
+
+    # ----------------------------------------------------------- state machine
+    def _enter_state(self, run: Run, state_name: str, attempt: int = 0) -> None:
+        with run.lock:
+            if run.status != RUN_ACTIVE:
+                return
+            if run.cancel_requested:
+                self._complete_run(run, RUN_CANCELLED)
+                return
+            run.current_state = state_name
+            run.attempt = attempt
+            run.poll_generation += 1
+        state = run.flow.states.get(state_name)
+        if state is None:
+            self._run_failed(run, StateMachineError(f"unknown state {state_name}"))
+            return
+        now = self.clock.now()
+        self.journal.append(
+            {
+                "type": "state_entered",
+                "run_id": run.run_id,
+                "state": state_name,
+                "attempt": attempt,
+                "context": run.context,
+                "t": now,
+            }
+        )
+        run.log_event(now, "StateEntered", state=state_name, kind=state.kind)
+        try:
+            if state.kind == "Action":
+                self._exec_action(run, state)
+            elif state.kind == "Pass":
+                self._exec_pass(run, state)
+            elif state.kind == "Choice":
+                self._exec_choice(run, state)
+            elif state.kind == "Wait":
+                self._exec_wait(run, state)
+            elif state.kind == "Fail":
+                self._state_failed(run, state, state.error, state.cause or state.name)
+            elif state.kind == "Succeed":
+                self._complete_run(run, RUN_SUCCEEDED)
+            elif state.kind == "Parallel":
+                self._exec_parallel(run, state)
+            else:  # pragma: no cover
+                raise StateMachineError(f"unhandled state kind {state.kind}")
+        except AutomationError as e:
+            self._state_failed(run, state, e.error_name, e.cause)
+        except Exception as e:
+            self._state_failed(run, state, "States.Runtime", repr(e))
+
+    # -- simple states ----------------------------------------------------------
+    def _exec_pass(self, run: Run, state: asl.State) -> None:
+        if state.result is not None:
+            result = state.result
+        elif state.parameters is not None or state.input_path:
+            result = ctx.state_input(run.context, state.input_path, state.parameters)
+        else:
+            result = None
+        if result is not None:
+            with run.lock:
+                if state.result_path:
+                    run.context = ctx.apply_result(
+                        run.context, state.result_path, result
+                    )
+                elif isinstance(result, dict):
+                    # no ResultPath: merge into the long-lived run Context
+                    run.context = {**run.context, **result}
+                else:
+                    run.context = ctx.apply_result(run.context, "$", result)
+        self._transition(run, state)
+
+    def _exec_choice(self, run: Run, state: asl.State) -> None:
+        for rule in state.choices:
+            if rule.evaluate(run.context):
+                self._goto(run, rule.next)
+                return
+        if state.default:
+            self._goto(run, state.default)
+            return
+        raise StateMachineError(f"Choice {state.name}: no rule matched, no Default")
+
+    def _exec_wait(self, run: Run, state: asl.State) -> None:
+        from . import jsonpath
+
+        seconds = (
+            state.seconds
+            if state.seconds is not None
+            else float(jsonpath.get(run.context, state.seconds_path))
+        )
+        self.scheduler.call_later(seconds, lambda: self._transition(run, state))
+
+    # -- Action states ----------------------------------------------------------
+    def _exec_action(self, run: Run, state: asl.State) -> None:
+        provider = self.registry.lookup(state.action_url)
+        if getattr(provider, "scheduler", None) is None:
+            # lazy-attach: lets time-based providers fire completion
+            # callbacks through this engine's scheduler (callback mode)
+            provider.scheduler = self.scheduler
+        body = ctx.state_input(run.context, state.input_path, state.parameters)
+        caller = self._caller_for(run, state.run_as)
+        request_id = f"{run.run_id}:{state.name}:{run.attempt}"
+        now = self.clock.now()
+        deadline = now + state.wait_time if state.wait_time else None
+        with self._lock:
+            self.stats["actions_dispatched"] += 1
+        # Journal *before* dispatch (write-ahead), then invoke.
+        self.journal.append(
+            {
+                "type": "action_started",
+                "run_id": run.run_id,
+                "state": state.name,
+                "provider_url": state.action_url,
+                "request_id": request_id,
+                "t": now,
+            }
+        )
+        try:
+            status = provider.run(
+                body,
+                caller=caller,
+                request_id=request_id,
+                monitor_by=sorted(run.monitor_by),
+                manage_by=sorted(run.manage_by),
+            )
+        except AutomationError as e:
+            self._state_failed(run, state, e.error_name, e.cause)
+            return
+        run.log_event(
+            self.clock.now(),
+            "ActionStarted",
+            state=state.name,
+            action_id=status.action_id,
+            provider=state.action_url,
+        )
+        with run.lock:
+            run.action_id = status.action_id
+            run.action_provider_url = state.action_url
+            run.action_deadline = deadline
+            generation = run.poll_generation
+        if status.status != ap.ACTIVE:
+            self._action_finished(run, state, status)
+            return
+        # asynchronous action: poll with exponential backoff (paper policy)
+        interval = self.polling.initial_seconds
+        if self.polling.use_callbacks:
+            subscribed = provider.subscribe(
+                status.action_id,
+                lambda doc: self.scheduler.submit(
+                    lambda: self._on_callback(run, state, generation, doc)
+                ),
+            )
+            if subscribed:
+                # guard poll at the cap (or the deadline) in case the
+                # callback is lost; dramatically fewer polls than backoff.
+                guard = min(
+                    self.polling.cap_seconds,
+                    (deadline - now) if deadline else self.polling.cap_seconds,
+                )
+                self.scheduler.call_later(
+                    guard,
+                    lambda: self._poll_action(
+                        run, state, generation, self.polling.cap_seconds
+                    ),
+                )
+                return
+            # action completed before we subscribed: fall through to a poll
+            self.scheduler.submit(
+                lambda: self._poll_action(run, state, generation, interval)
+            )
+            return
+        self.scheduler.call_later(
+            interval,
+            lambda: self._poll_action(run, state, generation, interval),
+        )
+
+    def _on_callback(self, run: Run, state: asl.State, generation: int, doc) -> None:
+        with run.lock:
+            if run.status != RUN_ACTIVE or run.poll_generation != generation:
+                return
+        self._action_finished(run, state, doc)
+
+    def _poll_action(
+        self, run: Run, state: asl.State, generation: int, interval: float
+    ) -> None:
+        with run.lock:
+            if run.status != RUN_ACTIVE or run.poll_generation != generation:
+                return
+            action_id = run.action_id
+            deadline = run.action_deadline
+        if action_id is None:
+            return
+        if run.cancel_requested:
+            self._check_cancel(run)
+            return
+        provider = self.registry.lookup(state.action_url)
+        with self._lock:
+            self.stats["polls"] += 1
+        try:
+            status = provider.status(action_id, self._caller_for(run, state.run_as))
+        except AutomationError as e:
+            self._state_failed(run, state, e.error_name, e.cause)
+            return
+        now = self.clock.now()
+        if status.status == ap.ACTIVE:
+            if deadline is not None and now >= deadline:
+                # WaitTime exceeded: advisory cancel, then treat as failure
+                try:
+                    provider.cancel(action_id, self._caller_for(run, state.run_as))
+                except AutomationError:
+                    pass
+                self._state_failed(
+                    run,
+                    state,
+                    ActionTimeout.error_name,
+                    f"action exceeded WaitTime={state.wait_time}s",
+                )
+                return
+            nxt = self.polling.next_interval(interval)
+            if deadline is not None:
+                nxt = min(nxt, max(0.0, deadline - now) + 1e-9)
+            self.scheduler.call_later(
+                nxt, lambda: self._poll_action(run, state, generation, nxt)
+            )
+            return
+        self._action_finished(run, state, status)
+
+    def _action_finished(self, run: Run, state: asl.State, status) -> None:
+        with run.lock:
+            if run.status != RUN_ACTIVE:
+                return
+            # atomic claim: a completion callback and a guard poll can both
+            # observe the terminal action state — only one may transition
+            if run.action_id != status.action_id:
+                return
+            run.action_id = None
+            run.action_provider_url = None
+            run.action_deadline = None
+        now = self.clock.now()
+        self.journal.append(
+            {
+                "type": "action_completed",
+                "run_id": run.run_id,
+                "state": state.name,
+                "action_id": status.action_id,
+                "status": status.status,
+                "t": now,
+            }
+        )
+        run.log_event(
+            now,
+            "ActionCompleted",
+            state=state.name,
+            action_id=status.action_id,
+            status=status.status,
+        )
+        # release provider-side state (the engine is done with the action)
+        try:
+            provider = self.registry.lookup(state.action_url)
+            provider.release(status.action_id, self._caller_for(run, state.run_as))
+        except AutomationError:
+            pass
+        if status.status == ap.FAILED:
+            if state.exception_on_action_failure or state.catch or state.retry:
+                self._state_failed(
+                    run,
+                    state,
+                    ActionFailedException.error_name,
+                    _details_str(status.details),
+                    details=status.details,
+                )
+                return
+            # tolerate failure: record details and continue
+        result = {
+            "action_id": status.action_id,
+            "status": status.status,
+            "details": status.details,
+        }
+        with run.lock:
+            run.context = ctx.apply_result(run.context, state.result_path, result)
+        self._transition(run, state)
+
+    # -- Parallel ------------------------------------------------------------------
+    def _exec_parallel(self, run: Run, state: asl.State) -> None:
+        branch_input = ctx.state_input(run.context, None, state.parameters)
+        children: list[Run] = []
+        for i, branch in enumerate(state.branches):
+            child = Run(
+                run_id=f"{run.run_id}.b{i}",
+                flow=branch,
+                flow_id=f"{run.flow_id}#∥{state.name}[{i}]",
+                creator=run.creator,
+                caller=run.caller,
+                run_as=run.run_as,
+                label=f"{run.label} / branch {i}",
+                context=dict(branch_input),
+                start_time=self.clock.now(),
+                parent=run,
+                branch_index=i,
+                parent_state=state.name,
+            )
+            children.append(child)
+        with run.lock:
+            run.children = children
+        with self._lock:
+            for child in children:
+                self.runs[child.run_id] = child
+        for child in children:
+            self.scheduler.submit(
+                lambda c=child: self._enter_state(c, c.flow.start_at)
+            )
+
+    def _parallel_child_done(self, child: Run) -> None:
+        parent = child.parent
+        assert parent is not None
+        state = parent.flow.states[child.parent_state]
+        with parent.lock:
+            if parent.status != RUN_ACTIVE:
+                return
+            statuses = [c.status for c in parent.children]
+        if any(s == RUN_FAILED for s in statuses):
+            for c in parent.children:
+                if c.status == RUN_ACTIVE:
+                    self.cancel_run(c.run_id)
+            failed = next(c for c in parent.children if c.status == RUN_FAILED)
+            self._state_failed(
+                parent,
+                state,
+                BranchFailed.error_name,
+                f"branch {failed.branch_index} failed: {failed.error}",
+                details=failed.error,
+            )
+            return
+        if all(s == RUN_SUCCEEDED for s in statuses):
+            results = [c.context for c in parent.children]
+            with parent.lock:
+                parent.context = ctx.apply_result(
+                    parent.context, state.result_path, results
+                )
+            self._transition(parent, state)
+
+    # -- failure handling -------------------------------------------------------
+    def _state_failed(
+        self,
+        run: Run,
+        state: asl.State,
+        error_name: str,
+        cause: str,
+        details: Any = None,
+    ) -> None:
+        now = self.clock.now()
+        run.log_event(
+            now, "StateFailed", state=state.name, error=error_name, cause=cause
+        )
+        # Retry clauses (ASL semantics)
+        for rule in state.retry:
+            if error_matches(error_name, rule.error_equals):
+                if run.attempt < rule.max_attempts:
+                    delay = rule.interval_seconds * (
+                        rule.backoff_rate ** run.attempt
+                    )
+                    with self._lock:
+                        self.stats["retries"] += 1
+                    attempt = run.attempt + 1
+                    run.log_event(
+                        now, "StateRetried", state=state.name, attempt=attempt
+                    )
+                    self.scheduler.call_later(
+                        delay, lambda: self._enter_state(run, state.name, attempt)
+                    )
+                    return
+                break
+        # Catch clauses
+        for rule in state.catch:
+            if error_matches(error_name, rule.error_equals):
+                error_doc = {"Error": error_name, "Cause": cause}
+                if details is not None:
+                    error_doc["Details"] = details
+                with run.lock:
+                    run.context = ctx.apply_result(
+                        run.context, rule.result_path, error_doc
+                    )
+                self._goto(run, rule.next)
+                return
+        with run.lock:
+            run.error = {"Error": error_name, "Cause": cause, "State": state.name}
+            if details is not None:
+                run.error["Details"] = details
+        self._complete_run(run, RUN_FAILED)
+
+    def _run_failed(self, run: Run, exc: AutomationError) -> None:
+        with run.lock:
+            run.error = exc.as_result()
+        self._complete_run(run, RUN_FAILED)
+
+    # -- transitions -----------------------------------------------------------
+    def _transition(self, run: Run, state: asl.State) -> None:
+        now = self.clock.now()
+        self.journal.append(
+            {
+                "type": "state_exited",
+                "run_id": run.run_id,
+                "state": state.name,
+                "next": state.next,
+                "context": run.context,
+                "t": now,
+            }
+        )
+        run.log_event(now, "StateExited", state=state.name, next=state.next)
+        if state.end or state.next is None:
+            self._complete_run(run, RUN_SUCCEEDED)
+        else:
+            self._goto(run, state.next)
+
+    def _goto(self, run: Run, state_name: str) -> None:
+        self.scheduler.submit(lambda: self._enter_state(run, state_name))
+
+    def _complete_run(self, run: Run, status: str) -> None:
+        with run.lock:
+            if run.status != RUN_ACTIVE:
+                return
+            run.status = status
+            run.completion_time = self.clock.now()
+            run.current_state = None
+        self.journal.append(
+            {
+                "type": "run_completed" if status != RUN_CANCELLED else "run_cancelled",
+                "run_id": run.run_id,
+                "status": status,
+                "context": run.context,
+                "error": run.error,
+                "t": run.completion_time,
+            }
+        )
+        run.log_event(run.completion_time, "FlowCompleted", status=status)
+        with self._lock:
+            key = {
+                RUN_SUCCEEDED: "runs_succeeded",
+                RUN_FAILED: "runs_failed",
+                RUN_CANCELLED: "runs_cancelled",
+            }.get(status)
+            if key:
+                self.stats[key] += 1
+        run.done.set()
+        for cb in list(run.completion_callbacks):
+            try:
+                cb(run)
+            except Exception:
+                pass
+        if run.parent is not None:
+            self.scheduler.submit(lambda: self._parallel_child_done(run))
+
+    # -- auth ---------------------------------------------------------------------
+    def _caller_for(self, run: Run, run_as: str | None) -> Caller | None:
+        """Map a state's RunAs role to the identity whose tokens to use.
+
+        Default: the run creator (paper §4.2.1 — "By default, actions are run
+        as the run creator"); a ``RunAs`` role selects the alternate identity
+        captured when the run started.
+        """
+        if run_as:
+            caller = run.run_as.get(run_as)
+            if caller is not None:
+                return caller
+        return run.caller
+
+    # -- recovery ---------------------------------------------------------------
+    def recover(
+        self,
+        flows_by_id: dict[str, asl.Flow],
+        resume: bool = True,
+    ) -> list[Run]:
+        """Rebuild unfinished runs from the journal and resume them.
+
+        ``flows_by_id`` maps flow ids to parsed definitions (the Flows
+        service persists definitions separately from run state, as in the
+        paper where ASF holds the deployed state machine).
+        """
+        resumed: list[Run] = []
+        for image in replay(self.journal).values():
+            if image.status != RUN_ACTIVE or image.run_id in self.runs:
+                continue
+            flow = flows_by_id.get(image.flow_id)
+            if flow is None:
+                continue
+            run = Run(
+                run_id=image.run_id,
+                flow=flow,
+                flow_id=image.flow_id,
+                creator=image.creator,
+                caller=None,
+                label=image.label,
+                context=image.context,
+                start_time=self.clock.now(),
+            )
+            with self._lock:
+                self.runs[run.run_id] = run
+            resumed.append(run)
+            if not resume:
+                continue
+            state_name = image.current_state or flow.start_at
+            attempt = image.attempt
+            # Re-enter the interrupted state.  The journaled request_id makes
+            # re-dispatch idempotent for providers that survived the crash.
+            self.scheduler.submit(
+                lambda r=run, s=state_name, a=attempt: self._enter_state(r, s, a)
+            )
+        return resumed
+
+
+def _details_str(details: Any) -> str:
+    if isinstance(details, dict):
+        for key in ("error", "cause", "message"):
+            if key in details:
+                return str(details[key])
+    return str(details)

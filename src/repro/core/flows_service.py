@@ -1,0 +1,406 @@
+"""The Flows service (paper §5.3): publish, discover, invoke, and manage
+flows, with role-based access control and auth delegation.
+
+Publish-time behaviour follows §5.3.1: the definition and input schema are
+validated; the flow is registered with Auth as its own resource server with a
+unique run scope whose *dependent scopes* are the scopes of every action
+provider the definition references (discovered by introspection), plus
+per-``RunAs``-role scopes; the flow is deployed to the engine and — because
+every flow is itself an action provider — exposed behind the AP API so flows
+can invoke flows.
+
+Run-time behaviour follows §5.3.2: the caller's identity is checked against
+the flow's Starter policy, input is validated against the schema, dependent
+tokens for the invoking user (and any RunAs roles) are retrieved and stored
+for use when invoking actions, and the state machine is started.
+"""
+
+from __future__ import annotations
+
+import secrets
+import threading
+from dataclasses import dataclass, field
+
+from . import asl, schema as jsonschema
+from .actions import (
+    ACTIVE as AP_ACTIVE,
+    ActionProvider,
+    ActionRegistry,
+    ActionStatus,
+    _Action,
+)
+from .auth import AuthService, Caller, Identity, principal_matches
+from .clock import Clock, RealClock
+from .engine import (
+    RUN_ACTIVE,
+    RUN_FAILED,
+    RUN_SUCCEEDED,
+    FlowEngine,
+    PollingPolicy,
+    Run,
+)
+from .errors import Forbidden, InputValidationError, NotFound
+from .journal import Journal
+
+
+@dataclass
+class FlowRecord:
+    flow_id: str
+    flow: asl.Flow
+    input_schema: dict
+    title: str
+    description: str = ""
+    keywords: list[str] = field(default_factory=list)
+    owner: str = "anonymous"
+    scope: str = ""
+    # RBAC principals (user:/group:/public/all_authenticated_users)
+    viewers: list[str] = field(default_factory=list)
+    starters: list[str] = field(default_factory=list)
+    administrators: list[str] = field(default_factory=list)
+    runs: list[str] = field(default_factory=list)
+
+    def visible_to(self, identity: Identity | None) -> bool:
+        principals = (
+            self.viewers + self.starters + self.administrators + [f"user:{self.owner}"]
+        )
+        return any(principal_matches(identity, p) for p in principals)
+
+
+class FlowsService:
+    def __init__(
+        self,
+        registry: ActionRegistry,
+        clock: Clock | None = None,
+        auth: AuthService | None = None,
+        journal: Journal | None = None,
+        polling: PollingPolicy | None = None,
+        max_workers: int = 8,
+    ):
+        self.clock = clock or RealClock()
+        self.auth = auth
+        self.registry = registry
+        self.engine = FlowEngine(
+            registry,
+            clock=self.clock,
+            journal=journal,
+            polling=polling,
+            max_workers=max_workers,
+        )
+        self._flows: dict[str, FlowRecord] = {}
+        self._lock = threading.RLock()
+        if auth is not None:
+            auth.register_resource_server("flows.repro")
+            self.manage_scope = auth.register_scope(
+                "flows.repro", "urn:repro:scopes:flows:manage_flows"
+            ).urn
+
+    # ------------------------------------------------------------- publishing
+    def publish_flow(
+        self,
+        definition: dict,
+        input_schema: dict | None = None,
+        title: str = "",
+        description: str = "",
+        keywords: list[str] | None = None,
+        owner: str = "anonymous",
+        viewers: list[str] | None = None,
+        starters: list[str] | None = None,
+        administrators: list[str] | None = None,
+        flow_id: str | None = None,
+    ) -> FlowRecord:
+        flow = asl.parse(definition)  # raises FlowValidationError
+        input_schema = input_schema if input_schema is not None else {"type": "object"}
+        jsonschema.check_schema(input_schema)
+        flow_id = flow_id or "flow-" + secrets.token_hex(8)
+        record = FlowRecord(
+            flow_id=flow_id,
+            flow=flow,
+            input_schema=input_schema,
+            title=title or flow_id,
+            description=description,
+            keywords=list(keywords or ()),
+            owner=owner,
+            viewers=list(viewers or ()),
+            starters=list(starters or ()),
+            administrators=list(administrators or ()),
+        )
+        if self.auth is not None:
+            # the flow becomes its own resource server + run scope, with every
+            # referenced AP's scope as a dependent scope (paper §5.3.1)
+            server = f"flow.{flow_id}"
+            self.auth.register_resource_server(server)
+            deps = []
+            for url in asl.action_urls(flow):
+                provider = self.registry.lookup(url)
+                deps.append(provider.introspect()["globus_auth_scope"])
+            record.scope = self.auth.register_scope(
+                server, f"urn:repro:scopes:flow:{flow_id}:run", deps
+            ).urn
+        with self._lock:
+            self._flows[flow_id] = record
+        # every flow is an action provider: register it behind the AP API
+        self.registry.register(
+            FlowActionProvider(self, record, clock=self.clock), f"flow://{flow_id}"
+        )
+        return record
+
+    def update_flow(self, flow_id: str, caller: Caller | None = None, **updates):
+        record = self._record(flow_id)
+        self._require(
+            record,
+            caller,
+            record.administrators + [f"user:{record.owner}"],
+            "Administrator",
+        )
+        if "definition" in updates:
+            record.flow = asl.parse(updates.pop("definition"))
+        if "input_schema" in updates:
+            jsonschema.check_schema(updates["input_schema"])
+            record.input_schema = updates.pop("input_schema")
+        for key in ("title", "description", "keywords", "viewers", "starters",
+                    "administrators", "owner"):
+            if key in updates:
+                setattr(record, key, updates[key])
+        return record
+
+    def remove_flow(self, flow_id: str, caller: Caller | None = None) -> None:
+        record = self._record(flow_id)
+        self._require(record, caller, [f"user:{record.owner}"], "Owner")
+        with self._lock:
+            del self._flows[flow_id]
+
+    # ------------------------------------------------------------- discovery
+    def get_flow(self, flow_id: str, caller: Caller | None = None) -> FlowRecord:
+        record = self._record(flow_id)
+        if self.auth is not None:
+            identity = caller.identity if caller else None
+            if not record.visible_to(identity):
+                raise Forbidden(f"flow {flow_id} is not visible to caller")
+        return record
+
+    def search_flows(
+        self, q: str = "", caller: Caller | None = None
+    ) -> list[FlowRecord]:
+        identity = caller.identity if caller else None
+        out = []
+        with self._lock:
+            records = list(self._flows.values())
+        for record in records:
+            if self.auth is not None and not record.visible_to(identity):
+                continue
+            blob = " ".join(
+                [record.title, record.description, " ".join(record.keywords)]
+            ).lower()
+            if q.lower() in blob:
+                out.append(record)
+        return out
+
+    # ------------------------------------------------------------- invocation
+    def run_flow(
+        self,
+        flow_id: str,
+        flow_input: dict,
+        caller: Caller | None = None,
+        run_as: dict[str, Caller] | None = None,
+        label: str = "",
+        tags: list[str] | None = None,
+        monitor_by: list[str] | None = None,
+        manage_by: list[str] | None = None,
+    ) -> Run:
+        record = self._record(flow_id)
+        identity = caller.identity if caller else None
+        if self.auth is not None:
+            principals = record.starters + record.administrators + [
+                f"user:{record.owner}"
+            ]
+            if not any(principal_matches(identity, p) for p in principals):
+                raise Forbidden(
+                    f"{identity.username if identity else 'anonymous'} lacks the "
+                    f"Starter role on flow {flow_id}"
+                )
+            # delegation: exchange the caller's flow-scope token for dependent
+            # AP tokens, stored with the run (paper §5.3.2)
+            token = caller.token_for(record.scope) if caller else None
+            if token is None:
+                raise InputValidationError(
+                    f"caller must present a token for scope {record.scope}"
+                )
+            dependent = self.auth.get_dependent_tokens(token)
+            caller = Caller(identity=identity, tokens={**caller.tokens, **dependent})
+            resolved_run_as: dict[str, Caller] = {}
+            for role, role_caller in (run_as or {}).items():
+                role_token = role_caller.token_for(record.scope)
+                role_tokens = dict(role_caller.tokens)
+                if role_token is not None:
+                    role_tokens.update(self.auth.get_dependent_tokens(role_token))
+                resolved_run_as[role] = Caller(
+                    identity=role_caller.identity, tokens=role_tokens
+                )
+            run_as = resolved_run_as
+        try:
+            flow_input = jsonschema.validate(dict(flow_input), record.input_schema)
+        except InputValidationError:
+            raise
+        run = self.engine.start_run(
+            record.flow,
+            flow_input,
+            flow_id=flow_id,
+            creator=identity.username if identity else "anonymous",
+            caller=caller,
+            run_as=run_as,
+            label=label,
+            tags=tags,
+            monitor_by=monitor_by,
+            manage_by=manage_by,
+        )
+        record.runs.append(run.run_id)
+        return run
+
+    # ------------------------------------------------------------- run mgmt
+    def run_status(self, run_id: str, caller: Caller | None = None) -> dict:
+        run = self.engine.get_run(run_id)
+        self._require_run(run, caller, run.monitor_by | run.manage_by, "Monitor")
+        return run.as_status()
+
+    def run_events(self, run_id: str, caller: Caller | None = None) -> list[dict]:
+        run = self.engine.get_run(run_id)
+        self._require_run(run, caller, run.monitor_by | run.manage_by, "Monitor")
+        return list(run.events)
+
+    def cancel_run(self, run_id: str, caller: Caller | None = None) -> dict:
+        run = self.engine.get_run(run_id)
+        self._require_run(run, caller, run.manage_by, "Manager")
+        return self.engine.cancel_run(run_id).as_status()
+
+    def list_runs(
+        self,
+        caller: Caller | None = None,
+        flow_id: str | None = None,
+        status: str | None = None,
+        tag: str | None = None,
+    ) -> list[dict]:
+        out = []
+        for run in list(self.engine.runs.values()):
+            if run.parent is not None:
+                continue
+            if flow_id and run.flow_id != flow_id:
+                continue
+            if status and run.status != status:
+                continue
+            if tag and tag not in run.tags:
+                continue
+            try:
+                self._require_run(
+                    run, caller, run.monitor_by | run.manage_by, "Monitor"
+                )
+            except Forbidden:
+                continue
+            out.append(run.as_status())
+        return out
+
+    # ------------------------------------------------------------- internals
+    def _record(self, flow_id: str) -> FlowRecord:
+        with self._lock:
+            record = self._flows.get(flow_id)
+        if record is None:
+            raise NotFound(f"unknown flow {flow_id!r}")
+        return record
+
+    def flows_by_id(self) -> dict[str, asl.Flow]:
+        with self._lock:
+            return {fid: rec.flow for fid, rec in self._flows.items()}
+
+    def _require(
+        self,
+        record: FlowRecord,
+        caller: Caller | None,
+        principals: list[str],
+        role: str,
+    ) -> None:
+        if self.auth is None:
+            return
+        identity = caller.identity if caller else None
+        if not any(principal_matches(identity, p) for p in principals):
+            raise Forbidden(
+                f"caller lacks the {role} role on flow {record.flow_id}"
+            )
+
+    def _require_run(
+        self, run: Run, caller: Caller | None, extra: set[str], role: str
+    ) -> None:
+        if self.auth is None:
+            return
+        identity = caller.identity if caller else None
+        principals = [f"user:{run.creator}", *extra]
+        if not any(principal_matches(identity, p) for p in principals):
+            raise Forbidden(f"caller lacks the {role} role on run {run.run_id}")
+
+
+class FlowActionProvider(ActionProvider):
+    """Adapter exposing a published flow behind the action-provider API.
+
+    "Every flow automatically implements this API and therefore is also an
+    action provider ... a flow can invoke another flow as an action" —
+    paper §5.2.
+    """
+
+    synchronous = False
+
+    def __init__(self, service: FlowsService, record: FlowRecord, clock=None):
+        self.service = service
+        self.record = record
+        self.title = f"Flow: {record.title}"
+        self.url = f"flow://{record.flow_id}"
+        self.scope_suffix = f"flow.{record.flow_id}"
+        self.input_schema = record.input_schema
+        super().__init__(clock=clock, auth=None)  # RBAC enforced by FlowsService
+        if service.auth is not None and record.scope:
+            self.scope = record.scope
+
+    def introspect(self) -> dict:
+        doc = super().introspect()
+        doc["flow_id"] = self.record.flow_id
+        doc["definition"] = self.record.flow.definition
+        return doc
+
+    def _start(self, action: _Action, identity) -> None:
+        # the parent's caller wallet carries the dependent token for this
+        # flow's scope (registered as a dependent scope at publish time)
+        run = self.service.run_flow(
+            self.record.flow_id,
+            action.body,
+            caller=action.caller,
+            label=f"child of action {action.action_id}",
+        )
+        action.details = {"run_id": run.run_id}
+        action.display_status = f"running flow {self.record.flow_id}"
+        if not hasattr(self, "_child_runs"):
+            self._child_runs: dict[str, str] = {}
+        self._child_runs[action.action_id] = run.run_id
+        # completion callback so parent engines in callback mode see child
+        # flows finish immediately (and _poll stays correct regardless)
+        run.completion_callbacks.append(lambda _run: self._poll(action))
+
+    def _poll(self, action: _Action) -> None:
+        run_id = getattr(self, "_child_runs", {}).get(action.action_id)
+        if run_id is None:
+            return
+        run = self.service.engine.get_run(run_id)
+        if run.status == RUN_ACTIVE:
+            return
+        from .actions import FAILED as AP_FAILED, SUCCEEDED as AP_SUCCEEDED
+
+        if run.status == RUN_SUCCEEDED:
+            self._complete(
+                action, AP_SUCCEEDED, details={"run_id": run_id, "output": run.context}
+            )
+        else:
+            self._complete(
+                action, AP_FAILED, details={"run_id": run_id, "error": run.error}
+            )
+
+    def _cancel(self, action: _Action) -> None:
+        run_id = getattr(self, "_child_runs", {}).get(action.action_id)
+        if run_id is not None:
+            self.service.engine.cancel_run(run_id)
+        super()._cancel(action)

@@ -1,0 +1,144 @@
+"""Write-ahead journal: durable run state + crash recovery.
+
+The paper outsources durability to AWS (Step Functions keeps the state
+machine's execution state; SQS persists in-flight work).  Offline, the same
+guarantee — *a flow run survives the failure of the machinery executing it* —
+is provided by journaling every run-state transition to an append-only JSONL
+file before acting on it.  ``FlowEngine.recover()`` replays the journal,
+rebuilds each unfinished run at its last recorded state, and resumes it.
+
+Replay safety: action starts are journaled with the idempotency
+``request_id`` that providers deduplicate on, so a crash between "journal
+action_started" and "provider run()" resolves to at-least-once dispatch with
+exactly-once effect for providers that survived (and clean re-execution for
+in-process providers that did not — the paper's model, where re-running an
+idempotent action is the recovery path).
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+import threading
+from typing import Any, Iterator
+
+
+class Journal:
+    """Append-only JSONL journal.  ``path=None`` keeps records in memory."""
+
+    def __init__(self, path: str | None = None, fsync: bool = False):
+        self.path = path
+        self.fsync = fsync
+        self._lock = threading.Lock()
+        self._memory: list[dict] = []
+        self._fh: io.TextIOBase | None = None
+        if path is not None:
+            os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+            self._fh = open(path, "a", encoding="utf-8")
+
+    def append(self, record: dict) -> None:
+        line = json.dumps(record, separators=(",", ":"), default=_jsonable)
+        with self._lock:
+            if self._fh is not None:
+                self._fh.write(line + "\n")
+                self._fh.flush()
+                if self.fsync:
+                    os.fsync(self._fh.fileno())
+            else:
+                self._memory.append(json.loads(line))
+
+    def records(self) -> Iterator[dict]:
+        with self._lock:
+            if self._fh is None:
+                yield from list(self._memory)
+                return
+            self._fh.flush()
+        assert self.path is not None
+        with open(self.path, encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if line:
+                    yield json.loads(line)
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+
+def _jsonable(obj: Any):
+    """Fallback serializer: keep the journal writable no matter the payload."""
+    try:
+        return dict(obj)
+    except Exception:
+        return repr(obj)
+
+
+class RunImage:
+    """Reconstructed view of one run from journal records."""
+
+    def __init__(self, run_id: str):
+        self.run_id = run_id
+        self.flow_id: str | None = None
+        self.input: Any = None
+        self.creator: str = "anonymous"
+        self.label: str = ""
+        self.status: str = "ACTIVE"
+        self.context: Any = None
+        self.current_state: str | None = None
+        self.attempt: int = 0
+        # outstanding action (if the run crashed mid-action)
+        self.action_id: str | None = None
+        self.action_provider: str | None = None
+        self.action_request_id: str | None = None
+        self.records: list[dict] = []
+
+    def apply(self, rec: dict) -> None:
+        self.records.append(rec)
+        kind = rec["type"]
+        if kind == "run_created":
+            self.flow_id = rec.get("flow_id")
+            self.input = rec.get("input")
+            self.creator = rec.get("creator", "anonymous")
+            self.label = rec.get("label", "")
+            self.context = rec.get("input")
+        elif kind == "state_entered":
+            self.current_state = rec["state"]
+            self.attempt = rec.get("attempt", 0)
+            self.action_id = None
+            self.action_provider = None
+            self.action_request_id = None
+            if "context" in rec:
+                self.context = rec["context"]
+        elif kind == "action_started":
+            self.action_id = rec.get("action_id")
+            self.action_provider = rec.get("provider_url")
+            self.action_request_id = rec.get("request_id")
+        elif kind == "action_completed":
+            self.action_id = None
+            self.action_provider = None
+            self.action_request_id = None
+        elif kind == "state_exited":
+            self.context = rec.get("context", self.context)
+            self.current_state = None
+        elif kind == "run_completed":
+            self.status = rec.get("status", "SUCCEEDED")
+            self.context = rec.get("context", self.context)
+        elif kind == "run_cancelled":
+            self.status = "CANCELLED"
+
+
+def replay(journal: Journal) -> dict[str, RunImage]:
+    """Group journal records into per-run images (ordered by appearance)."""
+    images: dict[str, RunImage] = {}
+    for rec in journal.records():
+        run_id = rec.get("run_id")
+        if run_id is None:
+            continue
+        image = images.get(run_id)
+        if image is None:
+            image = images[run_id] = RunImage(run_id)
+        image.apply(rec)
+    return images

@@ -1,0 +1,260 @@
+"""Safe Python-like expression language for trigger predicates/transforms.
+
+Paper §5.5: *"The predicate is a Boolean expression written in a Python-like
+syntax that may evaluate any properties of the incoming message"* and the
+action-input transformation uses the same syntax, e.g.::
+
+    predicate : filename.endswith(".tiff") and size > 1024
+    transform : number_of_files = len(files)
+
+We parse with :mod:`ast` and interpret a strict whitelist — no attribute
+access to dunders, no imports, no calls except whitelisted builtins and
+whitelisted methods on str/list/dict values.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Any, Mapping
+
+from .errors import AutomationError
+
+
+class PredicateError(AutomationError):
+    error_name = "PredicateError"
+
+
+_ALLOWED_BUILTINS: dict[str, Any] = {
+    "len": len,
+    "abs": abs,
+    "min": min,
+    "max": max,
+    "sum": sum,
+    "any": any,
+    "all": all,
+    "int": int,
+    "float": float,
+    "str": str,
+    "bool": bool,
+    "round": round,
+    "sorted": sorted,
+}
+
+_ALLOWED_METHODS: dict[type, set[str]] = {
+    str: {
+        "endswith", "startswith", "lower", "upper", "strip", "lstrip",
+        "rstrip", "split", "rsplit", "join", "replace", "find", "count",
+        "format", "title", "zfill", "isdigit", "isalpha",
+    },
+    list: {"count", "index", "copy"},
+    tuple: {"count", "index"},
+    dict: {"get", "keys", "values", "items", "copy"},
+}
+
+_MAX_DEPTH = 64
+
+
+class _Interp(ast.NodeVisitor):
+    def __init__(self, names: Mapping[str, Any]):
+        self.names = names
+        self.depth = 0
+
+    # -- helpers -----------------------------------------------------------
+    def visit(self, node):  # noqa: D102
+        self.depth += 1
+        if self.depth > _MAX_DEPTH:
+            raise PredicateError("expression too deeply nested")
+        try:
+            return super().visit(node)
+        finally:
+            self.depth -= 1
+
+    def generic_visit(self, node):  # noqa: D102
+        raise PredicateError(f"disallowed syntax: {type(node).__name__}")
+
+    # -- literals & names ---------------------------------------------------
+    def visit_Expression(self, node):
+        return self.visit(node.body)
+
+    def visit_Constant(self, node):
+        if isinstance(node.value, (str, int, float, bool, type(None))):
+            return node.value
+        raise PredicateError(f"disallowed constant {node.value!r}")
+
+    def visit_Name(self, node):
+        if node.id in self.names:
+            return self.names[node.id]
+        if node.id in _ALLOWED_BUILTINS:
+            return _ALLOWED_BUILTINS[node.id]
+        raise PredicateError(f"unknown name {node.id!r}")
+
+    def visit_List(self, node):
+        return [self.visit(e) for e in node.elts]
+
+    def visit_Tuple(self, node):
+        return tuple(self.visit(e) for e in node.elts)
+
+    def visit_Dict(self, node):
+        return {
+            self.visit(k): self.visit(v)
+            for k, v in zip(node.keys, node.values)
+        }
+
+    def visit_Set(self, node):
+        return {self.visit(e) for e in node.elts}
+
+    # -- operators ----------------------------------------------------------
+    def visit_BoolOp(self, node):
+        if isinstance(node.op, ast.And):
+            result = True
+            for v in node.values:
+                result = self.visit(v)
+                if not result:
+                    return result
+            return result
+        result = False
+        for v in node.values:
+            result = self.visit(v)
+            if result:
+                return result
+        return result
+
+    def visit_UnaryOp(self, node):
+        val = self.visit(node.operand)
+        if isinstance(node.op, ast.Not):
+            return not val
+        if isinstance(node.op, ast.USub):
+            return -val
+        if isinstance(node.op, ast.UAdd):
+            return +val
+        raise PredicateError("disallowed unary operator")
+
+    _BINOPS = {
+        ast.Add: lambda a, b: a + b,
+        ast.Sub: lambda a, b: a - b,
+        ast.Mult: lambda a, b: a * b,
+        ast.Div: lambda a, b: a / b,
+        ast.FloorDiv: lambda a, b: a // b,
+        ast.Mod: lambda a, b: a % b,
+        ast.Pow: lambda a, b: a ** b if abs(b) < 64 else _pow_guard(),
+    }
+
+    def visit_BinOp(self, node):
+        fn = self._BINOPS.get(type(node.op))
+        if fn is None:
+            raise PredicateError("disallowed binary operator")
+        return fn(self.visit(node.left), self.visit(node.right))
+
+    _CMPOPS = {
+        ast.Eq: lambda a, b: a == b,
+        ast.NotEq: lambda a, b: a != b,
+        ast.Lt: lambda a, b: a < b,
+        ast.LtE: lambda a, b: a <= b,
+        ast.Gt: lambda a, b: a > b,
+        ast.GtE: lambda a, b: a >= b,
+        ast.In: lambda a, b: a in b,
+        ast.NotIn: lambda a, b: a not in b,
+        ast.Is: lambda a, b: a is b,
+        ast.IsNot: lambda a, b: a is not b,
+    }
+
+    def visit_Compare(self, node):
+        left = self.visit(node.left)
+        for op, right_node in zip(node.ops, node.comparators):
+            right = self.visit(right_node)
+            fn = self._CMPOPS.get(type(op))
+            if fn is None:
+                raise PredicateError("disallowed comparison")
+            if not fn(left, right):
+                return False
+            left = right
+        return True
+
+    def visit_IfExp(self, node):
+        return self.visit(node.body) if self.visit(node.test) else self.visit(node.orelse)
+
+    # -- access & calls -------------------------------------------------------
+    def visit_Attribute(self, node):
+        if node.attr.startswith("_"):
+            raise PredicateError(f"disallowed attribute {node.attr!r}")
+        obj = self.visit(node.value)
+        if isinstance(obj, dict):
+            # message properties are dicts; allow dotted access sugar
+            if node.attr in obj:
+                return obj[node.attr]
+        for typ, allowed in _ALLOWED_METHODS.items():
+            if isinstance(obj, typ) and node.attr in allowed:
+                return getattr(obj, node.attr)
+        raise PredicateError(
+            f"attribute {node.attr!r} not allowed on {type(obj).__name__}"
+        )
+
+    def visit_Subscript(self, node):
+        obj = self.visit(node.value)
+        key = self.visit(node.slice)
+        try:
+            return obj[key]
+        except (KeyError, IndexError, TypeError) as e:
+            raise PredicateError(f"subscript failed: {e}") from None
+
+    def visit_Slice(self, node):
+        return slice(
+            self.visit(node.lower) if node.lower else None,
+            self.visit(node.upper) if node.upper else None,
+            self.visit(node.step) if node.step else None,
+        )
+
+    def visit_Call(self, node):
+        if node.keywords:
+            raise PredicateError("keyword arguments not allowed")
+        fn = self.visit(node.func)
+        args = [self.visit(a) for a in node.args]
+        if fn in _ALLOWED_BUILTINS.values():
+            return fn(*args)
+        # bound methods resolved by visit_Attribute
+        if callable(fn) and getattr(fn, "__self__", None) is not None:
+            return fn(*args)
+        raise PredicateError("call of non-whitelisted function")
+
+
+def _pow_guard():
+    raise PredicateError("exponent too large")
+
+
+def compile_expr(source: str) -> ast.Expression:
+    """Parse an expression once (reusable across many events)."""
+    try:
+        tree = ast.parse(source, mode="eval")
+    except SyntaxError as e:
+        raise PredicateError(f"syntax error in expression {source!r}: {e}") from None
+    return tree
+
+
+def evaluate(source_or_tree: str | ast.Expression, names: Mapping[str, Any]) -> Any:
+    """Evaluate an expression against event/message properties."""
+    tree = (
+        compile_expr(source_or_tree)
+        if isinstance(source_or_tree, str)
+        else source_or_tree
+    )
+    return _Interp(names).visit(tree)
+
+
+def matches(predicate: str | ast.Expression, message: Mapping[str, Any]) -> bool:
+    """Evaluate a trigger predicate; any error -> no match (event discarded)."""
+    try:
+        return bool(evaluate(predicate, message))
+    except PredicateError:
+        return False
+
+
+def transform(assignments: Mapping[str, str], message: Mapping[str, Any]) -> dict:
+    """Build an action input from a message (paper §5.5 transformation).
+
+    ``assignments`` maps output parameter names to expressions over the
+    message, e.g. ``{"number_of_files": "len(files)"}``.
+    """
+    out = {}
+    for name, expr in assignments.items():
+        out[name] = evaluate(expr, message)
+    return out

@@ -1,0 +1,296 @@
+"""The Queues service (paper §5.4).
+
+Reliable, secure delivery of messages from senders to receivers with:
+
+* **at-least-once** semantics — a received message carries a receipt; only an
+  acknowledgement bearing that receipt removes the message; unacknowledged
+  messages are redelivered after a visibility timeout;
+* **in-order** delivery — messages become receivable in send order;
+* **deferred delivery** — a send may specify a delay (SQS-style), which is
+  how the paper's action queue implements polling backoff;
+* **role-based access** — Administrator / Sender / Receiver roles per queue;
+* optional JSONL **persistence** so queues survive restarts.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import secrets
+import threading
+from dataclasses import dataclass, field
+from typing import Any
+
+from .auth import Caller, principal_matches
+from .clock import Clock, RealClock
+from .errors import Forbidden, NotFound, QueueInvariantError
+
+DEFAULT_VISIBILITY_TIMEOUT = 30.0
+
+
+@dataclass
+class _Message:
+    message_id: str
+    body: Any
+    attributes: dict
+    sent_at: float
+    deliver_after: float
+    sender: str
+    receive_count: int = 0
+    # invisible until this time while a receipt is outstanding
+    invisible_until: float = 0.0
+    receipt: str | None = None
+    acked: bool = False
+
+
+@dataclass
+class Queue:
+    queue_id: str
+    label: str
+    admins: list[str] = field(default_factory=list)
+    senders: list[str] = field(default_factory=list)
+    receivers: list[str] = field(default_factory=list)
+    visibility_timeout: float = DEFAULT_VISIBILITY_TIMEOUT
+    messages: list[_Message] = field(default_factory=list)
+    delivered: int = 0
+    lock: threading.RLock = field(default_factory=threading.RLock)
+
+
+class QueueService:
+    """In-process Queues service with SQS-compatible semantics."""
+
+    def __init__(
+        self,
+        clock: Clock | None = None,
+        auth=None,
+        persist_path: str | None = None,
+    ):
+        self.clock = clock or RealClock()
+        self.auth = auth
+        self._queues: dict[str, Queue] = {}
+        self._lock = threading.RLock()
+        self.persist_path = persist_path
+        if persist_path and os.path.exists(persist_path):
+            self._load()
+
+    # -- queue management -----------------------------------------------------
+    def create_queue(
+        self,
+        label: str,
+        admins: list[str] | None = None,
+        senders: list[str] | None = None,
+        receivers: list[str] | None = None,
+        visibility_timeout: float = DEFAULT_VISIBILITY_TIMEOUT,
+        caller: Caller | None = None,
+    ) -> Queue:
+        creator = caller.identity.username if caller else "anonymous"
+        q = Queue(
+            queue_id="q-" + secrets.token_hex(8),
+            label=label,
+            admins=admins or [f"user:{creator}"],
+            senders=senders or [f"user:{creator}"],
+            receivers=receivers or [f"user:{creator}"],
+            visibility_timeout=visibility_timeout,
+        )
+        with self._lock:
+            self._queues[q.queue_id] = q
+        self._persist()
+        return q
+
+    def delete_queue(self, queue_id: str, caller: Caller | None = None) -> None:
+        q = self._queue(queue_id)
+        self._require_role(q, q.admins, caller, "Administrator")
+        with self._lock:
+            del self._queues[queue_id]
+        self._persist()
+
+    def update_queue(
+        self, queue_id: str, caller: Caller | None = None, **updates
+    ) -> Queue:
+        q = self._queue(queue_id)
+        self._require_role(q, q.admins, caller, "Administrator")
+        with q.lock:
+            for key in ("label", "admins", "senders", "receivers", "visibility_timeout"):
+                if key in updates:
+                    setattr(q, key, updates[key])
+        self._persist()
+        return q
+
+    def queues(self) -> list[Queue]:
+        with self._lock:
+            return list(self._queues.values())
+
+    # -- messaging ----------------------------------------------------------------
+    def send(
+        self,
+        queue_id: str,
+        body: Any,
+        attributes: dict | None = None,
+        delay: float = 0.0,
+        caller: Caller | None = None,
+    ) -> str:
+        q = self._queue(queue_id)
+        self._require_role(q, q.senders, caller, "Sender")
+        now = self.clock.now()
+        msg = _Message(
+            message_id="msg-" + secrets.token_hex(8),
+            body=body,
+            attributes=dict(attributes or {}),
+            sent_at=now,
+            deliver_after=now + max(0.0, delay),
+            sender=caller.identity.username if caller else "anonymous",
+        )
+        with q.lock:
+            q.messages.append(msg)
+        self._persist()
+        return msg.message_id
+
+    def receive(
+        self,
+        queue_id: str,
+        max_messages: int = 1,
+        visibility_timeout: float | None = None,
+        caller: Caller | None = None,
+    ) -> list[dict]:
+        """Receive up to ``max_messages`` in send order.
+
+        In-order guarantee: a message is only receivable if every earlier
+        message has been acknowledged or is currently invisible (i.e. being
+        processed) — FIFO-queue semantics.
+        """
+        q = self._queue(queue_id)
+        self._require_role(q, q.receivers, caller, "Receiver")
+        now = self.clock.now()
+        timeout = visibility_timeout or q.visibility_timeout
+        out: list[dict] = []
+        with q.lock:
+            for msg in q.messages:
+                if len(out) >= max_messages:
+                    break
+                if msg.acked:
+                    continue
+                if msg.deliver_after > now:
+                    break  # preserve order: later messages must wait too
+                if msg.invisible_until > now:
+                    continue  # outstanding receipt; skip but allow next
+                msg.receipt = "rcpt-" + secrets.token_hex(8)
+                msg.invisible_until = now + timeout
+                msg.receive_count += 1
+                q.delivered += 1
+                out.append(
+                    {
+                        "message_id": msg.message_id,
+                        "receipt": msg.receipt,
+                        "body": msg.body,
+                        "attributes": msg.attributes,
+                        "receive_count": msg.receive_count,
+                    }
+                )
+        if out:
+            self._persist()
+        return out
+
+    def ack(self, queue_id: str, receipt: str, caller: Caller | None = None) -> None:
+        q = self._queue(queue_id)
+        self._require_role(q, q.receivers, caller, "Receiver")
+        now = self.clock.now()
+        with q.lock:
+            for msg in q.messages:
+                if msg.receipt == receipt and not msg.acked:
+                    if msg.invisible_until <= now:
+                        raise QueueInvariantError(
+                            "receipt expired; message may have been redelivered"
+                        )
+                    msg.acked = True
+                    self._gc(q)
+                    self._persist()
+                    return
+        raise QueueInvariantError(f"unknown or already-acked receipt {receipt!r}")
+
+    def depth(self, queue_id: str) -> int:
+        q = self._queue(queue_id)
+        with q.lock:
+            return sum(1 for m in q.messages if not m.acked)
+
+    # -- internals ---------------------------------------------------------------
+    def _gc(self, q: Queue) -> None:
+        while q.messages and q.messages[0].acked:
+            q.messages.pop(0)
+
+    def _queue(self, queue_id: str) -> Queue:
+        with self._lock:
+            q = self._queues.get(queue_id)
+        if q is None:
+            raise NotFound(f"unknown queue {queue_id!r}")
+        return q
+
+    def _require_role(
+        self, q: Queue, principals: list[str], caller: Caller | None, role: str
+    ) -> None:
+        if self.auth is None:
+            return
+        identity = caller.identity if caller else None
+        if identity is None or not any(
+            principal_matches(identity, p) for p in principals
+        ):
+            who = identity.username if identity else "anonymous"
+            raise Forbidden(f"{who} lacks {role} role on queue {q.queue_id}")
+
+    def _persist(self) -> None:
+        if not self.persist_path:
+            return
+        with self._lock:
+            doc = [
+                {
+                    "queue_id": q.queue_id,
+                    "label": q.label,
+                    "admins": q.admins,
+                    "senders": q.senders,
+                    "receivers": q.receivers,
+                    "visibility_timeout": q.visibility_timeout,
+                    "messages": [
+                        {
+                            "message_id": m.message_id,
+                            "body": m.body,
+                            "attributes": m.attributes,
+                            "sent_at": m.sent_at,
+                            "deliver_after": m.deliver_after,
+                            "sender": m.sender,
+                            "receive_count": m.receive_count,
+                        }
+                        for m in q.messages
+                        if not m.acked
+                    ],
+                }
+                for q in self._queues.values()
+            ]
+        tmp = self.persist_path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump(doc, fh)
+        os.replace(tmp, self.persist_path)
+
+    def _load(self) -> None:
+        with open(self.persist_path) as fh:
+            doc = json.load(fh)
+        for qd in doc:
+            q = Queue(
+                queue_id=qd["queue_id"],
+                label=qd["label"],
+                admins=qd["admins"],
+                senders=qd["senders"],
+                receivers=qd["receivers"],
+                visibility_timeout=qd["visibility_timeout"],
+            )
+            for md in qd["messages"]:
+                q.messages.append(
+                    _Message(
+                        message_id=md["message_id"],
+                        body=md["body"],
+                        attributes=md["attributes"],
+                        sent_at=md["sent_at"],
+                        deliver_after=md["deliver_after"],
+                        sender=md["sender"],
+                        receive_count=md["receive_count"],
+                    )
+                )
+            self._queues[q.queue_id] = q

@@ -1,0 +1,173 @@
+"""The Triggers service (paper §5.5).
+
+A trigger binds: a **queue** (event source), a **predicate** over message
+properties, an **action/flow** to invoke on match, and a **transformation**
+building the action input from the message.  While enabled, the service polls
+the queue with an adaptive interval — "increasing the polling interval when no
+messages are available and decreasing the interval when one or more messages
+are received" — evaluates predicates, invokes the flow with the enabling
+user's delegated tokens, and tracks invoked runs to completion, caching
+recent results and statistics.
+"""
+
+from __future__ import annotations
+
+import secrets
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from . import predicate as predlang
+from .auth import Caller
+from .clock import Clock, RealClock
+from .engine import Scheduler
+from .errors import NotFound
+from .queues import QueueService
+
+
+@dataclass
+class TriggerConfig:
+    queue_id: str
+    predicate: str
+    action_invoker: Callable[[dict, Caller | None], str]
+    """Invoked with (action_input, caller) -> run/action id."""
+    transform: dict[str, str] = field(default_factory=dict)
+    """Output parameter name -> expression over message properties."""
+    poll_min_s: float = 0.5
+    poll_max_s: float = 30.0
+    batch: int = 10
+
+
+@dataclass
+class Trigger:
+    trigger_id: str
+    config: TriggerConfig
+    owner: str = "anonymous"
+    enabled: bool = False
+    caller: Caller | None = None
+    interval: float = 1.0
+    stats: dict = field(
+        default_factory=lambda: {
+            "polls": 0,
+            "events": 0,
+            "matched": 0,
+            "discarded": 0,
+            "invocations": 0,
+            "errors": 0,
+        }
+    )
+    recent_results: list[Any] = field(default_factory=list)
+    _compiled: Any = None
+
+
+class TriggerService:
+    """Polls queues, filters events, invokes flows."""
+
+    def __init__(
+        self,
+        queues: QueueService,
+        clock: Clock | None = None,
+        scheduler: Scheduler | None = None,
+    ):
+        self.queues = queues
+        self.clock = clock or RealClock()
+        self.scheduler = scheduler or Scheduler(self.clock)
+        self._triggers: dict[str, Trigger] = {}
+        self._lock = threading.RLock()
+
+    def create_trigger(
+        self, config: TriggerConfig, owner: str = "anonymous"
+    ) -> Trigger:
+        trig = Trigger(
+            trigger_id="trig-" + secrets.token_hex(8),
+            config=config,
+            owner=owner,
+            interval=config.poll_min_s,
+        )
+        trig._compiled = predlang.compile_expr(config.predicate)
+        with self._lock:
+            self._triggers[trig.trigger_id] = trig
+        return trig
+
+    def get(self, trigger_id: str) -> Trigger:
+        with self._lock:
+            trig = self._triggers.get(trigger_id)
+        if trig is None:
+            raise NotFound(f"unknown trigger {trigger_id!r}")
+        return trig
+
+    def enable(self, trigger_id: str, caller: Caller | None = None) -> None:
+        """Enable the trigger with the enabling user's delegated tokens.
+
+        Paper: "the user must provide an access token that includes two
+        dependent scopes: the Queues receive-message scope and the scope for
+        running the action" — the ``caller`` wallet carries both here.
+        """
+        trig = self.get(trigger_id)
+        with self._lock:
+            trig.enabled = True
+            trig.caller = caller
+            trig.interval = trig.config.poll_min_s
+        self.scheduler.submit(lambda: self._poll(trig))
+
+    def disable(self, trigger_id: str) -> None:
+        trig = self.get(trigger_id)
+        with self._lock:
+            trig.enabled = False
+
+    # -- polling loop -----------------------------------------------------------
+    def _poll(self, trig: Trigger) -> None:
+        with self._lock:
+            if not trig.enabled:
+                return
+        trig.stats["polls"] += 1
+        try:
+            messages = self.queues.receive(
+                trig.config.queue_id,
+                max_messages=trig.config.batch,
+                caller=trig.caller,
+            )
+        except NotFound:
+            with self._lock:
+                trig.enabled = False
+            return
+        for m in messages:
+            self._handle(trig, m)
+        with self._lock:
+            if messages:
+                trig.interval = trig.config.poll_min_s
+            else:
+                trig.interval = min(trig.interval * 2.0, trig.config.poll_max_s)
+            if not trig.enabled:
+                return
+            interval = trig.interval
+        self.scheduler.call_later(interval, lambda: self._poll(trig))
+
+    def _handle(self, trig: Trigger, message: dict) -> None:
+        trig.stats["events"] += 1
+        props = message["body"] if isinstance(message["body"], dict) else {
+            "body": message["body"]
+        }
+        if not predlang.matches(trig._compiled, props):
+            trig.stats["discarded"] += 1
+            self.queues.ack(trig.config.queue_id, message["receipt"], trig.caller)
+            return
+        trig.stats["matched"] += 1
+        try:
+            action_input = predlang.transform(trig.config.transform, props)
+        except predlang.PredicateError as e:
+            trig.stats["errors"] += 1
+            trig.recent_results.append({"error": str(e)})
+            self.queues.ack(trig.config.queue_id, message["receipt"], trig.caller)
+            return
+        try:
+            run_id = trig.config.action_invoker(action_input, trig.caller)
+            trig.stats["invocations"] += 1
+            trig.recent_results.append({"run_id": run_id, "input": action_input})
+            if len(trig.recent_results) > 100:
+                trig.recent_results.pop(0)
+        except Exception as e:
+            trig.stats["errors"] += 1
+            trig.recent_results.append({"error": repr(e)})
+        # ack only after successful handoff (at-least-once into the flow)
+        self.queues.ack(trig.config.queue_id, message["receipt"], trig.caller)

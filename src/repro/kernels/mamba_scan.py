@@ -1,0 +1,113 @@
+"""Chunked selective-scan (SSD) Pallas TPU kernel.
+
+TPU adaptation of Mamba2's GPU scan: instead of warp-parallel prefix scans,
+the sequence is tiled into chunks; each grid step processes one chunk with
+dense MXU matmuls (intra-chunk quadratic term + state in/out projections)
+and carries the [P, N] SSM state in VMEM scratch across the sequentially-
+executed chunk axis.
+
+grid = (batch, heads, chunks) — chunks innermost (sequential carry).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _mamba_kernel(
+    x_ref,      # (1, Q, 1, P)
+    dt_ref,     # (1, Q, 1)
+    a_ref,      # (1,)
+    b_ref,      # (1, Q, N)
+    c_ref,      # (1, Q, N)
+    y_ref,      # (1, Q, 1, P) out
+    h_ref,      # scratch: (P, N) f32 carried state
+    *,
+    chunk: int,
+):
+    jc = pl.program_id(2)
+
+    @pl.when(jc == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)       # [Q, P]
+    dt = dt_ref[0, :, :].astype(jnp.float32)        # [Q, 1]
+    A = a_ref[0].astype(jnp.float32)                # scalar
+    Bm = b_ref[0].astype(jnp.float32)               # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)               # [Q, N]
+
+    a = dt * A                                       # [Q,1] log-decay
+    cum = jnp.cumsum(a, axis=0)                      # [Q,1]
+    a_total = cum[-1, 0]
+
+    # intra-chunk quadratic term
+    CB = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                # [Q,Q] C_t·B_s
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = t_idx >= s_idx
+    diff = cum[:, 0][:, None] - cum[:, 0][None, :]   # [Q,Q]
+    decay = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+    W = CB * decay * dt[:, 0][None, :]               # dt applied at source s
+    y = jax.lax.dot_general(
+        W, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                # [Q,P]
+
+    # inter-chunk contribution from the carried state
+    h = h_ref[...]                                   # [P,N]
+    y += jnp.exp(cum) * jax.lax.dot_general(
+        Cm, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                # [Q,P]
+
+    # state update: h' = exp(a_total) h + sum_s w_s x_s ⊗ B_s
+    w_state = jnp.exp(a_total - cum[:, 0]) * dt[:, 0]   # [Q]
+    xw = x * w_state[:, None]                        # [Q,P]
+    h_ref[...] = jnp.exp(a_total) * h + jax.lax.dot_general(
+        xw, Bm, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                # [P,N]
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba_scan(
+    xh: jnp.ndarray,   # [B, S, H, P]
+    dt: jnp.ndarray,   # [B, S, H] (softplus'd)
+    A: jnp.ndarray,    # [H] (negative)
+    Bm: jnp.ndarray,   # [B, S, N]
+    Cm: jnp.ndarray,   # [B, S, N]
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        raise ValueError(f"S={S} must tile by chunk={chunk}")
+    nc = S // chunk
+
+    kernel = functools.partial(_mamba_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, P), xh.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xh, dt, A, Bm, Cm)

@@ -1,0 +1,80 @@
+"""Grouped matmul (expert FFN) Pallas TPU kernel.
+
+The TPU analogue of the CUTLASS grouped GEMM used by GPU MoE stacks: one
+blocked matmul per expert over its dispatched [C, D] token slab, with
+MXU-aligned tiles and a VMEM accumulator across the K (reduction) grid axis.
+Capacity-based dispatch (repro.models.moe) guarantees equal per-expert slab
+shapes, so the "grouped" matmul is a uniform grid — no ragged bookkeeping,
+which is exactly why the capacity formulation is the TPU-native choice.
+
+grid = (groups·experts, C-blocks, F-blocks, D-blocks); D innermost.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 128
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k_blocks: int):
+    kd = pl.program_id(3)
+
+    @pl.when(kd == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)   # [Bc, Bd]
+    w = w_ref[0].astype(jnp.float32)   # [Bd, Bf]
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kd == n_k_blocks - 1)
+    def _finish():
+        o_ref[0, ...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "block_d", "interpret")
+)
+def gmm(
+    x: jnp.ndarray,   # [E, C, D] dispatched tokens per expert
+    w: jnp.ndarray,   # [E, D, F] per-expert weights
+    block_c: int = DEFAULT_BLOCK,
+    block_f: int = DEFAULT_BLOCK,
+    block_d: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    E, C, D = x.shape
+    Ew, Dw, F = w.shape
+    block_c = min(block_c, C)
+    block_f = min(block_f, F)
+    block_d = min(block_d, D)
+    if C % block_c or F % block_f or D % block_d:
+        raise ValueError(f"dims ({C},{F},{D}) must tile by blocks")
+    n_k = D // block_d
+
+    kernel = functools.partial(_gmm_kernel, n_k_blocks=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, C // block_c, F // block_f, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d), lambda e, ic, jf, kd: (e, ic, kd)),
+            pl.BlockSpec(
+                (1, block_d, block_f),
+                lambda e, ic, jf, kd: (e % Ew, kd, jf),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_c, block_f), lambda e, ic, jf, kd: (e, ic, jf)
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

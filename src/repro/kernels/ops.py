@@ -1,0 +1,66 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+On a machine without TPUs the kernels run in ``interpret=True`` mode (the
+kernel body executes in Python on CPU) — numerically identical, so the same
+tests validate what will run compiled on TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import mamba_scan as _ms
+from repro.kernels import moe_gmm as _gmm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, causal=True, window=None, logit_softcap=None,
+                    block_q=None, block_k=None):
+    S, T = q.shape[1], k.shape[1]
+    bq = block_q or min(_fa.DEFAULT_BLOCK_Q, S)
+    bk = block_k or min(_fa.DEFAULT_BLOCK_K, T)
+    # shrink to a divisor if the sequence doesn't tile
+    while S % bq:
+        bq //= 2
+    while T % bk:
+        bk //= 2
+    return _fa.flash_attention(
+        q, k, v,
+        causal=causal, window=window, logit_softcap=logit_softcap,
+        block_q=max(bq, 1), block_k=max(bk, 1),
+        interpret=_interpret(),
+    )
+
+
+def mamba_scan(xh, dt, A, Bm, Cm, chunk=None):
+    S = xh.shape[1]
+    c = chunk or min(_ms.DEFAULT_CHUNK, S)
+    while S % c:
+        c //= 2
+    return _ms.mamba_scan(xh, dt, A, Bm, Cm, chunk=max(c, 1),
+                          interpret=_interpret())
+
+
+def gmm(x, w, **kw):
+    return _gmm.gmm(x, w, interpret=_interpret(), **kw)
+
+
+def moe_expert_mlp(expert_in: jnp.ndarray, experts: dict, cfg) -> jnp.ndarray:
+    """SwiGLU expert FFN via grouped matmuls.  expert_in [(G,)E,C,D]."""
+    squeeze = expert_in.ndim == 3
+    if squeeze:
+        expert_in = expert_in[None]
+    G, E, C, D = expert_in.shape
+    x = expert_in.reshape(G * E, C, D)
+    w_gate = experts["gate"].astype(x.dtype)
+    w_up = experts["up"].astype(x.dtype)
+    w_down = experts["down"].astype(x.dtype)
+    h = jax.nn.silu(gmm(x, w_gate)) * gmm(x, w_up)
+    out = gmm(h, w_down)
+    out = out.reshape(G, E, C, D)
+    return out[0] if squeeze else out

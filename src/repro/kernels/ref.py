@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [B, S, H, D]
+    k: jnp.ndarray,  # [B, T, K, D]
+    v: jnp.ndarray,  # [B, T, K, D]
+    causal: bool = True,
+    window: int | None = None,
+    logit_softcap: float | None = None,
+) -> jnp.ndarray:
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    if logit_softcap:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def mamba_scan_ref(xh, dt, A, Bm, Cm, h0=None):
+    """Literal sequential SSD recurrence (fori_loop for larger shapes)."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    h_init = (
+        h0.astype(f32) if h0 is not None else jnp.zeros((Bsz, H, P, N), f32)
+    )
+
+    def step(carry, t):
+        h = carry
+        decay = jnp.exp(dt[:, t].astype(f32) * A[None, :].astype(f32))
+        dBx = jnp.einsum(
+            "bh,bn,bhp->bhpn",
+            dt[:, t].astype(f32), Bm[:, t].astype(f32), xh[:, t].astype(f32),
+        )
+        h = decay[..., None, None] * h + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, t].astype(f32), h)
+        return h, y
+
+    h_final, ys = jax.lax.scan(step, h_init, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), h_final
+
+
+def gmm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Grouped (per-expert) matmul: [E,C,D] x [E,D,F] -> [E,C,F]."""
+    return jnp.einsum(
+        "ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def expert_mlp_ref(x: jnp.ndarray, experts: dict) -> jnp.ndarray:
+    """SwiGLU expert FFN over dispatched tokens [(G,)E,C,D]."""
+    squeeze = x.ndim == 3
+    if squeeze:
+        x = x[None]
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", x, experts["gate"].astype(x.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", x, experts["up"].astype(x.dtype))
+    out = jnp.einsum("gecf,efd->gecd", h, experts["down"].astype(x.dtype))
+    return out[0] if squeeze else out

@@ -1,0 +1,39 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches JAX device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any JAX
+initialization, and everything else (smoke tests, benches) sees the real
+single device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+#: TPU v5e hardware constants (per chip) used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BANDWIDTH = 819e9           # B/s
+ICI_LINK_BANDWIDTH = 50e9       # B/s per link
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh helper (tests, elastic rescale demos)."""
+    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=_auto(len(axes)))
+
+
+def mesh_chip_count(mesh) -> int:
+    n = 1
+    for d in mesh.devices.shape:
+        n *= d
+    return n

@@ -1,0 +1,2 @@
+"""Model zoo substrate: config-driven JAX implementations of the assigned
+architectures (dense / MoE / SSM / hybrid / enc-dec / VLM)."""

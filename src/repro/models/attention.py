@@ -1,0 +1,201 @@
+"""Grouped-query attention with RoPE, causal/sliding-window masking, KV
+caches for decode, and cross-attention (enc-dec).
+
+Two implementations:
+
+* ``xla``   — einsum + softmax; used for SPMD dry-run lowering and smoke
+  tests (fully partitionable by XLA's SPMD partitioner);
+* ``flash`` — the Pallas TPU kernel (:mod:`repro.kernels`), online-softmax
+  blocked attention; numerically validated against the reference in
+  interpret mode (this container is CPU-only).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.sharding import shard
+
+
+def init_attention(cfg: ModelConfig, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    return {
+        "wq": L.init_dense(d, cfg.n_heads * hd, ("embed", "qkv"), cfg.use_qkv_bias),
+        "wk": L.init_dense(d, cfg.n_kv_heads * hd, ("embed", "qkv"), cfg.use_qkv_bias),
+        "wv": L.init_dense(d, cfg.n_kv_heads * hd, ("embed", "qkv"), cfg.use_qkv_bias),
+        "wo": L.init_dense(cfg.n_heads * hd, d, ("qkv", "embed"), cfg.use_bias,
+                           scale=1.0),
+    }
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+def _merge_heads(x):
+    return x.reshape(x.shape[:-2] + (-1,))
+
+
+def attend_xla(
+    q: jnp.ndarray,  # [B, S, H, D]
+    k: jnp.ndarray,  # [B, T, K, D]
+    v: jnp.ndarray,  # [B, T, K, D]
+    *,
+    causal: bool,
+    q_positions: jnp.ndarray | None = None,  # [B, S] or [S]
+    kv_positions: jnp.ndarray | None = None,  # [B, T] or [T]
+    kv_valid: jnp.ndarray | None = None,  # [B, T] bool — cache validity
+    window: int | None = None,
+    logit_softcap: float | None = None,
+) -> jnp.ndarray:
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, D)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32)
+    )
+    scores = scores / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    if logit_softcap:
+        scores = logit_softcap * jnp.tanh(scores / logit_softcap)
+
+    mask = None
+    if causal or window is not None or kv_valid is not None:
+        if q_positions is None:
+            q_positions = jnp.arange(S)
+        if kv_positions is None:
+            kv_positions = jnp.arange(T)
+        qp = jnp.asarray(q_positions)
+        kp = jnp.asarray(kv_positions)
+        if qp.ndim == 1:
+            qp = jnp.broadcast_to(qp[None, :], (B, S))
+        if kp.ndim == 1:
+            kp = jnp.broadcast_to(kp[None, :], (B, T))
+        ok = jnp.ones((B, S, T), dtype=bool)
+        if causal:
+            ok &= kp[:, None, :] <= qp[:, :, None]
+        if window is not None:
+            ok &= (qp[:, :, None] - kp[:, None, :]) < window
+        if kv_valid is not None:
+            ok &= kv_valid[:, None, :]
+        mask = ok[:, None, None, :, :]  # [B,1,1,S,T]
+
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(B, S, H, D)
+
+
+def attend(cfg: ModelConfig, q, k, v, **kw) -> jnp.ndarray:
+    if cfg.attention_impl == "flash" and kw.get("kv_valid") is None:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.flash_attention(
+            q, k, v,
+            causal=kw.get("causal", True),
+            window=kw.get("window"),
+            logit_softcap=kw.get("logit_softcap"),
+        )
+    return attend_xla(q, k, v, **kw)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                  d_model: int | None = None):
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def kv_cache_axes():
+    return {
+        "k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+        "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+    }
+
+
+def apply_attention(
+    params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                     # [B, S, D_model]
+    positions: jnp.ndarray,             # [S] or [B, S]
+    *,
+    causal: bool = True,
+    use_rope: bool = True,
+    cache: dict | None = None,          # decode: KV cache for this layer
+    cache_position: jnp.ndarray | None = None,  # scalar: write offset
+    window: int | None = None,
+) -> tuple[jnp.ndarray, dict | None]:
+    """Self-attention (train/prefill/decode).  Returns (out, updated_cache)."""
+    hd = cfg.resolved_head_dim
+    q = _split_heads(L.apply_dense(params["wq"], x), cfg.n_heads, hd)
+    k = _split_heads(L.apply_dense(params["wk"], x), cfg.n_kv_heads, hd)
+    v = _split_heads(L.apply_dense(params["wv"], x), cfg.n_kv_heads, hd)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+    if use_rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # write new K/V at cache_position, attend over the whole cache
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_position, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_position, 1)
+        new_cache = {"k": ck, "v": cv}
+        T = ck.shape[1]
+        kv_pos = jnp.arange(T)
+        q_pos = positions if positions.ndim else positions[None]
+        valid = (kv_pos[None, :] < cache_position + x.shape[1])
+        valid = jnp.broadcast_to(valid, (x.shape[0], T))
+        out = attend_xla(
+            q, ck, cv,
+            causal=True,
+            q_positions=positions,
+            kv_positions=kv_pos,
+            kv_valid=valid,
+            window=window,
+            logit_softcap=cfg.attn_logit_softcap,
+        )
+    else:
+        out = attend(
+            cfg, q, k, v,
+            causal=causal,
+            q_positions=positions,
+            kv_positions=positions,
+            window=window,
+            logit_softcap=cfg.attn_logit_softcap,
+        )
+    out = shard(out, "batch", "seq", "heads", "head_dim")
+    return L.apply_dense(params["wo"], _merge_heads(out)), new_cache
+
+
+def init_cross_attention(cfg: ModelConfig):
+    return init_attention(cfg)
+
+
+def apply_cross_attention(
+    params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,             # [B, S_dec, D]
+    enc_kv: dict,               # precomputed {"k","v"}: [B, S_enc, K, D]
+) -> jnp.ndarray:
+    hd = cfg.resolved_head_dim
+    q = _split_heads(L.apply_dense(params["wq"], x), cfg.n_heads, hd)
+    out = attend_xla(q, enc_kv["k"], enc_kv["v"], causal=False)
+    return L.apply_dense(params["wo"], _merge_heads(out))
+
+
+def precompute_cross_kv(params, cfg: ModelConfig, enc_out: jnp.ndarray) -> dict:
+    hd = cfg.resolved_head_dim
+    k = _split_heads(L.apply_dense(params["wk"], enc_out), cfg.n_kv_heads, hd)
+    v = _split_heads(L.apply_dense(params["wv"], enc_out), cfg.n_kv_heads, hd)
+    return {"k": k, "v": v}

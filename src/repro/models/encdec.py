@@ -1,0 +1,186 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/log-mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings [B, S_enc, d_model] (what the two conv
+layers would emit).  Encoder: bidirectional attention + sinusoidal positions.
+Decoder: causal self-attention (learned positions, capped at
+``max_target_positions`` = 448) + cross-attention to the encoder output.
+Decode serves one token against a self-KV cache (≤448) and a cross-KV cache
+over the full encoder sequence — the long-audio serving shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models.layers import ParamSpec
+from repro.models.transformer import _remat, scan_layers, stack_specs
+from repro.parallel.sharding import shard
+
+
+def sinusoidal_positions(length: int, dim: int) -> jnp.ndarray:
+    log_timescale = jnp.log(10_000.0) / (dim // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(dim // 2, dtype=jnp.float32))
+    scaled = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+def init_encoder_block(cfg: ModelConfig):
+    return {
+        "attn_norm": L.init_norm(cfg.d_model, "layernorm", True),
+        "attn": attn.init_attention(cfg),
+        "mlp_norm": L.init_norm(cfg.d_model, "layernorm", True),
+        "mlp": L.init_mlp(cfg.d_model, cfg.d_ff, "gelu", True),
+    }
+
+
+def init_decoder_block(cfg: ModelConfig):
+    return {
+        "self_norm": L.init_norm(cfg.d_model, "layernorm", True),
+        "self_attn": attn.init_attention(cfg),
+        "cross_norm": L.init_norm(cfg.d_model, "layernorm", True),
+        "cross_attn": attn.init_cross_attention(cfg),
+        "mlp_norm": L.init_norm(cfg.d_model, "layernorm", True),
+        "mlp": L.init_mlp(cfg.d_model, cfg.d_ff, "gelu", True),
+    }
+
+
+def init_encdec(cfg: ModelConfig):
+    return {
+        "embed": L.init_embedding(cfg.vocab_size, cfg.d_model),
+        "pos_embed": ParamSpec(
+            (cfg.max_target_positions, cfg.d_model), (None, "embed"), scale=1.0
+        ),
+        "encoder": stack_specs(init_encoder_block(cfg), cfg.n_encoder_layers),
+        "enc_final_norm": L.init_norm(cfg.d_model, "layernorm", True),
+        "decoder": stack_specs(init_decoder_block(cfg), cfg.n_layers),
+        "dec_final_norm": L.init_norm(cfg.d_model, "layernorm", True),
+    }
+
+
+def _enc_block(p, cfg, x):
+    h = L.apply_norm(p["attn_norm"], x, "layernorm", cfg.norm_eps)
+    out, _ = attn.apply_attention(
+        p["attn"], cfg, h, jnp.arange(x.shape[1]), causal=False, use_rope=False
+    )
+    x = x + out
+    h = L.apply_norm(p["mlp_norm"], x, "layernorm", cfg.norm_eps)
+    x = x + L.apply_mlp(p["mlp"], h, "gelu")
+    return shard(x, "batch", "seq", "embed")
+
+
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames [B, S_enc, D] — stub frontend output."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    x = shard(x, "batch", "seq", "embed")
+
+    def body(x, p):
+        return _enc_block(p, cfg, x), None
+
+    x, _ = scan_layers(cfg, _remat(body, cfg), x, params["encoder"])
+    return L.apply_norm(params["enc_final_norm"], x, "layernorm", cfg.norm_eps)
+
+
+def _dec_block(p, cfg, x, positions, enc_kv, self_cache=None, cache_position=None):
+    h = L.apply_norm(p["self_norm"], x, "layernorm", cfg.norm_eps)
+    out, new_cache = attn.apply_attention(
+        p["self_attn"], cfg, h, positions, causal=True, use_rope=False,
+        cache=self_cache, cache_position=cache_position,
+    )
+    x = x + out
+    h = L.apply_norm(p["cross_norm"], x, "layernorm", cfg.norm_eps)
+    x = x + attn.apply_cross_attention(p["cross_attn"], cfg, h, enc_kv)
+    h = L.apply_norm(p["mlp_norm"], x, "layernorm", cfg.norm_eps)
+    x = x + L.apply_mlp(p["mlp"], h, "gelu")
+    return shard(x, "batch", "seq", "embed"), new_cache
+
+
+def _dec_embed(params, cfg, tokens, position0):
+    x = L.apply_embedding(params["embed"], tokens, jnp.dtype(cfg.compute_dtype))
+    pos = params["pos_embed"].astype(x.dtype)
+    pos_slice = jax.lax.dynamic_slice_in_dim(pos, position0, tokens.shape[1], 0)
+    return shard(x + pos_slice[None], "batch", "seq", "embed")
+
+
+def forward_encdec(params, cfg: ModelConfig, frames, tokens):
+    """Training forward.  Returns (decoder logits, aux=0)."""
+    enc_out = encode(params, cfg, frames)
+    x = _dec_embed(params, cfg, tokens, 0)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, p):
+        enc_kv = attn.precompute_cross_kv(p["cross_attn"], cfg, enc_out)
+        x, _ = _dec_block(p, cfg, x, positions, enc_kv)
+        return x, None
+
+    x, _ = scan_layers(cfg, _remat(body, cfg), x, params["decoder"])
+    x = L.apply_norm(params["dec_final_norm"], x, "layernorm", cfg.norm_eps)
+    return L.apply_unembed(params["embed"], x), jnp.zeros((), jnp.float32)
+
+
+def prefill_encdec(params, cfg: ModelConfig, frames, tokens):
+    """Encode + decoder prefill.  Returns (logits_last, caches)."""
+    enc_out = encode(params, cfg, frames)
+    B, S = tokens.shape
+    max_len = cfg.max_target_positions
+    x = _dec_embed(params, cfg, tokens, 0)
+    positions = jnp.arange(S)
+    dtype = jnp.dtype(cfg.compute_dtype)
+    zero_cache = attn.init_kv_cache(cfg, B, max_len, dtype)
+
+    def body(x, p):
+        enc_kv = attn.precompute_cross_kv(p["cross_attn"], cfg, enc_out)
+        x, new_cache = _dec_block(
+            p, cfg, x, positions, enc_kv,
+            self_cache=zero_cache, cache_position=jnp.zeros((), jnp.int32),
+        )
+        return x, {"self": new_cache, "cross_kv": enc_kv}
+
+    x, caches = scan_layers(cfg, body, x, params["decoder"])
+    x = L.apply_norm(params["dec_final_norm"], x[:, -1:], "layernorm", cfg.norm_eps)
+    return L.apply_unembed(params["embed"], x), caches
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, enc_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    L_ = cfg.n_layers
+
+    def stack(shape):
+        return jnp.zeros((L_,) + shape, dtype)
+
+    return {
+        "self": {
+            "k": stack((batch, cfg.max_target_positions, cfg.n_kv_heads, hd)),
+            "v": stack((batch, cfg.max_target_positions, cfg.n_kv_heads, hd)),
+        },
+        "cross_kv": {
+            "k": stack((batch, enc_len, cfg.n_kv_heads, hd)),
+            "v": stack((batch, enc_len, cfg.n_kv_heads, hd)),
+        },
+    }
+
+
+def decode_encdec(params, cfg: ModelConfig, tokens_new, caches, position):
+    """One decoder token against self cache (≤448) + cross KV (full audio)."""
+    x = _dec_embed(params, cfg, tokens_new, position)
+    positions = jnp.full((tokens_new.shape[0], 1), position, jnp.int32)
+
+    def body(x, xs):
+        p, self_cache, cross_kv = xs
+        x, new_cache = _dec_block(
+            p, cfg, x, positions, cross_kv,
+            self_cache=self_cache, cache_position=position,
+        )
+        return x, new_cache
+
+    x, new_self = scan_layers(
+        cfg, body, x, (params["decoder"], caches["self"], caches["cross_kv"])
+    )
+    x = L.apply_norm(params["dec_final_norm"], x, "layernorm", cfg.norm_eps)
+    logits = L.apply_unembed(params["embed"], x)
+    return logits, {"self": new_self, "cross_kv": caches["cross_kv"]}

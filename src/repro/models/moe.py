@@ -1,0 +1,149 @@
+"""Mixture-of-Experts: top-k routing with grouped, capacity-bounded dispatch.
+
+TPU-native (GShard-style) formulation: tokens are split into **groups** (the
+group dim shards over the data axes); each group independently builds a small
+``[T_g, E, C]`` dispatch/combine tensor and dispatches tokens to experts via
+einsums.  With experts sharded over the "model" axis, XLA's SPMD partitioner
+turns the dispatch/return einsums into the expert all-to-all — no token
+sorting (a GPU idiom that shards badly) required.  Capacity is rounded up to
+a multiple of 8 for MXU-friendly shapes; overflow tokens are dropped (their
+combine weight is zero), the standard capacity-factor trade-off.
+
+An alternative expert-compute path through the grouped-matmul Pallas kernel
+(:mod:`repro.kernels.moe_gmm`) is selected with ``use_gmm=True``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import ParamSpec
+from repro.parallel.sharding import shard
+
+DEFAULT_GROUP_SIZE = 2048
+
+
+def init_moe(cfg: ModelConfig):
+    moe = cfg.moe
+    d, f, e = cfg.d_model, moe.d_ff, moe.n_experts
+    return {
+        "router": {
+            "w": ParamSpec((d, e), ("embed", "experts"), scale=1.0),
+        },
+        "experts": {
+            "gate": ParamSpec((e, d, f), ("experts", "embed", "mlp")),
+            "up": ParamSpec((e, d, f), ("experts", "embed", "mlp")),
+            "down": ParamSpec((e, f, d), ("experts", "mlp", "embed")),
+        },
+    }
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def capacity_for(tokens_per_group: int, cfg: ModelConfig) -> int:
+    moe = cfg.moe
+    c = int(tokens_per_group * moe.top_k * moe.capacity_factor / moe.n_experts)
+    return max(_round_up(max(c, 1), 8), 8)
+
+
+def group_tokens(n_tokens: int, group_size: int = DEFAULT_GROUP_SIZE) -> int:
+    """Number of dispatch groups (must divide the token count)."""
+    groups = max(1, n_tokens // group_size)
+    while n_tokens % groups:
+        groups -= 1
+    return groups
+
+
+def top_k_dispatch(
+    logits: jnp.ndarray,  # [G, T, E] router logits (fp32)
+    cfg: ModelConfig,
+    capacity: int,
+):
+    """Build dispatch/combine tensors per group.
+
+    Returns (dispatch [G,T,E,C] bf16-ish mask, combine [G,T,E,C], aux_loss).
+    """
+    moe = cfg.moe
+    G, T, E = logits.shape
+    k = moe.top_k
+    probs = jax.nn.softmax(logits, axis=-1)  # [G,T,E] fp32
+
+    gate_vals, expert_idx = jax.lax.top_k(logits, k)  # [G,T,k]
+    gates = jax.nn.softmax(gate_vals, axis=-1)  # normalize over the top-k
+
+    counts = jnp.zeros((G, E), jnp.int32)
+    dispatch = jnp.zeros((G, T, E, capacity), jnp.bool_)
+    combine = jnp.zeros((G, T, E, capacity), jnp.float32)
+    for j in range(k):
+        onehot = jax.nn.one_hot(expert_idx[..., j], E, dtype=jnp.int32)  # [G,T,E]
+        pos = counts[:, None, :] + jnp.cumsum(onehot, axis=1) - onehot  # [G,T,E]
+        fits = (pos < capacity) & (onehot > 0)
+        counts = counts + jnp.sum(onehot, axis=1)
+        slot = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)  # [G,T,E,C]
+        placed = slot * fits[..., None].astype(jnp.float32)
+        dispatch = dispatch | (placed > 0)
+        combine = combine + gates[..., j, None, None] * placed
+
+    # Switch-style load-balance auxiliary loss
+    me = jnp.mean(probs, axis=1)                      # [G,E] mean router prob
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32), axis=1
+    )                                                  # fraction (top-1 proxy)
+    aux = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+    return dispatch, combine, aux
+
+
+def apply_moe(
+    params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # [B, S, D]
+    group_size: int = DEFAULT_GROUP_SIZE,
+    use_gmm: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output [B,S,D], aux_loss scalar)."""
+    B, S, D = x.shape
+    T = B * S
+    groups = group_tokens(T, group_size)
+    tg = T // groups
+    xg = x.reshape(groups, tg, D)
+    xg = shard(xg, "batch", None, "embed")
+
+    logits = (
+        xg.astype(jnp.float32) @ params["router"]["w"].astype(jnp.float32)
+    )  # [G,T,E]
+    capacity = capacity_for(tg, cfg)
+    dispatch, combine, aux = top_k_dispatch(logits, cfg, capacity)
+    dispatch_t = dispatch.astype(x.dtype)
+    dispatch_t = shard(dispatch_t, "batch", None, "experts", None)
+
+    # dispatch einsum -> [G, E, C, D]; E sharded over "model" => all-to-all.
+    # "expert_capacity" is None by default; overriding it to "model" slot-
+    # shards dispatch when n_experts < model-axis size (hillclimb lever).
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch_t, xg)
+    expert_in = shard(expert_in, "batch", "experts", "expert_capacity", "embed")
+
+    if use_gmm:
+        from repro.kernels import ops as kernel_ops
+
+        expert_out = kernel_ops.moe_expert_mlp(
+            expert_in, params["experts"], cfg
+        )
+    else:
+        w_gate = params["experts"]["gate"].astype(x.dtype)
+        w_up = params["experts"]["up"].astype(x.dtype)
+        w_down = params["experts"]["down"].astype(x.dtype)
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, w_gate))
+        h = h * jnp.einsum("gecd,edf->gecf", expert_in, w_up)
+        h = shard(h, "batch", "experts", "expert_capacity", "mlp")
+        expert_out = jnp.einsum("gecf,efd->gecd", h, w_down)
+    expert_out = shard(expert_out, "batch", "experts", None, "embed")
+
+    out = jnp.einsum(
+        "gtec,gecd->gtd", combine.astype(x.dtype), expert_out
+    )
+    return out.reshape(B, S, D), aux

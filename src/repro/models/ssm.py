@@ -1,0 +1,282 @@
+"""Mamba2 (SSD) block — the hybrid arch's (zamba2) sequence mixer.
+
+TPU adaptation: the GPU implementation relies on warp-level parallel scans;
+here the selective scan is reformulated **chunkwise** (the SSD algorithm):
+intra-chunk terms are dense matmuls (MXU-friendly), and only the per-chunk
+state summary is carried sequentially (``lax.scan`` over chunks).  A
+Pallas kernel version of the chunk compute lives in
+:mod:`repro.kernels.mamba_scan`.
+
+Recurrence (per head h, state N, head dim P):
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t ⊗ x_t
+    y_t = C_t · h_t + D_h * x_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import ParamSpec
+from repro.parallel.sharding import shard
+
+
+def dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = ssm.n_heads or d_inner // ssm.head_dim
+    return d_inner, n_heads, ssm.head_dim, ssm.state_dim, ssm.n_groups
+
+
+def init_mamba(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, P, N, G = dims(cfg)
+    conv_ch = d_inner + 2 * G * N
+    proj_out = 2 * d_inner + 2 * G * N + H  # z, x, B, C, dt
+    return {
+        "in_proj": {
+            "w": ParamSpec((d, proj_out), ("embed", "ssm_inner")),
+        },
+        "conv_w": ParamSpec((ssm.conv_width, conv_ch), ("conv", "ssm_inner")),
+        "conv_b": ParamSpec((conv_ch,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        "D": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), init="zeros"),
+        "norm_scale": ParamSpec((d_inner,), ("ssm_inner",), init="ones"),
+        "out_proj": {
+            "w": ParamSpec((d_inner, d), ("ssm_inner", "embed")),
+        },
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    d_inner, H, P, N, G = dims(cfg)
+    z, xs, B, C, dt = jnp.split(
+        proj,
+        [d_inner, 2 * d_inner, 2 * d_inner + G * N, 2 * d_inner + 2 * G * N],
+        axis=-1,
+    )
+    return z, xs, B, C, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over seq.  x [B,S,Ch]; w [W,Ch]."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + pad[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def ssd_chunked(
+    xh: jnp.ndarray,   # [B, S, H, P] inputs (per head)
+    dt: jnp.ndarray,   # [B, S, H] softplus'd step sizes
+    A: jnp.ndarray,    # [H] negative decay rates
+    Bm: jnp.ndarray,   # [B, S, N] input projections (G=1)
+    Cm: jnp.ndarray,   # [B, S, N] output projections
+    chunk: int,
+    h0: jnp.ndarray | None = None,  # [B, H, P, N] initial state
+    return_final_state: bool = False,
+):
+    """Chunkwise SSD.  Returns y [B,S,H,P] (and final state if requested)."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    if S % chunk:
+        pad = chunk - S % chunk
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = xh.shape[1]
+    nc = Sp // chunk
+    f32 = jnp.float32
+
+    xc = xh.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).astype(f32)
+
+    a = dtc * A[None, None, None, :]          # [B,nc,Q,H] log-decay (<0)
+    cum = jnp.cumsum(a, axis=2)               # inclusive cumulative decay
+    a_total = cum[:, :, -1, :]                # [B,nc,H]
+
+    # --- intra-chunk (quadratic within chunk, dense matmuls) ---------------
+    CB = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)            # [B,nc,Q,Q]
+    qidx = jnp.arange(chunk)
+    mask = qidx[:, None] >= qidx[None, :]                 # causal within chunk
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Q,S,H]
+    # mask inside the exponent: s>t entries would overflow exp() and produce
+    # inf*0=NaN if masked multiplicatively afterwards
+    decay = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+    W = CB[..., None] * decay                              # [B,nc,Q,S,H]
+    Wdt = W * dtc[:, :, None, :, :]                        # apply dt at source
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", Wdt, xc.astype(f32))
+
+    # --- chunk state summaries ---------------------------------------------
+    decay_to_end = jnp.exp(a_total[:, :, None, :] - cum)   # [B,nc,Q,H]
+    Sc = jnp.einsum(
+        "bcsh,bcshp,bcsn->bchpn", decay_to_end * dtc, xc.astype(f32), Bc
+    )  # [B,nc,H,P,N]
+
+    # --- inter-chunk recurrence (sequential over chunks only) ---------------
+    def step(h, inputs):
+        s_chunk, a_tot = inputs
+        h_prev = h
+        h_next = jnp.exp(a_tot)[..., None, None] * h + s_chunk
+        return h_next, h_prev
+
+    init = (
+        h0.astype(f32)
+        if h0 is not None
+        else jnp.zeros((Bsz, H, P, N), f32)
+    )
+    h_final, h_prevs = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(a_total, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # [B,nc,H,P,N]
+
+    decay_from_start = jnp.exp(cum)  # [B,nc,Q,H]
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", Cc, decay_from_start, h_prevs
+    )
+
+    y = (y_intra + y_inter).reshape(Bsz, Sp, H, P)[:, :S]
+    y = y.astype(xh.dtype)
+    if return_final_state:
+        return y, h_final
+    return y
+
+
+def _conv_window(conv_in: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Last (width-1) conv inputs, left-padded — the decode conv cache."""
+    B, S, Ch = conv_in.shape
+    w = width - 1
+    if S >= w:
+        return conv_in[:, S - w:, :]
+    return jnp.pad(conv_in, ((0, 0), (w - S, 0), (0, 0)))
+
+
+def apply_mamba(
+    params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                # [B, S, D]
+    cache: dict | None = None,     # decode: {"h": [B,H,P,N], "conv": [B,W-1,Ch]}
+    return_cache: bool = False,    # prefill: build the decode cache
+) -> tuple[jnp.ndarray, dict | None]:
+    d_inner, H, P, N, G = dims(cfg)
+    ssm = cfg.ssm
+    proj = L.apply_dense(params["in_proj"], x)
+    z, xs, Bm, Cm, dt = _split_proj(cfg, proj)
+
+    if cache is None:
+        conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+        conv_out = _causal_conv(
+            conv_in, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype)
+        )
+        conv_out = jax.nn.silu(conv_out)
+        xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+        new_cache = (
+            {"conv": _conv_window(conv_in, ssm.conv_width)}
+            if return_cache else None
+        )
+    else:
+        # decode: roll the conv window cache (x has S=1)
+        conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)  # [B,1,Ch]
+        window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # [B,W,Ch]
+        w = params["conv_w"].astype(x.dtype)
+        conv_out = jnp.einsum("bwc,wc->bc", window, w) + params["conv_b"].astype(
+            x.dtype
+        )
+        conv_out = jax.nn.silu(conv_out)[:, None, :]
+        xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+        new_cache = {"conv": window[:, 1:]}
+
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # [B,S,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # [H]
+    xh = xs.reshape(xs.shape[0], xs.shape[1], H, P)
+    xh = shard(xh, "batch", "seq", "ssm_heads", None)
+
+    if cache is None:
+        if return_cache:
+            y, h_final = ssd_chunked(
+                xh, dt, A, Bm, Cm, chunk=ssm.chunk_size,
+                return_final_state=True,
+            )
+            new_cache = {**new_cache, "h": h_final}
+        elif cfg.attention_impl == "flash":
+            from repro.kernels import ops as kernel_ops
+
+            y = kernel_ops.mamba_scan(xh, dt, A, Bm, Cm, chunk=ssm.chunk_size)
+        else:
+            y = ssd_chunked(xh, dt, A, Bm, Cm, chunk=ssm.chunk_size)
+    else:
+        # single-step recurrence
+        h = cache["h"].astype(jnp.float32)  # [B,H,P,N]
+        dt1 = dt[:, 0]                      # [B,H]
+        decay = jnp.exp(dt1 * A[None, :])   # [B,H]
+        dBx = jnp.einsum(
+            "bh,bn,bhp->bhpn", dt1, Bm[:, 0].astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32),
+        )
+        h = decay[..., None, None] * h + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+        y = y[:, None].astype(x.dtype)  # [B,1,H,P]
+        new_cache = {**new_cache, "h": h}
+
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(x.shape[0], x.shape[1], d_inner)
+    # gated RMSNorm then down-projection
+    y = y * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype)
+    y = y * params["norm_scale"].astype(x.dtype)
+    out = L.apply_dense(params["out_proj"], y)
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    d_inner, H, P, N, G = dims(cfg)
+    conv_ch = d_inner + 2 * G * N
+    return {
+        "h": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def mamba_cache_axes():
+    return {
+        "h": ("batch", "ssm_heads", None, None),
+        "conv": ("batch", None, "ssm_inner"),
+    }
+
+
+def reference_recurrence(xh, dt, A, Bm, Cm, h0=None):
+    """Sequential oracle for tests: the literal recurrence, step by step."""
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    h = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+    ys = []
+    for t in range(S):
+        decay = jnp.exp(dt[:, t] * A[None, :])  # [B,H]
+        dBx = jnp.einsum(
+            "bh,bn,bhp->bhpn",
+            dt[:, t],
+            Bm[:, t].astype(jnp.float32),
+            xh[:, t].astype(jnp.float32),
+        )
+        h = decay[..., None, None] * h + dBx
+        ys.append(jnp.einsum("bn,bhpn->bhp", Cm[:, t].astype(jnp.float32), h))
+    return jnp.stack(ys, axis=1).astype(xh.dtype), h

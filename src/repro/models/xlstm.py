@@ -1,0 +1,392 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly recurrent), per arXiv:2405.04517.
+
+TPU adaptation: the mLSTM's parallel form is computed **chunkwise** — the
+O(Q²) intra-chunk part is dense matmuls on the MXU; the (C, n, m) state is
+carried across chunks with ``lax.scan``.  Exponential gating is stabilized
+with the running max ``m`` exactly as in the paper (eq. 15/26), so training
+in bf16 is safe.  The sLSTM has genuine recurrent (block-diagonal) weight
+connections and cannot be parallelized over time; it runs as a time-scan —
+the paper's own limitation, noted in DESIGN.md.
+
+Cell equations (mLSTM, per head; q,k in R^K, v in R^V):
+    logf_t = logsigmoid(f̃_t)
+    m_t   = max(m_{t-1} + logf_t, ĩ_t)
+    C_t   = e^{logf_t + m_{t-1} - m_t} C_{t-1} + e^{ĩ_t - m_t} k_t v_tᵀ
+    n_t   = e^{logf_t + m_{t-1} - m_t} n_{t-1} + e^{ĩ_t - m_t} k_t
+    h_t   = (q̃_t C_t) / max(|q̃_t·n_t|, e^{-m_t}),   q̃ = q/√K
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import ParamSpec
+from repro.parallel.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel form
+# ---------------------------------------------------------------------------
+
+
+def mlstm_chunkwise(
+    q: jnp.ndarray,       # [B, H, S, K]
+    k: jnp.ndarray,       # [B, H, S, K]
+    v: jnp.ndarray,       # [B, H, S, V]
+    i_gate: jnp.ndarray,  # [B, H, S] pre-activation input gate
+    f_gate: jnp.ndarray,  # [B, H, S] pre-activation forget gate
+    chunk: int,
+    state: tuple | None = None,   # (C [B,H,K,V], n [B,H,K], m [B,H])
+    return_state: bool = False,
+):
+    Bsz, H, S, K = q.shape
+    V = v.shape[-1]
+    f32 = jnp.float32
+    orig_S = S
+    if S % chunk:
+        pad = chunk - S % chunk
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        # padded steps must not perturb the carried state: i = -inf (no
+        # input), f̃ = +inf (forget gate 1.0, i.e. no decay)
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, 0), (0, pad)), constant_values=-1e9)
+        f_gate = jnp.pad(f_gate, ((0, 0), (0, 0), (0, pad)), constant_values=1e9)
+        S = q.shape[2]
+    nc = S // chunk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(K, f32))
+
+    def reshape_chunks(x):
+        return x.reshape(x.shape[0], x.shape[1], nc, chunk, *x.shape[3:])
+
+    qc = reshape_chunks(q).astype(f32) * scale
+    kc = reshape_chunks(k).astype(f32)
+    vc = reshape_chunks(v).astype(f32)
+    ic = reshape_chunks(i_gate).astype(f32)       # [B,H,nc,Q]
+    logf = jax.nn.log_sigmoid(reshape_chunks(f_gate).astype(f32))
+    b = jnp.cumsum(logf, axis=-1)                  # inclusive cumulative
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, xs):
+        C0, n0, m0 = carry                         # [B,H,K,V] [B,H,K] [B,H]
+        qq, kk, vv, ii, bb = xs                     # per-chunk slices
+        r = ii - bb                                 # [B,H,Q]
+        m_intra = bb + jax.lax.cummax(r, axis=r.ndim - 1)  # [B,H,Q]
+        m_inter = m0[..., None] + bb
+        m = jnp.maximum(m_inter, m_intra)           # [B,H,Q] stabilizer
+        # intra-chunk decay matrix D[t,s] = exp(b_t - b_s + i_s - m_t), s<=t
+        expo = bb[..., :, None] - bb[..., None, :] + ii[..., None, :]
+        expo = jnp.where(causal[None, None], expo, -jnp.inf)
+        D = jnp.exp(expo - m[..., :, None])
+        Smat = jnp.einsum("bhtk,bhsk->bhts", qq, kk) * D
+        num = jnp.einsum("bhts,bhsv->bhtv", Smat, vv)
+        den = jnp.sum(Smat, axis=-1)                # q̃·n intra part
+        # inter-chunk contribution
+        w = jnp.exp(m_inter - m)                    # [B,H,Q]
+        num = num + w[..., None] * jnp.einsum("bhtk,bhkv->bhtv", qq, C0)
+        den = den + w * jnp.einsum("bhtk,bhk->bht", qq, n0)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        # chunk-final state
+        b_last = bb[..., -1]
+        m_new = jnp.maximum(
+            m0 + b_last, b_last + jnp.max(r, axis=-1)
+        )                                            # [B,H]
+        g = jnp.exp(b_last[..., None] - bb + ii - m_new[..., None])  # [B,H,Q]
+        C1 = (
+            jnp.exp(m0 + b_last - m_new)[..., None, None] * C0
+            + jnp.einsum("bhs,bhsk,bhsv->bhkv", g, kk, vv)
+        )
+        n1 = (
+            jnp.exp(m0 + b_last - m_new)[..., None] * n0
+            + jnp.einsum("bhs,bhsk->bhk", g, kk)
+        )
+        return (C1, n1, m_new), h
+
+    if state is None:
+        C0 = jnp.zeros((Bsz, H, K, V), f32)
+        n0 = jnp.zeros((Bsz, H, K), f32)
+        m0 = jnp.full((Bsz, H), -jnp.inf, f32)
+    else:
+        C0, n0, m0 = (s.astype(f32) for s in state)
+
+    xs = tuple(
+        jnp.moveaxis(t, 2, 0) for t in (qc, kc, vc, ic, b)
+    )
+    final, hs = jax.lax.scan(body, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 2).reshape(Bsz, H, S, V)[:, :, :orig_S]
+    h = h.astype(v.dtype)
+    if return_state:
+        return h, final
+    return h
+
+
+def mlstm_step(q, k, v, i_gate, f_gate, state):
+    """Single-token decode step.  q,k [B,H,K]; v [B,H,V]; gates [B,H]."""
+    C0, n0, m0 = state
+    f32 = jnp.float32
+    K = q.shape[-1]
+    qf = q.astype(f32) / jnp.sqrt(jnp.asarray(K, f32))
+    logf = jax.nn.log_sigmoid(f_gate.astype(f32))
+    m = jnp.maximum(m0 + logf, i_gate.astype(f32))
+    fw = jnp.exp(logf + m0 - m)
+    iw = jnp.exp(i_gate.astype(f32) - m)
+    C1 = fw[..., None, None] * C0 + iw[..., None, None] * jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(f32), v.astype(f32)
+    )
+    n1 = fw[..., None] * n0 + iw[..., None] * k.astype(f32)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C1)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n1))
+    h = num / jnp.maximum(den, jnp.exp(-m))[..., None]
+    return h.astype(v.dtype), (C1, n1, m)
+
+
+def mlstm_reference(q, k, v, i_gate, f_gate):
+    """Sequential oracle (tests): step-by-step recurrence."""
+    Bsz, H, S, K = q.shape
+    V = v.shape[-1]
+    state = (
+        jnp.zeros((Bsz, H, K, V), jnp.float32),
+        jnp.zeros((Bsz, H, K), jnp.float32),
+        jnp.full((Bsz, H), -jnp.inf, jnp.float32),
+    )
+    hs = []
+    for t in range(S):
+        h, state = mlstm_step(
+            q[:, :, t], k[:, :, t], v[:, :, t], i_gate[:, :, t], f_gate[:, :, t],
+            state,
+        )
+        hs.append(h)
+    return jnp.stack(hs, axis=2), state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_dims(cfg: ModelConfig):
+    x = cfg.xlstm
+    d_inner = int(x.proj_factor * cfg.d_model)
+    n_heads = cfg.n_heads  # 4 for xlstm-1.3b
+    head_v = d_inner // n_heads
+    head_qk = max(int(head_v * x.qk_factor), 4)
+    return d_inner, n_heads, head_qk, head_v
+
+
+def init_mlstm_block(cfg: ModelConfig):
+    x = cfg.xlstm
+    d = cfg.d_model
+    d_inner, H, Kd, Vd = mlstm_dims(cfg)
+    # q/k/v are BLOCK-DIAGONAL per head (the paper's BlockLinear): cost
+    # d_inner²/H instead of d_inner² — this is what keeps xLSTM-1.3b at 1.3B
+    return {
+        "norm": L.init_norm(d, cfg.norm_type),
+        "up": {"w": ParamSpec((d, 2 * d_inner), ("embed", "lstm_inner"))},
+        "conv_w": ParamSpec((x.conv_width, d_inner), ("conv", "lstm_inner")),
+        "conv_b": ParamSpec((d_inner,), ("lstm_inner",), init="zeros"),
+        "wq": ParamSpec((H, Vd, Kd), ("lstm_heads", None, None)),
+        "wk": ParamSpec((H, Vd, Kd), ("lstm_heads", None, None)),
+        "wv": ParamSpec((H, Vd, Vd), ("lstm_heads", None, None)),
+        "w_if": {"w": ParamSpec((d_inner, 2 * H), ("lstm_inner", None)),
+                 "b": ParamSpec((2 * H,), (None,), init="zeros")},
+        "head_norm": ParamSpec((d_inner,), ("lstm_inner",), init="ones"),
+        "skip": ParamSpec((d_inner,), ("lstm_inner",), init="ones"),
+        "down": {"w": ParamSpec((d_inner, d), ("lstm_inner", "embed"))},
+    }
+
+
+def _conv_silu(x, w, b, cache=None):
+    """Causal depthwise conv + silu; optional rolling cache for decode."""
+    from repro.models.ssm import _causal_conv
+
+    if cache is None:
+        return jax.nn.silu(_causal_conv(x, w, b)), None
+    window = jnp.concatenate([cache, x], axis=1)
+    out = jnp.einsum("bwc,wc->bc", window, w) + b
+    return jax.nn.silu(out)[:, None, :], window[:, 1:]
+
+
+def apply_mlstm_block(params, cfg: ModelConfig, x, cache=None,
+                      return_cache: bool = False):
+    """x [B,S,D].  cache (decode): {"conv": [B,W-1,Di], "C","n","m"};
+    ``return_cache`` (prefill) builds that cache from the parallel pass."""
+    d_inner, H, Kd, Vd = mlstm_dims(cfg)
+    y = L.apply_norm(params["norm"], x, cfg.norm_type, cfg.norm_eps)
+    up = L.apply_dense(params["up"], y)
+    u, z = jnp.split(up, 2, axis=-1)
+    conv_cache = cache["conv"] if cache is not None else None
+    c, new_conv = _conv_silu(
+        u, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype),
+        conv_cache,
+    )
+    B, S = x.shape[0], x.shape[1]
+
+    def block_proj(t, w):
+        # block-diagonal per-head projection: [B,S,H,Vd] x [H,Vd,out]
+        th = t.reshape(B, S, H, Vd)
+        return jnp.einsum("bshv,hvo->bhso", th, w.astype(t.dtype))
+
+    q = block_proj(c, params["wq"])
+    k = block_proj(c, params["wk"])
+    v = block_proj(u, params["wv"])
+    q = shard(q, "batch", "lstm_heads", "seq", None)
+    k = shard(k, "batch", "lstm_heads", "seq", None)
+    v = shard(v, "batch", "lstm_heads", "seq", None)
+    gates = L.apply_dense(params["w_if"], c)  # [B,S,2H]
+    i_gate = gates[..., :H].transpose(0, 2, 1)
+    f_gate = gates[..., H:].transpose(0, 2, 1)
+
+    new_cache = None
+    if cache is None:
+        if return_cache:
+            from repro.models.ssm import _conv_window
+
+            h, (C1, n1, m1) = mlstm_chunkwise(
+                q, k, v, i_gate, f_gate, chunk=cfg.xlstm.chunk_size,
+                return_state=True,
+            )
+            new_cache = {"conv": _conv_window(u, cfg.xlstm.conv_width),
+                         "C": C1, "n": n1, "m": m1}
+        else:
+            h = mlstm_chunkwise(q, k, v, i_gate, f_gate,
+                                chunk=cfg.xlstm.chunk_size)
+    else:
+        h, (C1, n1, m1) = mlstm_step(
+            q[:, :, 0], k[:, :, 0], v[:, :, 0],
+            i_gate[:, :, 0], f_gate[:, :, 0],
+            (cache["C"], cache["n"], cache["m"]),
+        )
+        h = h[:, :, None, :]
+        new_cache = {"conv": new_conv, "C": C1, "n": n1, "m": m1}
+
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, d_inner)
+    # per-head norm + learnable skip from the conv path
+    h32 = h.astype(jnp.float32).reshape(B, S, H, Vd)
+    var = jnp.mean(jnp.square(h32), axis=-1, keepdims=True)
+    h = (h32 * jax.lax.rsqrt(var + cfg.norm_eps)).reshape(B, S, d_inner)
+    h = h.astype(x.dtype) * params["head_norm"].astype(x.dtype)
+    h = h + params["skip"].astype(x.dtype) * c
+    out = L.apply_dense(params["down"], h * jax.nn.silu(z))
+    return x + out, new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype):
+    d_inner, H, Kd, Vd = mlstm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.xlstm.conv_width - 1, d_inner), dtype),
+        "C": jnp.zeros((batch, H, Kd, Vd), jnp.float32),
+        "n": jnp.zeros((batch, H, Kd), jnp.float32),
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+    }
+
+
+def mlstm_cache_axes():
+    return {
+        "conv": ("batch", None, "lstm_inner"),
+        "C": ("batch", "lstm_heads", None, None),
+        "n": ("batch", "lstm_heads", None),
+        "m": ("batch", "lstm_heads"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def slstm_dims(cfg: ModelConfig):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return H, dh
+
+
+def init_slstm_block(cfg: ModelConfig):
+    d = cfg.d_model
+    H, dh = slstm_dims(cfg)
+    d_ff = int(4 * d / 3)
+    gates = {}
+    for g in ("z", "i", "f", "o"):
+        gates[f"w_{g}"] = ParamSpec((d, d), ("embed", "lstm_inner"))
+        gates[f"r_{g}"] = ParamSpec((H, dh, dh), ("lstm_heads", None, None),
+                                     scale=1.0)
+        gates[f"b_{g}"] = ParamSpec((d,), ("lstm_inner",), init="zeros")
+    return {
+        "norm": L.init_norm(d, cfg.norm_type),
+        **gates,
+        "head_norm": ParamSpec((d,), ("lstm_inner",), init="ones"),
+        "ffn_norm": L.init_norm(d, cfg.norm_type),
+        "ffn": L.init_mlp(d, d_ff, "swiglu"),
+    }
+
+
+def slstm_cell(params, cfg: ModelConfig, x, state):
+    """Scan the sLSTM over time.  x [B,S,D]; state (h,c,n,m) each [B,H,dh]."""
+    H, dh = slstm_dims(cfg)
+    B, S, D = x.shape
+    f32 = jnp.float32
+
+    wx = {
+        g: L.apply_dense(
+            {"w": params[f"w_{g}"], "b": params[f"b_{g}"]}, x
+        ).reshape(B, S, H, dh)
+        for g in ("z", "i", "f", "o")
+    }
+    R = {g: params[f"r_{g}"].astype(f32) for g in ("z", "i", "f", "o")}
+
+    def step(carry, xs):
+        h, c, n, m = carry  # [B,H,dh] fp32
+        wz, wi, wf, wo = xs
+
+        def rec(g):
+            return jnp.einsum("bhd,hde->bhe", h, R[g])
+
+        zt = jnp.tanh(wz.astype(f32) + rec("z"))
+        it = wi.astype(f32) + rec("i")
+        ft = wf.astype(f32) + rec("f")
+        ot = jax.nn.sigmoid(wo.astype(f32) + rec("o"))
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m, it)
+        iw = jnp.exp(it - m_new)
+        fw = jnp.exp(logf + m - m_new)
+        c_new = fw * c + iw * zt
+        n_new = fw * n + iw
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    xs = tuple(jnp.moveaxis(wx[g], 1, 0) for g in ("z", "i", "f", "o"))
+    final, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, D).astype(x.dtype), final
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    H, dh = slstm_dims(cfg)
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return (z, z, z, jnp.full((batch, H, dh), -jnp.inf, jnp.float32))
+
+
+def slstm_state_axes():
+    a = ("batch", "lstm_heads", None)
+    return (a, a, a, a)
+
+
+def apply_slstm_block(params, cfg: ModelConfig, x, cache=None,
+                      return_cache: bool = False):
+    """cache (decode): {"state": (h,c,n,m)}."""
+    y = L.apply_norm(params["norm"], x, cfg.norm_type, cfg.norm_eps)
+    state = cache["state"] if cache is not None else init_slstm_state(
+        cfg, x.shape[0]
+    )
+    h, final = slstm_cell(params, cfg, y, state)
+    h = h * params["head_norm"].astype(x.dtype)
+    x = x + h
+    y = L.apply_norm(params["ffn_norm"], x, cfg.norm_type, cfg.norm_eps)
+    x = x + L.apply_mlp(params["ffn"], y, "swiglu")
+    new_cache = (
+        {"state": final} if (cache is not None or return_cache) else None
+    )
+    return x, new_cache

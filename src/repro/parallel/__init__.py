@@ -1,0 +1,23 @@
+"""Distribution: logical-axis sharding rules, gradient compression."""
+
+from .sharding import (
+    ACT_RULES,
+    PARAM_RULES,
+    ShardingRules,
+    active_rules,
+    logical_spec,
+    param_shardings,
+    shard,
+    use_rules,
+)
+
+__all__ = [
+    "ACT_RULES",
+    "PARAM_RULES",
+    "ShardingRules",
+    "active_rules",
+    "logical_spec",
+    "param_shardings",
+    "shard",
+    "use_rules",
+]

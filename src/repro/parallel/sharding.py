@@ -1,0 +1,309 @@
+"""Logical-axis sharding (t5x/MaxText style).
+
+Every parameter and key activation carries a tuple of *logical* axis names
+("embed", "mlp", "heads", "batch", ...).  A :class:`ShardingRules` table maps
+logical names to mesh axes (or ``None`` for replicated).  Model code calls
+:func:`shard` at annotation points; under an active rule set + mesh this
+inserts ``with_sharding_constraint``; with no active rules it is a no-op, so
+single-device smoke tests pay nothing.
+
+Default rule sets implement:
+
+* **FSDP** — parameter "embed"/largest axes sharded over the data axes
+  (``("pod", "data")`` on the multi-pod mesh), ZeRO-3-equivalent since
+  optimizer state follows parameter sharding;
+* **TP** — heads / mlp / experts / vocab over the "model" axis;
+* **DP** — activation batch over the data axes;
+* **SP** — long-context KV/sequence sharding over "data" (used by the
+  ``long_500k`` cells where batch=1 cannot shard).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisTarget = Any  # str | tuple[str, ...] | None
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Mapping from logical axis names to mesh axes."""
+
+    rules: Mapping[str, AxisTarget] = field(default_factory=dict)
+
+    def spec(self, logical_axes: tuple[str | None, ...]) -> P:
+        parts = []
+        used: set[str] = set()
+        for name in logical_axes:
+            target = self.rules.get(name) if name is not None else None
+            # a mesh axis may appear at most once in a PartitionSpec
+            if target is None:
+                parts.append(None)
+                continue
+            targets = target if isinstance(target, tuple) else (target,)
+            remaining = tuple(t for t in targets if t not in used)
+            used.update(remaining)
+            if not remaining:
+                parts.append(None)
+            elif len(remaining) == 1:
+                parts.append(remaining[0])
+            else:
+                parts.append(remaining)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def merged(self, overrides: Mapping[str, AxisTarget]) -> "ShardingRules":
+        return ShardingRules({**dict(self.rules), **dict(overrides)})
+
+
+#: default parameter placement (single-pod and multi-pod meshes share these;
+#: "fsdp" axes resolve to whichever of pod/data exist in the mesh)
+PARAM_RULES = ShardingRules(
+    {
+        "embed": ("pod", "data"),       # FSDP: shard the big axis over data
+        "mlp": "model",                  # TP
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "qkv": "model",
+        "vocab": "model",
+        "experts": "model",              # EP
+        "expert_mlp": None,
+        "layers": None,
+        "blocks": None,
+        "ssm_inner": "model",
+        "ssm_state": None,
+        "ssm_heads": "model",
+        "conv": None,
+        "lstm_heads": "model",
+        "lstm_inner": "model",
+        "rank": None,
+    }
+)
+
+#: default activation placement
+ACT_RULES = ShardingRules(
+    {
+        "batch": ("pod", "data"),
+        "seq": None,
+        "kv_seq": None,
+        "embed": None,
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "vocab": "model",
+        "experts": "model",
+        "expert_capacity": None,
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "ssm_inner": "model",
+        "lstm_heads": "model",
+        "lstm_inner": "model",
+    }
+)
+
+
+class _Active(threading.local):
+    def __init__(self):
+        self.params: ShardingRules | None = None
+        self.acts: ShardingRules | None = None
+        self.mesh: Mesh | None = None
+
+
+_ACTIVE = _Active()
+
+
+class use_rules:
+    """Context manager activating (param_rules, act_rules) for model code."""
+
+    def __init__(
+        self,
+        param_rules: ShardingRules | None,
+        act_rules: ShardingRules | None,
+        mesh: Mesh | None = None,
+    ):
+        self.param_rules = param_rules
+        self.act_rules = act_rules
+        self.mesh = mesh
+
+    def __enter__(self):
+        self._saved = (_ACTIVE.params, _ACTIVE.acts, _ACTIVE.mesh)
+        _ACTIVE.params = self.param_rules
+        _ACTIVE.acts = self.act_rules
+        _ACTIVE.mesh = self.mesh
+        return self
+
+    def __exit__(self, *exc):
+        _ACTIVE.params, _ACTIVE.acts, _ACTIVE.mesh = self._saved
+        return False
+
+
+def active_rules() -> tuple[ShardingRules | None, ShardingRules | None]:
+    return _ACTIVE.params, _ACTIVE.acts
+
+
+def _mesh_axis_sizes() -> dict[str, int] | None:
+    mesh = _ACTIVE.mesh
+    if mesh is not None:
+        return dict(zip(mesh.axis_names, mesh.devices.shape))
+    env = jax.sharding.get_abstract_mesh()
+    if env is not None and env.axis_names:
+        try:
+            return {n: env.shape[n] for n in env.axis_names}
+        except Exception:
+            return None
+    return None
+
+
+def assign_spec(
+    logical_axes: tuple[str | None, ...],
+    shape: tuple[int, ...],
+    rules: ShardingRules,
+    sizes: Mapping[str, int],
+) -> P:
+    """Single-pass divisibility-aware mesh-axis assignment.
+
+    Joint assignment matters: if an earlier dim's rule targets a mesh axis
+    it cannot actually use (absent, already taken, or non-divisible), the
+    axis stays AVAILABLE for later dims.  (The two-phase dedup-then-prune
+    version silently replicated e.g. the expert-MLP dim whenever
+    n_experts < model-axis size — a 16x per-device compute blowup found in
+    the dry-run; see EXPERIMENTS.md §Perf iteration 1.)
+    """
+    used: set[str] = set()
+    parts: list = []
+    for name, dim in zip(logical_axes, shape):
+        target = rules.rules.get(name) if name is not None else None
+        if target is None:
+            parts.append(None)
+            continue
+        targets = target if isinstance(target, tuple) else (target,)
+        kept: list[str] = []
+        prod = 1
+        for t in targets:
+            size = sizes.get(t)
+            if size is None or t in used or size <= 0:
+                continue
+            if dim % (prod * size) == 0:
+                kept.append(t)
+                prod *= size
+        used.update(kept)
+        if not kept:
+            parts.append(None)
+        elif len(kept) == 1:
+            parts.append(kept[0])
+        else:
+            parts.append(tuple(kept))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def _prune_spec_for_shape(spec: P, shape: tuple[int, ...]) -> P:
+    """Legacy two-phase pruning (kept for comparison experiments)."""
+    sizes = _mesh_axis_sizes()
+    if sizes is None:
+        return spec
+    parts = []
+    for dim, target in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if target is None:
+            parts.append(None)
+            continue
+        targets = target if isinstance(target, tuple) else (target,)
+        kept = tuple(t for t in targets if t in sizes)
+        total = 1
+        for t in kept:
+            total *= sizes[t]
+        if not kept or dim % total:
+            parts.append(None)
+        elif len(kept) == 1:
+            parts.append(kept[0])
+        else:
+            parts.append(kept)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without active rules)."""
+    rules = _ACTIVE.acts
+    if rules is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"shard(): {len(logical_axes)} axes for array of rank {x.ndim}"
+        )
+    sizes = _mesh_axis_sizes()
+    if sizes is None:
+        spec = rules.spec(logical_axes)
+    else:
+        spec = assign_spec(logical_axes, x.shape, rules, sizes)
+    if _ACTIVE.mesh is not None:
+        # resolve to a concrete sharding: no ambient mesh context required
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(_ACTIVE.mesh, spec)
+        )
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def logical_spec(
+    logical_axes: tuple[str | None, ...],
+    rules: ShardingRules,
+    shape: tuple[int, ...] | None = None,
+    mesh: Mesh | None = None,
+) -> P:
+    """Resolve logical axes to a PartitionSpec (divisibility-aware)."""
+    if shape is None or mesh is None:
+        return rules.spec(logical_axes)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return assign_spec(logical_axes, tuple(shape), rules, sizes)
+
+
+def param_shardings(
+    param_axes,  # pytree of logical-axis tuples
+    mesh: Mesh,
+    rules: ShardingRules = PARAM_RULES,
+    param_shapes=None,  # optional matching pytree of shapes for divisibility
+):
+    """Build a NamedSharding pytree for parameters from their logical axes."""
+    import jax.tree_util as jtu
+
+    mesh_axes = set(mesh.axis_names)
+
+    def effective(rules_: ShardingRules) -> ShardingRules:
+        # drop rule targets that reference axes absent from this mesh
+        out = {}
+        for k, v in rules_.rules.items():
+            if v is None:
+                out[k] = None
+            else:
+                targets = v if isinstance(v, tuple) else (v,)
+                kept = tuple(t for t in targets if t in mesh_axes)
+                out[k] = kept if len(kept) > 1 else (kept[0] if kept else None)
+        return ShardingRules(out)
+
+    eff = effective(rules)
+    if param_shapes is None:
+        return jtu.tree_map(
+            lambda axes: NamedSharding(mesh, eff.spec(axes)),
+            param_axes,
+            is_leaf=lambda v: isinstance(v, tuple)
+            and all(isinstance(e, (str, type(None))) for e in v),
+        )
+    return jtu.tree_map(
+        lambda axes, shape: NamedSharding(
+            mesh, logical_spec(axes, eff, tuple(shape), mesh)
+        ),
+        param_axes,
+        param_shapes,
+        is_leaf=lambda v: isinstance(v, tuple)
+        and all(isinstance(e, (str, type(None))) for e in v),
+    )

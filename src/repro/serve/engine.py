@@ -1,0 +1,125 @@
+"""Batched serving engine: prefill + lockstep decode with KV/state caches.
+
+Requests are grouped into generation batches (arrival-window batching);
+each batch is prefim-filled once and decoded in lockstep, with per-row EOS
+masking.  Attention families use prefill+KV cache; recurrent families
+(xlstm / zamba2) consume the prompt through their O(1)-state decode path.
+The jitted step functions are cached per (batch, prompt_len) bucket.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        max_len: int = 512,
+        eos_token: int | None = None,
+        greedy: bool = True,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.eos = eos_token
+        self.greedy = greedy
+        self.key = jax.random.PRNGKey(seed)
+        self.stats = {"requests": 0, "batches": 0, "tokens_generated": 0,
+                      "prefill_tokens": 0}
+        self._jit_prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, self.max_len)
+        )
+        self._jit_decode = jax.jit(model.decode_step)
+
+    # ------------------------------------------------------------------
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        if self.greedy:
+            return jnp.argmax(logits[:, -1, :], axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits[:, -1, :])
+
+    def generate(
+        self,
+        prompts: np.ndarray,       # [B, S_prompt] int32
+        max_new_tokens: int = 32,
+        frames: np.ndarray | None = None,     # encdec
+        pixel_embeds: np.ndarray | None = None,  # vlm
+    ) -> dict:
+        """Generate for a batch of equal-length prompts."""
+        B, S = prompts.shape
+        cfg = self.model.cfg
+        self.stats["requests"] += B
+        self.stats["batches"] += 1
+        self.stats["prefill_tokens"] += int(B * S)
+        tokens = jnp.asarray(prompts, jnp.int32)
+        batch = {"tokens": tokens}
+        if frames is not None:
+            batch["frames"] = jnp.asarray(frames)
+        if pixel_embeds is not None:
+            batch["pixel_embeds"] = jnp.asarray(pixel_embeds)
+        logits, cache = self._jit_prefill(self.params, batch)
+        position = S
+
+        out = []
+        done = np.zeros(B, bool)
+        cur = np.asarray(self._sample(logits))
+        for step in range(max_new_tokens):
+            out.append(np.where(done, self.eos or 0, cur))
+            if self.eos is not None:
+                done |= cur == self.eos
+                if done.all():
+                    break
+            if step == max_new_tokens - 1:
+                break
+            logits, cache = self._jit_decode(
+                self.params, jnp.asarray(cur[:, None], jnp.int32), cache,
+                jnp.asarray(position, jnp.int32),
+            )
+            position += 1
+            cur = np.asarray(self._sample(logits))
+        generated = np.stack(out, axis=1) if out else np.zeros((B, 0), np.int32)
+        self.stats["tokens_generated"] += int(generated.size)
+        return {"tokens": generated, "prompt_len": S}
+
+
+class BatchAccumulator:
+    """Arrival-window request batching: collect up to ``max_batch`` requests
+    (padding prompts to a bucket length) before dispatching to the engine."""
+
+    def __init__(self, engine: ServeEngine, max_batch: int = 8,
+                 pad_token: int = 0):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.pad = pad_token
+        self._pending: list[tuple[np.ndarray, dict]] = []
+
+    def submit(self, prompt: np.ndarray, **kw) -> None:
+        self._pending.append((np.asarray(prompt, np.int32), kw))
+
+    def flush(self, max_new_tokens: int = 32) -> list[dict]:
+        if not self._pending:
+            return []
+        results = []
+        while self._pending:
+            chunk = self._pending[: self.max_batch]
+            self._pending = self._pending[self.max_batch :]
+            width = max(len(p) for p, _ in chunk)
+            batch = np.full((len(chunk), width), self.pad, np.int32)
+            for i, (p, _) in enumerate(chunk):
+                batch[i, width - len(p):] = p  # left-pad
+            out = self.engine.generate(batch, max_new_tokens=max_new_tokens)
+            for i in range(len(chunk)):
+                results.append(
+                    {"tokens": out["tokens"][i], "prompt_len": len(chunk[i][0])}
+                )
+        return results

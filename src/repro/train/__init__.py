@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, data pipeline, checkpointing, train loop,
+and the action providers exposing it to the automation services."""

@@ -1,0 +1,210 @@
+"""TrainingFabric: the compute-plane object the automation flows drive.
+
+The paper's pattern is funcX-mediated: flows invoke *registered functions*
+on *compute endpoints*.  ``TrainingFabric`` owns a model + optimizer state +
+data source and exposes exactly such functions (``train_steps``, ``evaluate``,
+``save_checkpoint``, ``restore_latest``, ``export_metrics``), which launchers
+register with the Compute action provider.  Fault tolerance:
+
+* ``inject_failure_at`` makes a training action raise
+  :class:`repro.core.errors.NodeFailure` at a chosen step — flows catch it
+  (``ErrorEquals: ["NodeFailure"]``) and route to restore states;
+* ``reshard(mesh)`` rebuilds the jitted step + re-places state for a NEW
+  mesh (elastic shrink/grow), restoring from the latest checkpoint.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.errors import NodeFailure
+from repro.models.model import Model
+from repro.parallel.sharding import (
+    ACT_RULES,
+    PARAM_RULES,
+    param_shardings,
+    use_rules,
+)
+from repro.train import checkpoint as ckpt
+from repro.train.data import SyntheticTokens
+from repro.train.loop import TrainState, init_state, make_eval_step, make_train_step
+
+
+class TrainingFabric:
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        train_cfg: TrainConfig,
+        batch: int,
+        seq_len: int,
+        ckpt_dir: str,
+        mesh=None,
+        data=None,
+        seed: int = 0,
+    ):
+        self.model_cfg = model_cfg
+        self.train_cfg = train_cfg
+        self.batch = batch
+        self.seq_len = seq_len
+        self.ckpt_dir = ckpt_dir
+        self.mesh = mesh
+        self.data = data or SyntheticTokens(
+            model_cfg.vocab_size, batch, seq_len, seed=seed
+        )
+        self.model = Model(model_cfg)
+        self.state: TrainState | None = None
+        self.history: list[dict] = []
+        self.inject_failure_at: int | None = None
+        self.checkpointer = ckpt.AsyncCheckpointer(ckpt_dir)
+        self._build()
+
+    # ------------------------------------------------------------- plumbing
+    def _build(self):
+        key = jax.random.PRNGKey(self.train_cfg.seed)
+        if self.state is None:
+            self.state, self.axes = init_state(self.model, key)
+        train_step = make_train_step(self.model, self.train_cfg)
+        eval_step = make_eval_step(self.model)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            shapes = jax.tree_util.tree_map(
+                lambda p: p.shape, self.state.params
+            )
+            shardings = param_shardings(
+                self.axes, self.mesh, PARAM_RULES, param_shapes=shapes
+            )
+            replicated = NamedSharding(self.mesh, PartitionSpec())
+            # optimizer m/v follow param shardings; step is replicated
+            state_sh = TrainState(
+                params=shardings,
+                opt=type(self.state.opt)(
+                    step=replicated, m=shardings, v=shardings
+                ),
+            )
+            self.state = jax.device_put(self.state, state_sh)
+
+            def wrapped(state, batch):
+                with use_rules(PARAM_RULES, ACT_RULES, self.mesh):
+                    return train_step(state, batch)
+
+            self._train_step = jax.jit(wrapped, donate_argnums=0)
+        else:
+            self._train_step = jax.jit(train_step, donate_argnums=0)
+        self._eval_step = jax.jit(eval_step)
+        self._data_iter = iter(self.data)
+
+    # ------------------------------------------------------------ functions
+    def train_steps(self, n_steps: int = 10, **_) -> dict:
+        """Run n training steps; raises NodeFailure at the injected step."""
+        t0 = time.time()
+        metrics = {}
+        for _ in range(n_steps):
+            step_now = int(jax.device_get(self.state.step))
+            if (
+                self.inject_failure_at is not None
+                and step_now >= self.inject_failure_at
+            ):
+                self.inject_failure_at = None
+                raise NodeFailure(
+                    f"simulated device loss at step {step_now}"
+                )
+            batch = {
+                k: jnp.asarray(v) for k, v in next(self._data_iter).items()
+            }
+            self.state, metrics = self._train_step(self.state, batch)
+        metrics = {k: float(jax.device_get(v)) for k, v in metrics.items()}
+        record = {
+            "step": int(jax.device_get(self.state.step)),
+            "seconds": time.time() - t0,
+            **metrics,
+        }
+        self.history.append(record)
+        return record
+
+    def evaluate(self, n_batches: int = 2, **_) -> dict:
+        losses = []
+        for i in range(n_batches):
+            batch = {
+                k: jnp.asarray(v)
+                for k, v in self.data.batch_at(10_000 + i).items()
+            }
+            losses.append(
+                float(jax.device_get(
+                    self._eval_step(self.state.params, batch)["loss"]
+                ))
+            )
+        return {
+            "eval_loss": float(np.mean(losses)),
+            "step": int(jax.device_get(self.state.step)),
+        }
+
+    def save_checkpoint(self, synchronous: bool = True, **_) -> dict:
+        step = int(jax.device_get(self.state.step))
+        if synchronous:
+            path = ckpt.save(self.ckpt_dir, step, self.state)
+        else:
+            self.checkpointer.save(step, self.state)
+            path = f"{self.ckpt_dir}/step_{step:08d} (async)"
+        return {"checkpoint": path, "step": step}
+
+    def restore_latest(self, **_) -> dict:
+        self.checkpointer.wait()
+        target = self.state
+        shardings = None
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            shapes = jax.tree_util.tree_map(
+                lambda p: p.shape, target.params
+            )
+            p_sh = param_shardings(
+                self.axes, self.mesh, PARAM_RULES, param_shapes=shapes
+            )
+            replicated = NamedSharding(self.mesh, PartitionSpec())
+            shardings = TrainState(
+                params=p_sh,
+                opt=type(target.opt)(step=replicated, m=p_sh, v=p_sh),
+            )
+        self.state, meta = ckpt.restore(
+            self.ckpt_dir, target, shardings=shardings
+        )
+        return {"restored_step": meta["step"]}
+
+    def reshard(self, mesh, **_) -> dict:
+        """Elastic rescale: rebuild the step for a new mesh + restore."""
+        self.checkpointer.wait()
+        old = self.mesh.devices.shape if self.mesh is not None else None
+        self.mesh = mesh
+        self._build()
+        result = self.restore_latest()
+        return {
+            "old_mesh": old,
+            "new_mesh": mesh.devices.shape if mesh is not None else None,
+            **result,
+        }
+
+    def export_metrics(self, **_) -> dict:
+        return {"history": self.history[-20:],
+                "step": int(jax.device_get(self.state.step))}
+
+    # -------------------------------------------------------- registration
+    def register_all(self, compute_provider, endpoint_name="training-fabric",
+                     mode="inline") -> dict:
+        """Register every fabric function with a Compute action provider.
+
+        Returns {"endpoint_id": ..., "functions": {name: function_id}}.
+        """
+        eid = compute_provider.register_endpoint(endpoint_name, mode=mode)
+        fns = {}
+        for name in ("train_steps", "evaluate", "save_checkpoint",
+                     "restore_latest", "export_metrics"):
+            fns[name] = compute_provider.register_function(
+                getattr(self, name), name=name
+            )
+        return {"endpoint_id": eid, "functions": fns}

@@ -1,0 +1,107 @@
+"""Train loop: TrainState, jit'd train_step builder, microbatch accumulation.
+
+``make_train_step(model, train_cfg)`` returns the pure function the launcher
+jits (and the dry-run lowers): (state, batch) -> (state, metrics).  Gradient
+accumulation runs as a ``lax.scan`` over microbatches (activation memory /
+``microbatches``); optional bf16 gradient compression halves the backward
+collective bytes (see parallel.compression).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.models.model import Model
+from repro.parallel.compression import grads_in_bf16
+from repro.train import optimizer as opt
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt: opt.AdamWState
+
+    @property
+    def step(self):
+        return self.opt.step
+
+
+def init_state(model: Model, key) -> tuple[TrainState, object]:
+    params, axes = model.init(key)
+    return TrainState(params=params, opt=opt.init_adamw(params)), axes
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"global batch {b} % microbatches {n} != 0"
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(model: Model, tcfg: TrainConfig, grad_shardings=None):
+    """Build the jit-able train step for this model/config.
+
+    ``grad_shardings`` (a pytree of NamedSharding matching params): constrain
+    gradients to the parameter sharding right after the backward pass, which
+    lets the SPMD partitioner emit reduce-scatter instead of
+    all-reduce(+slice) for FSDP gradient reductions (≈2× collective bytes).
+    """
+
+    def grad_fn(params, mb):
+        if tcfg.grad_compression == "bf16":
+            loss, grads = grads_in_bf16(
+                lambda p, b: model.loss(p, b), params, mb
+            )
+        else:
+            loss, grads = jax.value_and_grad(model.loss)(params, mb)
+        if grad_shardings is not None:
+            grads = jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, grads, grad_shardings
+            )
+        return loss, grads
+
+    def train_step(state: TrainState, batch: dict):
+        if tcfg.microbatches > 1:
+            mbs = _split_microbatches(batch, tcfg.microbatches)
+
+            def accum(carry, mb):
+                loss_sum, grad_sum = carry
+                loss, grads = grad_fn(state.params, mb)
+                grad_sum = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), grad_sum, grads
+                )
+                return (loss_sum + loss, grad_sum), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (loss_sum, grads), _ = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), zeros), mbs
+            )
+            loss = loss_sum / tcfg.microbatches
+            grads = jax.tree_util.tree_map(
+                lambda g: g / tcfg.microbatches, grads
+            )
+        else:
+            loss, grads = grad_fn(state.params, batch)
+
+        params, opt_state, metrics = opt.adamw_update(
+            state.params, grads, state.opt, tcfg
+        )
+        metrics = {"loss": loss.astype(jnp.float32), **metrics}
+        return TrainState(params, opt_state), metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        loss = model.loss(params, batch)
+        return {"loss": loss.astype(jnp.float32)}
+
+    return eval_step

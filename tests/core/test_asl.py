@@ -1,0 +1,176 @@
+import pytest
+
+from repro.core import asl
+from repro.core.errors import FlowValidationError
+
+
+def _min_flow(**extra_states):
+    states = {
+        "Go": {"Type": "Pass", "End": True},
+        **extra_states,
+    }
+    return {"StartAt": "Go", "States": states}
+
+
+def test_parse_minimal():
+    flow = asl.parse(_min_flow())
+    assert flow.start_at == "Go"
+    assert flow.states["Go"].kind == "Pass"
+
+
+def test_paper_example_flow():
+    """The five-state skeleton of paper §4.2.1 parses and validates."""
+    definition = {
+        "StartAt": "Transfer",
+        "States": {
+            "Transfer": {
+                "Type": "Action",
+                "ActionUrl": "ap://transfer",
+                "Parameters": {"source_path.$": "$.input.src"},
+                "ResultPath": "$.TransferResult",
+                "Next": "Validate",
+            },
+            "Validate": {
+                "Type": "Action",
+                "ActionUrl": "ap://compute",
+                "WaitTime": 7200,
+                "ExceptionOnActionFailure": True,
+                "Catch": [
+                    {
+                        "ErrorEquals": ["ActionFailedException"],
+                        "ResultPath": "$.ValidFailureInfo",
+                        "Next": "Failure",
+                    }
+                ],
+                "ResultPath": "$.Valid",
+                "Next": "Check",
+            },
+            "Check": {
+                "Type": "Choice",
+                "Choices": [
+                    {"Variable": "$.Valid.details.ok", "BooleanEquals": True,
+                     "Next": "Publish"}
+                ],
+                "Default": "Failure",
+            },
+            "Publish": {
+                "Type": "Action",
+                "ActionUrl": "ap://search",
+                "RunAs": "ComputeProvider",
+                "End": True,
+            },
+            "Failure": {"Type": "Fail", "Error": "ValidationFailed",
+                        "Cause": "input did not validate"},
+        },
+    }
+    flow = asl.parse(definition)
+    assert flow.states["Validate"].wait_time == 7200
+    assert flow.states["Validate"].catch[0].next == "Failure"
+    assert flow.states["Publish"].run_as == "ComputeProvider"
+    assert asl.action_urls(flow) == ["ap://transfer", "ap://compute", "ap://search"]
+    assert asl.run_as_roles(flow) == ["ComputeProvider"]
+
+
+@pytest.mark.parametrize(
+    "mutate",
+    [
+        lambda d: d.pop("StartAt"),
+        lambda d: d.update(StartAt="Missing"),
+        lambda d: d["States"].update(Bad={"Type": "Nope", "End": True}),
+        lambda d: d["States"].update(
+            Orphan={"Type": "Pass", "Next": "NoSuchState"}
+        ),
+        lambda d: d["States"]["Go"].pop("End"),
+        lambda d: d["States"]["Go"].update(Next="Go2", End=True)
+        or d["States"].update(Go2={"Type": "Pass", "End": True}),
+    ],
+)
+def test_validation_failures(mutate):
+    doc = _min_flow()
+    mutate(doc)
+    with pytest.raises(FlowValidationError):
+        asl.parse(doc)
+
+
+def test_unreachable_states_rejected():
+    doc = _min_flow(Island={"Type": "Pass", "End": True})
+    with pytest.raises(FlowValidationError) as e:
+        asl.parse(doc)
+    assert "unreachable" in str(e.value)
+
+
+def test_choice_rules_evaluate():
+    rule = asl._parse_choice_rule(
+        {
+            "And": [
+                {"Variable": "$.a", "NumericGreaterThan": 5},
+                {"Not": {"Variable": "$.b", "StringEquals": "x"}},
+            ],
+            "Next": "T",
+        },
+        "t",
+        top=True,
+    )
+    assert rule.evaluate({"a": 6, "b": "y"})
+    assert not rule.evaluate({"a": 6, "b": "x"})
+    assert not rule.evaluate({"a": 5, "b": "y"})
+    # missing variable -> false, not an error
+    assert not rule.evaluate({"b": "y"})
+
+
+def test_choice_ispresent_and_matches():
+    present = asl._parse_choice_rule(
+        {"Variable": "$.x", "IsPresent": True, "Next": "T"}, "t", True
+    )
+    assert present.evaluate({"x": None})
+    assert not present.evaluate({})
+    glob = asl._parse_choice_rule(
+        {"Variable": "$.f", "StringMatches": "*.tiff", "Next": "T"}, "t", True
+    )
+    assert glob.evaluate({"f": "a.tiff"})
+    assert not glob.evaluate({"f": "a.h5"})
+
+
+def test_numeric_type_mismatch_is_false():
+    rule = asl._parse_choice_rule(
+        {"Variable": "$.a", "NumericEquals": 1, "Next": "T"}, "t", True
+    )
+    assert not rule.evaluate({"a": "1"})
+    assert not rule.evaluate({"a": True})
+
+
+def test_wait_state_needs_exactly_one_duration():
+    with pytest.raises(FlowValidationError):
+        asl.parse(
+            {"StartAt": "W", "States": {"W": {"Type": "Wait", "End": True}}}
+        )
+    with pytest.raises(FlowValidationError):
+        asl.parse(
+            {
+                "StartAt": "W",
+                "States": {
+                    "W": {"Type": "Wait", "Seconds": 1, "SecondsPath": "$.s",
+                          "End": True}
+                },
+            }
+        )
+
+
+def test_parallel_branches_parse():
+    doc = {
+        "StartAt": "P",
+        "States": {
+            "P": {
+                "Type": "Parallel",
+                "Branches": [
+                    {"StartAt": "A", "States": {"A": {"Type": "Pass", "End": True}}},
+                    {"StartAt": "B", "States": {"B": {"Type": "Pass", "End": True}}},
+                ],
+                "ResultPath": "$.branches",
+                "Next": "Done",
+            },
+            "Done": {"Type": "Succeed"},
+        },
+    }
+    flow = asl.parse(doc)
+    assert len(flow.states["P"].branches) == 2

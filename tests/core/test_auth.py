@@ -1,0 +1,102 @@
+import pytest
+
+from repro.core.auth import AuthService, Caller, principal_matches
+from repro.core.errors import AuthError, ConsentRequired, NotFound
+
+
+@pytest.fixture
+def auth():
+    a = AuthService()
+    a.create_identity("alice", groups={"aps"})
+    a.create_identity("bob")
+    a.register_resource_server("ap.transfer")
+    a.register_scope("ap.transfer", "urn:s:transfer")
+    a.register_resource_server("ap.compute")
+    a.register_scope("ap.compute", "urn:s:compute")
+    a.register_resource_server("flow.f1")
+    a.register_scope("flow.f1", "urn:s:flow.f1", ["urn:s:transfer", "urn:s:compute"])
+    return a
+
+
+def test_token_lifecycle(auth):
+    auth.grant_consent("alice", "urn:s:transfer")
+    token = auth.issue_token("alice", "urn:s:transfer")
+    info = auth.introspect(token)
+    assert info["active"] and info["username"] == "alice"
+    assert info["scope"] == "urn:s:transfer"
+    assert auth.introspect("tok-bogus") == {"active": False}
+    auth.invalidate_token(token)
+    assert auth.introspect(token)["active"] is False
+
+
+def test_consent_required(auth):
+    with pytest.raises(ConsentRequired):
+        auth.issue_token("alice", "urn:s:compute")
+
+
+def test_dependent_scope_closure(auth):
+    closure = set(auth.dependency_closure("urn:s:flow.f1"))
+    assert closure == {"urn:s:flow.f1", "urn:s:transfer", "urn:s:compute"}
+    # consenting to the flow scope covers the closure (OAuth consent screen)
+    auth.grant_consent("alice", "urn:s:flow.f1")
+    token = auth.issue_token("alice", "urn:s:flow.f1")
+    dependents = auth.get_dependent_tokens(token)
+    assert set(dependents) == {"urn:s:transfer", "urn:s:compute"}
+    for scope, t in dependents.items():
+        assert auth.introspect(t)["scope"] == scope
+        assert auth.introspect(t)["username"] == "alice"
+
+
+def test_dependent_tokens_need_consent(auth):
+    auth.grant_consent("bob", "urn:s:flow.f1")
+    token = auth.issue_token("bob", "urn:s:flow.f1")
+    auth.revoke_consent("bob", "urn:s:transfer")
+    with pytest.raises(ConsentRequired):
+        auth.get_dependent_tokens(token)
+
+
+def test_revocation_invalidates_tokens(auth):
+    auth.grant_consent("alice", "urn:s:transfer")
+    token = auth.issue_token("alice", "urn:s:transfer")
+    auth.revoke_consent("alice", "urn:s:transfer")
+    assert auth.introspect(token)["active"] is False
+    with pytest.raises(AuthError):
+        auth.require(token, "urn:s:transfer")
+
+
+def test_require_scope_mismatch(auth):
+    auth.grant_consent("alice", "urn:s:transfer")
+    token = auth.issue_token("alice", "urn:s:transfer")
+    assert auth.require(token, "urn:s:transfer").username == "alice"
+    with pytest.raises(AuthError):
+        auth.require(token, "urn:s:compute")
+    with pytest.raises(AuthError):
+        auth.require(None, "urn:s:compute")
+
+
+def test_unknown_entities(auth):
+    with pytest.raises(NotFound):
+        auth.get_identity("carol")
+    with pytest.raises(NotFound):
+        auth.register_scope("nope", "urn:x")
+    with pytest.raises(NotFound):
+        auth.register_scope("ap.transfer", "urn:y", ["urn:unregistered"])
+
+
+def test_principal_matching(auth):
+    alice = auth.get_identity("alice")
+    assert principal_matches(alice, "user:alice")
+    assert not principal_matches(alice, "user:bob")
+    assert principal_matches(alice, "group:aps")
+    assert principal_matches(alice, "public")
+    assert principal_matches(alice, "all_authenticated_users")
+    assert not principal_matches(None, "all_authenticated_users")
+    assert principal_matches(None, "public")
+
+
+def test_caller_wallet():
+    auth = AuthService()
+    ident = auth.create_identity("x")
+    caller = Caller(identity=ident, tokens={"urn:a": "tok-1"})
+    assert caller.token_for("urn:a") == "tok-1"
+    assert caller.token_for("urn:b") is None

@@ -1,0 +1,337 @@
+"""Engine semantics under a VirtualClock: deterministic, event-driven."""
+
+import pytest
+
+from repro.core import asl
+from repro.core.actions import ActionRegistry
+from repro.core.clock import VirtualClock
+from repro.core.engine import (
+    RUN_CANCELLED,
+    RUN_FAILED,
+    RUN_SUCCEEDED,
+    FlowEngine,
+    PollingPolicy,
+)
+from repro.core.providers import EchoProvider, SleepProvider, UserSelectionProvider
+from repro.core.providers.user_selection import AutoRespond
+
+
+def make_engine(polling=None, **providers):
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    sleep = SleepProvider(clock=clock)
+    registry.register(sleep)
+    for url, p in providers.items():
+        registry.register(p, url)
+    engine = FlowEngine(registry, clock=clock, polling=polling)
+    sleep.scheduler = engine.scheduler
+    return engine, clock
+
+
+def run_flow(engine, definition, flow_input):
+    flow = asl.parse(definition)
+    run = engine.start_run(flow, flow_input)
+    return engine.run_to_completion(run.run_id)
+
+
+def test_pass_choice_fail_succeed():
+    definition = {
+        "StartAt": "Prep",
+        "States": {
+            "Prep": {"Type": "Pass", "Parameters": {"double.$": "$.n"},
+                     "ResultPath": "$.prep", "Next": "Branch"},
+            "Branch": {
+                "Type": "Choice",
+                "Choices": [
+                    {"Variable": "$.n", "NumericGreaterThan": 5, "Next": "Big"}
+                ],
+                "Default": "Small",
+            },
+            "Big": {"Type": "Succeed"},
+            "Small": {"Type": "Fail", "Error": "TooSmall", "Cause": "n <= 5"},
+        },
+    }
+    engine, _ = make_engine()
+    run = run_flow(engine, definition, {"n": 10})
+    assert run.status == RUN_SUCCEEDED
+    assert run.context["prep"] == {"double": 10}
+
+    run2 = run_flow(engine, definition, {"n": 1})
+    assert run2.status == RUN_FAILED
+    assert run2.error["Error"] == "TooSmall"
+
+
+def test_action_result_path_and_context_flow():
+    definition = {
+        "StartAt": "E1",
+        "States": {
+            "E1": {"Type": "Action", "ActionUrl": "ap://echo",
+                   "Parameters": {"echo_string.$": "$.msg"},
+                   "ResultPath": "$.first", "Next": "E2"},
+            "E2": {"Type": "Action", "ActionUrl": "ap://echo",
+                   "Parameters": {"echo_string.$": "$.first.details.echo_string"},
+                   "ResultPath": "$.second", "End": True},
+        },
+    }
+    engine, _ = make_engine()
+    run = run_flow(engine, definition, {"msg": "hello"})
+    assert run.status == RUN_SUCCEEDED
+    assert run.context["second"]["details"]["echo_string"] == "hello"
+    assert run.context["second"]["status"] == "SUCCEEDED"
+
+
+def test_sleep_action_polling_overhead_matches_paper_model():
+    """Paper §6.1: first poll at 2s, doubling -> mean no-op overhead 2.88s.
+
+    For a sleep of s seconds, completion is observed at the first poll time
+    >= s, i.e. at 2*(2^k)-2... actually poll times are 2, 6, 14, 30... =
+    2^(k+1)-2. Overhead = poll_time - s.
+    """
+    definition = {
+        "StartAt": "S",
+        "States": {"S": {"Type": "Action", "ActionUrl": "ap://sleep",
+                          "Parameters": {"seconds.$": "$.seconds"},
+                          "ResultPath": "$.r", "End": True}},
+    }
+    # sleep(0) is still async: observed at the first poll (t=2) — the
+    # paper's 2.88s no-op overhead floor
+    for seconds, expected_completion in [(0.0, 2.0), (1.0, 2.0), (3.0, 6.0),
+                                         (10.0, 14.0), (100.0, 126.0)]:
+        engine, clock = make_engine()
+        run = run_flow(engine, definition, {"seconds": seconds})
+        assert run.status == RUN_SUCCEEDED
+        observed = run.completion_time - run.start_time
+        assert observed == pytest.approx(expected_completion, abs=1e-6), seconds
+
+
+def test_callback_mode_eliminates_polling_overhead():
+    definition = {
+        "StartAt": "S",
+        "States": {"S": {"Type": "Action", "ActionUrl": "ap://sleep",
+                          "Parameters": {"seconds": 37.0},
+                          "ResultPath": "$.r", "End": True}},
+    }
+    engine, clock = make_engine(polling=PollingPolicy(use_callbacks=True))
+    run = run_flow(engine, definition, {})
+    assert run.status == RUN_SUCCEEDED
+    overhead = (run.completion_time - run.start_time) - 37.0
+    assert overhead == pytest.approx(0.0, abs=1e-6)
+    # and far fewer polls than backoff mode would need
+    assert engine.stats["polls"] <= 1
+
+
+def test_wait_time_timeout_fails_state():
+    definition = {
+        "StartAt": "S",
+        "States": {
+            "S": {"Type": "Action", "ActionUrl": "ap://sleep",
+                  "Parameters": {"seconds": 1000.0}, "WaitTime": 50,
+                  "End": True},
+        },
+    }
+    engine, clock = make_engine()
+    run = run_flow(engine, definition, {})
+    assert run.status == RUN_FAILED
+    assert run.error["Error"] == "States.Timeout"
+    assert clock.now() <= 60  # failed promptly after the deadline, not at 1000
+
+
+def test_catch_routes_failure():
+    definition = {
+        "StartAt": "S",
+        "States": {
+            "S": {"Type": "Action", "ActionUrl": "ap://sleep",
+                  "Parameters": {"seconds": 1000.0}, "WaitTime": 10,
+                  "Catch": [{"ErrorEquals": ["States.Timeout"],
+                              "ResultPath": "$.err", "Next": "Cleanup"}],
+                  "End": True},
+            "Cleanup": {"Type": "Pass", "Parameters": {"recovered": True},
+                        "ResultPath": "$.cleanup", "End": True},
+        },
+    }
+    engine, _ = make_engine()
+    run = run_flow(engine, definition, {})
+    assert run.status == RUN_SUCCEEDED
+    assert run.context["err"]["Error"] == "States.Timeout"
+    assert run.context["cleanup"] == {"recovered": True}
+
+
+def test_catch_wildcard_and_action_failed():
+    selection = UserSelectionProvider(clock=VirtualClock())
+    definition = {
+        "StartAt": "Bad",
+        "States": {
+            "Bad": {"Type": "Action", "ActionUrl": "ap://echo",
+                    # echo schema allows anything; force failure via unknown AP
+                    "Parameters": {}, "Next": "Done"},
+            "Done": {"Type": "Succeed"},
+        },
+    }
+    # instead: unknown action URL should fail the run (no catch)
+    definition["States"]["Bad"]["ActionUrl"] = "ap://nope"
+    engine, _ = make_engine()
+    run = run_flow(engine, definition, {})
+    assert run.status == RUN_FAILED
+
+    definition["States"]["Bad"]["Catch"] = [
+        {"ErrorEquals": ["States.ALL"], "Next": "Done"}
+    ]
+    engine2, _ = make_engine()
+    run2 = run_flow(engine2, definition, {})
+    assert run2.status == RUN_SUCCEEDED
+
+
+def test_retry_with_backoff_then_success():
+    attempts = []
+
+    class Flaky(EchoProvider):
+        url = "ap://flaky"
+        scope_suffix = "flaky"
+
+        def _start(self, action, identity):
+            attempts.append(self.clock.now())
+            if len(attempts) < 3:
+                raise RuntimeError("transient")
+            super()._start(action, identity)
+
+    clock = VirtualClock()
+    engine, _ = make_engine()
+    engine.registry.register(Flaky(clock=engine.clock), "ap://flaky")
+    definition = {
+        "StartAt": "F",
+        "States": {
+            "F": {"Type": "Action", "ActionUrl": "ap://flaky",
+                  "Parameters": {},
+                  "Retry": [{"ErrorEquals": ["States.ALL"],
+                              "IntervalSeconds": 5, "MaxAttempts": 5,
+                              "BackoffRate": 2.0}],
+                  "End": True},
+        },
+    }
+    run = run_flow(engine, definition, {})
+    assert run.status == RUN_SUCCEEDED
+    assert len(attempts) == 3
+    assert engine.stats["retries"] == 2
+    # retry delays: 5, then 10
+    assert attempts[1] - attempts[0] == pytest.approx(5.0)
+    assert attempts[2] - attempts[1] == pytest.approx(10.0)
+
+
+def test_wait_state_advances_clock():
+    definition = {
+        "StartAt": "W",
+        "States": {
+            "W": {"Type": "Wait", "SecondsPath": "$.pause", "Next": "Done"},
+            "Done": {"Type": "Succeed"},
+        },
+    }
+    engine, clock = make_engine()
+    run = run_flow(engine, definition, {"pause": 42})
+    assert run.status == RUN_SUCCEEDED
+    assert clock.now() == pytest.approx(42.0)
+
+
+def test_parallel_branches_join_and_fail():
+    definition = {
+        "StartAt": "P",
+        "States": {
+            "P": {
+                "Type": "Parallel",
+                "Branches": [
+                    {"StartAt": "A", "States": {
+                        "A": {"Type": "Action", "ActionUrl": "ap://sleep",
+                              "Parameters": {"seconds": 3.0}, "End": True}}},
+                    {"StartAt": "B", "States": {
+                        "B": {"Type": "Pass", "Parameters": {"b": 1},
+                              "ResultPath": "$.out", "End": True}}},
+                ],
+                "ResultPath": "$.joined",
+                "Next": "Done",
+            },
+            "Done": {"Type": "Succeed"},
+        },
+    }
+    engine, _ = make_engine()
+    run = run_flow(engine, definition, {"seed": 1})
+    assert run.status == RUN_SUCCEEDED
+    assert len(run.context["joined"]) == 2
+    assert run.context["joined"][1]["out"] == {"b": 1}
+
+    # failing branch fails the parallel state
+    definition["States"]["P"]["Branches"][1]["States"]["B"] = {
+        "Type": "Fail", "Error": "Boom", "Cause": "branch failure"
+    }
+    engine2, _ = make_engine()
+    run2 = run_flow(engine2, definition, {})
+    assert run2.status == RUN_FAILED
+    assert run2.error["Error"] == "States.BranchFailed"
+
+
+def test_cancel_run():
+    definition = {
+        "StartAt": "S",
+        "States": {"S": {"Type": "Action", "ActionUrl": "ap://sleep",
+                          "Parameters": {"seconds": 500.0}, "End": True}},
+    }
+    engine, clock = make_engine()
+    flow = asl.parse(definition)
+    run = engine.start_run(flow, {})
+    engine.scheduler.drain(until=5.0)
+    engine.cancel_run(run.run_id)
+    engine.run_to_completion(run.run_id)
+    assert run.status == RUN_CANCELLED
+
+
+def test_user_selection_blocks_until_response():
+    clock = VirtualClock()
+    sel = UserSelectionProvider(clock=clock)
+    engine, _ = make_engine(**{"ap://user_selection": sel})
+    sel.clock = engine.clock
+    definition = {
+        "StartAt": "Review",
+        "States": {"Review": {"Type": "Action", "ActionUrl": "ap://user_selection",
+                               "Parameters": {"options": ["approve", "reject"]},
+                               "ResultPath": "$.review", "End": True}},
+    }
+    flow = asl.parse(definition)
+    run = engine.start_run(flow, {})
+    engine.run_to_completion(run.run_id, until=3600.0)
+    assert run.status == "ACTIVE"  # stalled awaiting human input
+    [action_id] = sel.pending()
+    sel.respond(action_id, "approve", responder="curator")
+    engine.run_to_completion(run.run_id)
+    assert run.status == RUN_SUCCEEDED
+    assert run.context["review"]["details"]["selection"] == "approve"
+
+
+def test_auto_respond_selection():
+    clock = VirtualClock()
+    sel = UserSelectionProvider(clock=clock, auto_respond=AutoRespond(30.0, 1))
+    engine, _ = make_engine(**{"ap://user_selection": sel})
+    sel.clock = engine.clock
+    definition = {
+        "StartAt": "Review",
+        "States": {"Review": {"Type": "Action", "ActionUrl": "ap://user_selection",
+                               "Parameters": {"options": ["approve", "reject"]},
+                               "ResultPath": "$.review", "End": True}},
+    }
+    flow = asl.parse(definition)
+    run = engine.start_run(flow, {})
+    engine.run_to_completion(run.run_id)
+    assert run.status == RUN_SUCCEEDED
+    assert run.context["review"]["details"]["selection"] == "reject"
+
+
+def test_events_log_records_lifecycle():
+    definition = {
+        "StartAt": "E",
+        "States": {"E": {"Type": "Action", "ActionUrl": "ap://echo",
+                          "Parameters": {"echo_string": "x"}, "End": True}},
+    }
+    engine, _ = make_engine()
+    run = run_flow(engine, definition, {})
+    codes = [e["code"] for e in run.events]
+    assert codes[0] == "FlowStarted"
+    assert "StateEntered" in codes and "ActionCompleted" in codes
+    assert codes[-1] == "FlowCompleted"

@@ -1,0 +1,70 @@
+"""Real-clock engine smoke tests: threaded dispatcher + concurrent clients
+(the execution mode behind the Fig 7 throughput benchmark)."""
+
+import threading
+
+from repro.core import asl
+from repro.core.actions import ActionRegistry
+from repro.core.clock import RealClock
+from repro.core.engine import RUN_SUCCEEDED, FlowEngine, PollingPolicy
+from repro.core.providers import EchoProvider, SleepProvider
+
+PASS_FLOW = asl.parse(
+    {"StartAt": "Noop", "States": {"Noop": {"Type": "Pass", "End": True}}}
+)
+
+
+def test_concurrent_clients_real_clock():
+    clock = RealClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    engine = FlowEngine(registry, clock=clock, max_workers=4)
+    try:
+        results = []
+        lock = threading.Lock()
+
+        def client(n):
+            for _ in range(5):
+                run = engine.start_run(PASS_FLOW, {"n": n}, flow_id="pass")
+                engine.wait(run.run_id, timeout=10.0)
+                with lock:
+                    results.append(run.status)
+
+        threads = [threading.Thread(target=client, args=(i,)) for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30.0)
+        assert len(results) == 40
+        assert all(s == RUN_SUCCEEDED for s in results)
+    finally:
+        engine.shutdown()
+
+
+def test_async_action_real_clock_callbacks():
+    clock = RealClock()
+    registry = ActionRegistry()
+    sleep = SleepProvider(clock=clock)
+    registry.register(sleep)
+    engine = FlowEngine(
+        registry,
+        clock=clock,
+        polling=PollingPolicy(initial_seconds=0.05, cap_seconds=0.5,
+                              use_callbacks=True),
+        max_workers=2,
+    )
+    sleep.scheduler = engine.scheduler
+    try:
+        flow = asl.parse(
+            {"StartAt": "S",
+             "States": {"S": {"Type": "Action", "ActionUrl": "ap://sleep",
+                               "Parameters": {"seconds": 0.2},
+                               "ResultPath": "$.r", "End": True}}}
+        )
+        run = engine.start_run(flow, {}, flow_id="sleepy")
+        engine.wait(run.run_id, timeout=10.0)
+        assert run.status == RUN_SUCCEEDED
+        elapsed = run.completion_time - run.start_time
+        assert elapsed < 2.0
+    finally:
+        engine.shutdown()

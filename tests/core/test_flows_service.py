@@ -1,0 +1,228 @@
+"""FlowsService: publish/discover/invoke/manage, RBAC, auth delegation,
+flow-as-action composition."""
+
+import pytest
+
+from repro.core.actions import ActionRegistry
+from repro.core.auth import AuthService, Caller
+from repro.core.clock import VirtualClock
+from repro.core.engine import RUN_FAILED, RUN_SUCCEEDED
+from repro.core.errors import (
+    FlowValidationError,
+    Forbidden,
+    InputValidationError,
+    NotFound,
+)
+from repro.core.flows_service import FlowsService
+from repro.core.providers import EchoProvider, SleepProvider
+
+ECHO_FLOW = {
+    "StartAt": "E",
+    "States": {
+        "E": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string.$": "$.msg"},
+              "ResultPath": "$.echoed", "End": True}
+    },
+}
+SCHEMA = {
+    "type": "object",
+    "properties": {"msg": {"type": "string"}},
+    "required": ["msg"],
+    "additionalProperties": True,
+}
+
+
+def make_service(with_auth=True):
+    clock = VirtualClock()
+    auth = AuthService() if with_auth else None
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock, auth=auth))
+    registry.register(SleepProvider(clock=clock, auth=auth))
+    svc = FlowsService(registry, clock=clock, auth=auth)
+    return svc, auth, clock
+
+
+def caller_for(auth, svc, username, flow_record):
+    """Consent + token acquisition for running a flow (the OAuth dance)."""
+    auth.create_identity(username)
+    auth.grant_consent(username, flow_record.scope)
+    token = auth.issue_token(username, flow_record.scope)
+    return Caller(identity=auth.get_identity(username),
+                  tokens={flow_record.scope: token})
+
+
+def test_publish_validates():
+    svc, auth, _ = make_service()
+    with pytest.raises(FlowValidationError):
+        svc.publish_flow({"StartAt": "X", "States": {}})
+    with pytest.raises(FlowValidationError):
+        svc.publish_flow(ECHO_FLOW, input_schema={"type": "nope"})
+    from repro.core.errors import ActionUnknown
+
+    with pytest.raises(ActionUnknown):
+        svc.publish_flow(
+            {"StartAt": "E",
+             "States": {"E": {"Type": "Action", "ActionUrl": "ap://missing",
+                               "End": True}}}
+        )
+
+
+def test_publish_registers_dependent_scopes():
+    svc, auth, _ = make_service()
+    record = svc.publish_flow(ECHO_FLOW, input_schema=SCHEMA, owner="alice",
+                              title="Echo flow")
+    scope = auth.get_scope(record.scope)
+    assert scope.dependent_scopes == ["urn:repro:scopes:echo:run"]
+
+
+def test_run_flow_end_to_end_with_delegation():
+    svc, auth, clock = make_service()
+    record = svc.publish_flow(
+        ECHO_FLOW, input_schema=SCHEMA, owner="alice",
+        starters=["all_authenticated_users"],
+    )
+    caller = caller_for(auth, svc, "bob", record)
+    run = svc.run_flow(record.flow_id, {"msg": "hello"}, caller=caller)
+    svc.engine.run_to_completion(run.run_id)
+    assert run.status == RUN_SUCCEEDED
+    assert run.context["echoed"]["details"]["echo_string"] == "hello"
+    assert run.creator == "bob"
+
+
+def test_input_schema_enforced():
+    svc, auth, _ = make_service()
+    record = svc.publish_flow(ECHO_FLOW, input_schema=SCHEMA, owner="alice",
+                              starters=["all_authenticated_users"])
+    caller = caller_for(auth, svc, "bob", record)
+    with pytest.raises(InputValidationError):
+        svc.run_flow(record.flow_id, {"msg": 42}, caller=caller)
+    with pytest.raises(InputValidationError):
+        svc.run_flow(record.flow_id, {}, caller=caller)
+
+
+def test_starter_role_enforced():
+    svc, auth, _ = make_service()
+    record = svc.publish_flow(ECHO_FLOW, input_schema=SCHEMA, owner="alice",
+                              starters=["user:carol"])
+    caller = caller_for(auth, svc, "bob", record)
+    with pytest.raises(Forbidden):
+        svc.run_flow(record.flow_id, {"msg": "x"}, caller=caller)
+
+
+def test_missing_token_rejected():
+    svc, auth, _ = make_service()
+    record = svc.publish_flow(ECHO_FLOW, input_schema=SCHEMA, owner="alice",
+                              starters=["all_authenticated_users"])
+    auth.create_identity("bob")
+    bare = Caller(identity=auth.get_identity("bob"))
+    with pytest.raises(InputValidationError):
+        svc.run_flow(record.flow_id, {"msg": "x"}, caller=bare)
+
+
+def test_visibility_and_search():
+    svc, auth, _ = make_service()
+    svc.publish_flow(ECHO_FLOW, input_schema=SCHEMA, owner="alice",
+                     title="SSX analysis", keywords=["aps", "ssx"],
+                     viewers=["public"])
+    svc.publish_flow(ECHO_FLOW, input_schema=SCHEMA, owner="alice",
+                     title="Private flow", viewers=["user:alice"])
+    auth.create_identity("eve")
+    eve = Caller(identity=auth.get_identity("eve"))
+    visible = svc.search_flows(caller=eve)
+    assert [r.title for r in visible] == ["SSX analysis"]
+    assert svc.search_flows("ssx", caller=eve)[0].title == "SSX analysis"
+    alice = Caller(identity=auth.create_identity("alice"))
+    assert len(svc.search_flows(caller=alice)) == 2
+
+
+def test_update_and_remove_roles():
+    svc, auth, _ = make_service()
+    record = svc.publish_flow(ECHO_FLOW, input_schema=SCHEMA, owner="alice",
+                              administrators=["user:adm"])
+    auth.create_identity("adm")
+    auth.create_identity("alice")
+    auth.create_identity("bob")
+    adm = Caller(identity=auth.get_identity("adm"))
+    bob = Caller(identity=auth.get_identity("bob"))
+    alice = Caller(identity=auth.get_identity("alice"))
+    svc.update_flow(record.flow_id, caller=adm, title="New title")
+    assert record.title == "New title"
+    with pytest.raises(Forbidden):
+        svc.update_flow(record.flow_id, caller=bob, title="X")
+    # only the owner may remove (admins may not)
+    with pytest.raises(Forbidden):
+        svc.remove_flow(record.flow_id, caller=adm)
+    svc.remove_flow(record.flow_id, caller=alice)
+    with pytest.raises(NotFound):
+        svc.get_flow(record.flow_id)
+
+
+def test_run_monitor_manager_roles():
+    svc, auth, clock = make_service()
+    record = svc.publish_flow(
+        {"StartAt": "S",
+         "States": {"S": {"Type": "Action", "ActionUrl": "ap://sleep",
+                           "Parameters": {"seconds": 1000.0}, "End": True}}},
+        owner="alice", starters=["all_authenticated_users"],
+    )
+    caller = caller_for(auth, svc, "bob", record)
+    auth.create_identity("watcher")
+    auth.create_identity("boss")
+    auth.create_identity("rando")
+    run = svc.run_flow(record.flow_id, {}, caller=caller,
+                       monitor_by=["user:watcher"], manage_by=["user:boss"])
+    svc.engine.scheduler.drain(until=5.0)
+    watcher = Caller(identity=auth.get_identity("watcher"))
+    boss = Caller(identity=auth.get_identity("boss"))
+    rando = Caller(identity=auth.get_identity("rando"))
+    assert svc.run_status(run.run_id, caller=watcher)["status"] == "ACTIVE"
+    assert len(svc.run_events(run.run_id, caller=watcher)) >= 2
+    with pytest.raises(Forbidden):
+        svc.run_status(run.run_id, caller=rando)
+    with pytest.raises(Forbidden):
+        svc.cancel_run(run.run_id, caller=watcher)  # monitor may not cancel
+    svc.cancel_run(run.run_id, caller=boss)
+    svc.engine.run_to_completion(run.run_id, until=10.0)
+    assert run.status == "CANCELLED"
+
+
+def test_flow_invokes_flow_as_action():
+    svc, auth, clock = make_service()
+    child = svc.publish_flow(ECHO_FLOW, input_schema=SCHEMA, owner="alice",
+                             starters=["all_authenticated_users"],
+                             flow_id="child-flow")
+    parent_def = {
+        "StartAt": "RunChild",
+        "States": {
+            "RunChild": {"Type": "Action", "ActionUrl": "flow://child-flow",
+                          "Parameters": {"msg.$": "$.outer_msg"},
+                          "ResultPath": "$.child", "End": True}
+        },
+    }
+    parent = svc.publish_flow(parent_def, owner="alice",
+                              starters=["all_authenticated_users"],
+                              flow_id="parent-flow")
+    # parent's scope depends on the child flow's scope
+    assert auth.get_scope(parent.scope).dependent_scopes == [child.scope]
+    caller = caller_for(auth, svc, "bob", parent)
+    run = svc.run_flow(parent.flow_id, {"outer_msg": "nested!"}, caller=caller)
+    svc.engine.run_to_completion(run.run_id)
+    assert run.status == RUN_SUCCEEDED
+    child_out = run.context["child"]["details"]["output"]
+    assert child_out["echoed"]["details"]["echo_string"] == "nested!"
+
+
+def test_list_runs_filtering():
+    svc, auth, _ = make_service()
+    record = svc.publish_flow(ECHO_FLOW, input_schema=SCHEMA, owner="alice",
+                              starters=["all_authenticated_users"])
+    caller = caller_for(auth, svc, "bob", record)
+    r1 = svc.run_flow(record.flow_id, {"msg": "a"}, caller=caller,
+                      tags=["expA"])
+    r2 = svc.run_flow(record.flow_id, {"msg": "b"}, caller=caller,
+                      tags=["expB"])
+    svc.engine.scheduler.drain()
+    runs = svc.list_runs(caller=caller, tag="expA")
+    assert [r["run_id"] for r in runs] == [r1.run_id]
+    runs = svc.list_runs(caller=caller, status="SUCCEEDED")
+    assert {r["run_id"] for r in runs} == {r1.run_id, r2.run_id}

@@ -1,0 +1,71 @@
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import jsonpath as jp
+
+
+def test_parse_basic():
+    assert jp.parse("$") == []
+    assert jp.parse("$.a.b") == ["a", "b"]
+    assert jp.parse("$.a[0].b") == ["a", 0, "b"]
+    assert jp.parse("$.a[-1]") == ["a", -1]
+    assert jp.parse('$["key.with.dots"]') == ["key.with.dots"]
+
+
+@pytest.mark.parametrize("bad", ["a.b", "$.", "$.a[", "$.a[x]", "$.a..b", "$x"])
+def test_parse_rejects(bad):
+    with pytest.raises(jp.JSONPathError):
+        jp.parse(bad)
+
+
+def test_get_and_exists():
+    doc = {"a": {"b": [1, {"c": 2}]}}
+    assert jp.get(doc, "$") == doc
+    assert jp.get(doc, "$.a.b[1].c") == 2
+    assert jp.get(doc, "$.a.b[-1].c") == 2
+    assert jp.exists(doc, "$.a.b[0]")
+    assert not jp.exists(doc, "$.a.z")
+    assert jp.get(doc, "$.a.z", default=7) == 7
+    with pytest.raises(jp.JSONPathError):
+        jp.get(doc, "$.a.z")
+
+
+def test_put_creates_intermediates():
+    doc = {}
+    jp.put(doc, "$.a.b.c", 5)
+    assert doc == {"a": {"b": {"c": 5}}}
+    jp.put(doc, "$.a.b.c", 6)
+    assert doc["a"]["b"]["c"] == 6
+
+
+def test_put_root_replaces():
+    assert jp.put({"x": 1}, "$", {"y": 2}) == {"y": 2}
+
+
+def test_put_list_append_and_set():
+    doc = {"a": [1, 2]}
+    jp.put(doc, "$.a[0]", 9)
+    assert doc["a"] == [9, 2]
+    jp.put(doc, "$.a[2]", 3)  # append exactly at end
+    assert doc["a"] == [9, 2, 3]
+    with pytest.raises(jp.JSONPathError):
+        jp.put(doc, "$.a[5]", 0)
+
+
+def test_is_reference():
+    assert jp.is_reference("$.a")
+    assert jp.is_reference("$")
+    assert not jp.is_reference("plain")
+    assert not jp.is_reference(42)
+
+
+_keys = st.text(alphabet="abcdefgh_", min_size=1, max_size=6)
+
+
+@given(st.lists(_keys, min_size=1, max_size=5), st.integers())
+def test_put_get_roundtrip(path_keys, value):
+    path = "$." + ".".join(path_keys)
+    doc = {}
+    jp.put(doc, path, value)
+    assert jp.get(doc, path) == value
+    assert jp.exists(doc, path)

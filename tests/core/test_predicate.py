@@ -1,0 +1,79 @@
+import pytest
+
+from repro.core import predicate as pl
+
+
+MSG = {
+    "filename": "scan_0042.tiff",
+    "size": 2048,
+    "files": ["a.h5", "b.h5"],
+    "meta": {"beamline": "8-ID", "hits": 7},
+    "ok": True,
+}
+
+
+@pytest.mark.parametrize(
+    "expr,expected",
+    [
+        ('filename.endswith(".tiff")', True),
+        ('filename.endswith(".h5")', False),
+        ("size > 1024 and ok", True),
+        ("size > 1024 and not ok", False),
+        ("len(files) == 2", True),
+        ('meta.beamline == "8-ID"', True),
+        ('meta["hits"] >= 7', True),
+        ('"a.h5" in files', True),
+        ("size / 2 == 1024.0", True),
+        ("min(3, size) == 3", True),
+        ('filename.split("_")[0] == "scan"', True),
+        ("(size > 10000) or (meta.hits < 10)", True),
+        ("1 < meta.hits < 10", True),
+    ],
+)
+def test_predicates(expr, expected):
+    assert pl.matches(expr, MSG) is expected
+
+
+def test_transform():
+    out = pl.transform(
+        {"number_of_files": "len(files)", "label": 'filename.replace(".tiff", "")'},
+        MSG,
+    )
+    assert out == {"number_of_files": 2, "label": "scan_0042"}
+
+
+@pytest.mark.parametrize(
+    "evil",
+    [
+        "__import__('os')",
+        "().__class__",
+        "open('/etc/passwd')",
+        "filename.__class__",
+        "lambda: 1",
+        "[x for x in files]",
+        "exec('1')",
+        "meta.items",  # attribute exists but unknown name path fails first? -> allowed method actually
+    ],
+)
+def test_unsafe_rejected(evil):
+    if evil == "meta.items":
+        # dict method access is whitelisted; calling it is fine
+        assert pl.evaluate("len(meta.items())", MSG) == 2
+        return
+    with pytest.raises(pl.PredicateError):
+        pl.evaluate(evil, MSG)
+
+
+def test_unknown_name_no_match():
+    assert pl.matches("nope > 1", MSG) is False
+
+
+def test_huge_exponent_rejected():
+    with pytest.raises(pl.PredicateError):
+        pl.evaluate("2 ** 9999", MSG)
+
+
+def test_compile_reuse():
+    tree = pl.compile_expr("size > 1000")
+    assert pl.matches(tree, MSG)
+    assert not pl.matches(tree, {"size": 10})

@@ -1,0 +1,229 @@
+import os
+
+import pytest
+
+from repro.core.actions import ACTIVE, FAILED, SUCCEEDED
+from repro.core.clock import VirtualClock
+from repro.core.errors import ActionUnknown, Forbidden
+from repro.core.providers import (
+    ComputeProvider,
+    DOIProvider,
+    EchoProvider,
+    EmailProvider,
+    Endpoint,
+    SearchProvider,
+    SleepProvider,
+    TransferProvider,
+    UserSelectionProvider,
+)
+
+
+def test_echo_synchronous_and_introspection():
+    p = EchoProvider(clock=VirtualClock())
+    doc = p.introspect()
+    assert doc["globus_auth_scope"].startswith("urn:repro:scopes:echo")
+    assert "input_schema" in doc
+    st = p.run({"echo_string": "hi"})
+    assert st.status == SUCCEEDED
+    assert st.details["echo_string"] == "hi"
+
+
+def test_request_id_idempotency():
+    p = EchoProvider(clock=VirtualClock())
+    a = p.run({"echo_string": "x"}, request_id="req-1")
+    b = p.run({"echo_string": "y"}, request_id="req-1")
+    assert a.action_id == b.action_id
+    assert b.details["echo_string"] == "x"  # original action returned
+
+
+def test_release_then_unknown():
+    p = EchoProvider(clock=VirtualClock())
+    st = p.run({"echo_string": "x"})
+    p.release(st.action_id)
+    with pytest.raises(ActionUnknown):
+        p.status(st.action_id)
+
+
+def test_release_active_forbidden_then_cancel():
+    clock = VirtualClock()
+    p = SleepProvider(clock=clock)
+    st = p.run({"seconds": 100})
+    assert st.status == ACTIVE
+    with pytest.raises(Forbidden):
+        p.release(st.action_id)
+    st2 = p.cancel(st.action_id)
+    assert st2.status == FAILED
+    p.release(st.action_id)
+
+
+def test_sleep_completes_with_clock():
+    clock = VirtualClock()
+    p = SleepProvider(clock=clock)
+    st = p.run({"seconds": 10})
+    assert p.status(st.action_id).status == ACTIVE
+    clock.advance(10.0)
+    assert p.status(st.action_id).status == SUCCEEDED
+
+
+def test_transfer_roundtrip(tmp_path):
+    clock = VirtualClock()
+    p = TransferProvider(clock=clock, workspace=str(tmp_path))
+    src = p.create_endpoint("beamline", bandwidth_bps=1e6, latency_s=1.0)
+    p.create_endpoint("hpc", bandwidth_bps=1e9, latency_s=0.5)
+    with open(os.path.join(src.root, "scan.raw"), "wb") as fh:
+        fh.write(b"z" * 2_000_000)
+    st = p.run(
+        {
+            "operation": "transfer",
+            "source_endpoint": "beamline",
+            "destination_endpoint": "hpc",
+            "source_path": "scan.raw",
+            "destination_path": "in/scan.raw",
+        }
+    )
+    assert st.status == ACTIVE  # modeled duration: 1.5 + 2e6/1e6 = 3.5s
+    clock.advance(3.4)
+    assert p.status(st.action_id).status == ACTIVE
+    clock.advance(0.2)
+    final = p.status(st.action_id)
+    assert final.status == SUCCEEDED
+    assert final.details["bytes"] == 2_000_000
+    assert os.path.exists(os.path.join(tmp_path, "hpc", "in", "scan.raw"))
+
+
+def test_transfer_ls_mkdir_delete_permissions(tmp_path):
+    clock = VirtualClock()
+    p = TransferProvider(clock=clock, workspace=str(tmp_path))
+    p.create_endpoint("store", latency_s=0.0)
+    st = p.run({"operation": "mkdir", "endpoint": "store", "path": "data"})
+    assert st.status == SUCCEEDED
+    st = p.run({"operation": "ls", "endpoint": "store", "path": "/"})
+    assert [e["name"] for e in st.details["entries"]] == ["data"]
+    st = p.run({"operation": "set_permissions", "endpoint": "store",
+                 "path": "/", "principals": ["user:alice"]})
+    assert st.status == SUCCEEDED
+    assert p.endpoint("store").writers == {"alice"}
+    st = p.run({"operation": "delete", "endpoint": "store", "path": "data"})
+    assert st.status == SUCCEEDED
+    st = p.run({"operation": "delete", "endpoint": "store", "path": "data"})
+    assert st.status == FAILED  # already gone
+
+
+def test_transfer_missing_source_fails(tmp_path):
+    p = TransferProvider(clock=VirtualClock(), workspace=str(tmp_path))
+    p.create_endpoint("a")
+    p.create_endpoint("b")
+    st = p.run(
+        {
+            "operation": "transfer",
+            "source_endpoint": "a",
+            "destination_endpoint": "b",
+            "source_path": "nope",
+            "destination_path": "x",
+        }
+    )
+    assert st.status == FAILED
+
+
+def test_compute_inline_and_modeled_duration():
+    clock = VirtualClock()
+    p = ComputeProvider(clock=clock)
+    eid = p.register_endpoint("hpc", mode="inline")
+    fid = p.register_function(
+        lambda x: x * 2, name="double", modeled_duration=lambda kw: 30.0
+    )
+    st = p.run({"endpoint_id": eid, "function_id": fid, "kwargs": {"x": 21}})
+    assert st.status == ACTIVE
+    clock.advance(30.0)
+    final = p.status(st.action_id)
+    assert final.status == SUCCEEDED
+    assert final.details["results"] == [42]
+
+
+def test_compute_bundled_tasks_and_errors():
+    p = ComputeProvider(clock=VirtualClock())
+    eid = p.register_endpoint("hpc")
+    f1 = p.register_function(lambda: 1)
+    f2 = p.register_function(lambda: 1 / 0)
+    st = p.run({"tasks": [{"endpoint_id": eid, "function_id": f1, "kwargs": {}}]})
+    assert st.status == SUCCEEDED and st.details["results"] == [1]
+    st = p.run({"endpoint_id": eid, "function_id": f2, "kwargs": {}})
+    assert st.status == FAILED
+    assert "ZeroDivisionError" in st.details["error"]
+
+
+def test_search_ingest_query_delete(tmp_path):
+    clock = VirtualClock()
+    p = SearchProvider(clock=clock, persist_dir=str(tmp_path))
+    st = p.run({"operation": "ingest", "index": "ssx", "subject": "s1",
+                 "entry": {"sample": "lysozyme", "hits": 12}})
+    clock.advance(1.0)
+    assert p.status(st.action_id).status == SUCCEEDED
+    st = p.run({"operation": "query", "index": "ssx", "q": "lysozyme"})
+    clock.advance(1.0)
+    st = p.status(st.action_id)
+    assert st.details["count"] == 1
+    # persistence survives a restart
+    p2 = SearchProvider(clock=VirtualClock(), persist_dir=str(tmp_path))
+    assert "s1" in p2.entries("ssx")
+    st = p.run({"operation": "delete", "index": "ssx", "subject": "s1"})
+    clock.advance(1.0)
+    assert p.status(st.action_id).details["deleted"] is True
+
+
+def test_email_templating():
+    clock = VirtualClock()
+    p = EmailProvider(clock=clock)
+    st = p.run(
+        {
+            "to": "pi@lab.edu",
+            "subject": "Run ${run_id} done",
+            "body": "Loss: ${metrics.loss}",
+            "template_values": {"run_id": "r-1", "metrics": {"loss": 2.5}},
+        }
+    )
+    clock.advance(1.0)
+    assert p.status(st.action_id).status == SUCCEEDED
+    [msg] = p.outbox
+    assert msg["subject"] == "Run r-1 done"
+    assert msg["body"] == "Loss: 2.5"
+    # unknown placeholders left intact
+    st = p.run({"to": "x", "body": "${missing}", "template_values": {}})
+    assert p.outbox[-1]["body"] == "${missing}"
+
+
+def test_doi_minting_sequence(tmp_path):
+    clock = VirtualClock()
+    p = DOIProvider(clock=clock, namespace="10.5555",
+                    persist_path=str(tmp_path / "dois.json"))
+    st1 = p.run({"url": "https://cat/1", "metadata": {"title": "DS1"}})
+    st2 = p.run({"url": "https://cat/2"})
+    clock.advance(1.0)
+    d1 = p.status(st1.action_id).details["doi"]
+    d2 = p.status(st2.action_id).details["doi"]
+    assert d1 == "10.5555/repro.000001" and d2 == "10.5555/repro.000002"
+    assert p.resolve(d1)["metadata"] == {"title": "DS1"}
+    # sequence persists across restart
+    p2 = DOIProvider(clock=VirtualClock(), namespace="10.5555",
+                     persist_path=str(tmp_path / "dois.json"))
+    st3 = p2.run({"url": "https://cat/3"})
+    assert st3.details["doi"] == "10.5555/repro.000003"
+
+
+def test_user_selection_respondent_restriction():
+    p = UserSelectionProvider(clock=VirtualClock())
+    st = p.run({"options": ["a", "b"], "respondents": ["curator"]})
+    with pytest.raises(Forbidden):
+        p.respond(st.action_id, "a", responder="rando")
+    p.respond(st.action_id, 1, responder="curator")
+    assert p.status(st.action_id).details["selection"] == "b"
+
+
+def test_schema_validation_rejects_bad_input():
+    p = SleepProvider(clock=VirtualClock())
+    from repro.core.schema import ValidationFailure
+
+    with pytest.raises(ValidationFailure):
+        p.run({})
+    with pytest.raises(ValidationFailure):
+        p.run({"seconds": -1})

@@ -1,0 +1,176 @@
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.auth import AuthService, Caller
+from repro.core.clock import VirtualClock
+from repro.core.errors import Forbidden, QueueInvariantError
+from repro.core.queues import QueueService
+
+
+def make_service():
+    clock = VirtualClock()
+    return QueueService(clock=clock), clock
+
+
+def test_send_receive_ack_order():
+    svc, _ = make_service()
+    q = svc.create_queue("events")
+    ids = [svc.send(q.queue_id, {"n": i}) for i in range(5)]
+    got = svc.receive(q.queue_id, max_messages=10)
+    assert [m["body"]["n"] for m in got] == list(range(5))
+    assert [m["message_id"] for m in got] == ids
+    for m in got:
+        svc.ack(q.queue_id, m["receipt"])
+    assert svc.depth(q.queue_id) == 0
+
+
+def test_visibility_timeout_redelivery():
+    svc, clock = make_service()
+    q = svc.create_queue("events", visibility_timeout=10.0)
+    svc.send(q.queue_id, {"n": 1})
+    [m1] = svc.receive(q.queue_id)
+    # invisible while the receipt is outstanding
+    assert svc.receive(q.queue_id) == []
+    clock.advance(11.0)
+    [m2] = svc.receive(q.queue_id)  # redelivered
+    assert m2["body"] == {"n": 1}
+    assert m2["receive_count"] == 2
+    # the stale receipt can no longer ack
+    with pytest.raises(QueueInvariantError):
+        svc.ack(q.queue_id, m1["receipt"])
+    svc.ack(q.queue_id, m2["receipt"])
+    assert svc.depth(q.queue_id) == 0
+
+
+def test_deferred_delivery():
+    svc, clock = make_service()
+    q = svc.create_queue("later")
+    svc.send(q.queue_id, {"n": 1}, delay=100.0)
+    assert svc.receive(q.queue_id) == []
+    clock.advance(101.0)
+    [m] = svc.receive(q.queue_id)
+    assert m["body"] == {"n": 1}
+
+
+def test_in_order_blocks_behind_deferred():
+    svc, clock = make_service()
+    q = svc.create_queue("fifo")
+    svc.send(q.queue_id, {"n": 1}, delay=50.0)
+    svc.send(q.queue_id, {"n": 2})
+    # in-order: message 2 is not delivered before message 1 is deliverable
+    assert svc.receive(q.queue_id, max_messages=10) == []
+    clock.advance(51.0)
+    got = svc.receive(q.queue_id, max_messages=10)
+    assert [m["body"]["n"] for m in got] == [1, 2]
+
+
+def test_double_ack_rejected():
+    svc, _ = make_service()
+    q = svc.create_queue("x")
+    svc.send(q.queue_id, 1)
+    [m] = svc.receive(q.queue_id)
+    svc.ack(q.queue_id, m["receipt"])
+    with pytest.raises(QueueInvariantError):
+        svc.ack(q.queue_id, m["receipt"])
+
+
+def test_roles_enforced():
+    clock = VirtualClock()
+    auth = AuthService()
+    alice = Caller(identity=auth.create_identity("alice"))
+    bob = Caller(identity=auth.create_identity("bob"))
+    svc = QueueService(clock=clock, auth=auth)
+    q = svc.create_queue(
+        "secure",
+        admins=["user:alice"],
+        senders=["user:alice"],
+        receivers=["user:bob"],
+        caller=alice,
+    )
+    svc.send(q.queue_id, {"ok": 1}, caller=alice)
+    with pytest.raises(Forbidden):
+        svc.send(q.queue_id, {"no": 1}, caller=bob)
+    [m] = svc.receive(q.queue_id, caller=bob)
+    with pytest.raises(Forbidden):
+        svc.receive(q.queue_id, caller=alice)
+    svc.ack(q.queue_id, m["receipt"], caller=bob)
+    with pytest.raises(Forbidden):
+        svc.delete_queue(q.queue_id, caller=bob)
+    svc.delete_queue(q.queue_id, caller=alice)
+
+
+def test_persistence_roundtrip(tmp_path):
+    path = str(tmp_path / "queues.json")
+    clock = VirtualClock()
+    svc = QueueService(clock=clock, persist_path=path)
+    q = svc.create_queue("durable")
+    svc.send(q.queue_id, {"n": 1})
+    svc.send(q.queue_id, {"n": 2})
+    [m] = svc.receive(q.queue_id)
+    svc.ack(q.queue_id, m["receipt"])
+    # "restart"
+    svc2 = QueueService(clock=VirtualClock(), persist_path=path)
+    got = svc2.receive(q.queue_id, max_messages=10)
+    assert [m["body"]["n"] for m in got] == [2]
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ops=st.lists(
+        st.one_of(
+            st.tuples(st.just("send"), st.integers(0, 99)),
+            st.tuples(st.just("receive"), st.just(0)),
+            st.tuples(st.just("ack"), st.just(0)),
+            st.tuples(st.just("advance"), st.integers(1, 40)),
+        ),
+        max_size=60,
+    )
+)
+def test_at_least_once_in_order_property(ops):
+    """Under arbitrary receive/ack/timeout interleavings: every sent message
+    is eventually delivered (at least once), acked messages never reappear,
+    and first deliveries happen in send order."""
+    svc, clock = make_service()
+    q = svc.create_queue("prop", visibility_timeout=20.0)
+    sent = []
+    outstanding = []  # receipts not yet acked
+    first_delivery_order = []
+    acked = set()
+    seen = set()
+    for op, arg in ops:
+        if op == "send":
+            svc.send(q.queue_id, {"n": len(sent)})
+            sent.append(len(sent))
+        elif op == "receive":
+            for m in svc.receive(q.queue_id, max_messages=3):
+                n = m["body"]["n"]
+                assert n not in acked, "acked message redelivered"
+                if n not in seen:
+                    seen.add(n)
+                    first_delivery_order.append(n)
+                outstanding.append((m["receipt"], n))
+        elif op == "ack" and outstanding:
+            receipt, n = outstanding.pop(0)
+            try:
+                svc.ack(q.queue_id, receipt)
+                acked.add(n)
+            except QueueInvariantError:
+                pass  # receipt expired; message will be redelivered
+        elif op == "advance":
+            clock.advance(float(arg))
+    # drain: all unacked messages must still be deliverable
+    clock.advance(1000.0)
+    while True:
+        got = svc.receive(q.queue_id, max_messages=10)
+        if not got:
+            break
+        for m in got:
+            n = m["body"]["n"]
+            assert n not in acked
+            if n not in seen:
+                seen.add(n)
+                first_delivery_order.append(n)
+            svc.ack(q.queue_id, m["receipt"])
+            acked.add(n)
+    assert seen == set(sent), "every sent message must be delivered"
+    assert first_delivery_order == sorted(first_delivery_order), "in-order"

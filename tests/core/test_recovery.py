@@ -1,0 +1,114 @@
+"""Crash recovery: the journal replays and unfinished runs resume."""
+
+import json
+
+from repro.core import asl
+from repro.core.actions import ActionRegistry
+from repro.core.clock import VirtualClock
+from repro.core.engine import RUN_SUCCEEDED, FlowEngine
+from repro.core.journal import Journal, replay
+from repro.core.providers import EchoProvider, SleepProvider
+
+THREE_STEP = {
+    "StartAt": "A",
+    "States": {
+        "A": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string": "step-a"},
+              "ResultPath": "$.a", "Next": "Pause"},
+        "Pause": {"Type": "Action", "ActionUrl": "ap://sleep",
+                   "Parameters": {"seconds": 100.0},
+                   "ResultPath": "$.pause", "Next": "B"},
+        "B": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string.$": "$.a.details.echo_string"},
+              "ResultPath": "$.b", "End": True},
+    },
+}
+
+
+def make_engine(journal_path):
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    registry.register(SleepProvider(clock=clock))
+    return FlowEngine(registry, clock=clock, journal=Journal(journal_path))
+
+
+def test_journal_records_and_replay(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    engine = make_engine(path)
+    flow = asl.parse(THREE_STEP)
+    run = engine.start_run(flow, {"x": 1}, flow_id="f1")
+    engine.run_to_completion(run.run_id)
+    assert run.status == RUN_SUCCEEDED
+
+    with open(path) as fh:
+        kinds = [json.loads(line)["type"] for line in fh]
+    assert kinds[0] == "run_created"
+    assert kinds[-1] == "run_completed"
+    assert kinds.count("state_entered") == 3
+    assert kinds.count("action_started") == 3
+
+    images = replay(Journal(path))
+    image = images[run.run_id]
+    assert image.status == RUN_SUCCEEDED
+    assert image.context["b"]["details"]["echo_string"] == "step-a"
+
+
+def test_crash_mid_action_resumes(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    engine1 = make_engine(path)
+    flow = asl.parse(THREE_STEP)
+    run1 = engine1.start_run(flow, {"x": 1}, flow_id="f1")
+    # crash while the Pause action is sleeping (completes at t=100)
+    engine1.scheduler.drain(until=10.0)
+    assert run1.status == "ACTIVE"
+    assert run1.current_state == "Pause"
+
+    # restart: a fresh engine + providers, same journal
+    engine2 = make_engine(path)
+    resumed = engine2.recover({"f1": flow})
+    assert [r.run_id for r in resumed] == [run1.run_id]
+    run2 = engine2.run_to_completion(run1.run_id)
+    assert run2.status == RUN_SUCCEEDED
+    # context from before the crash was preserved (step A's result), and the
+    # remaining states executed after recovery
+    assert run2.context["a"]["details"]["echo_string"] == "step-a"
+    assert run2.context["b"]["details"]["echo_string"] == "step-a"
+
+
+def test_completed_runs_not_resumed(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    engine1 = make_engine(path)
+    flow = asl.parse(THREE_STEP)
+    run1 = engine1.start_run(flow, {}, flow_id="f1")
+    engine1.run_to_completion(run1.run_id)
+    assert run1.status == RUN_SUCCEEDED
+
+    engine2 = make_engine(path)
+    assert engine2.recover({"f1": flow}) == []
+
+
+def test_recovery_is_idempotent_per_request(tmp_path):
+    """Re-dispatch after crash reuses the journaled request_id, so a provider
+    that survived the crash deduplicates instead of double-running."""
+    path = str(tmp_path / "journal.jsonl")
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    echo = EchoProvider(clock=clock)
+    sleep = SleepProvider(clock=clock)
+    registry.register(echo)
+    registry.register(sleep)
+    engine1 = FlowEngine(registry, clock=clock, journal=Journal(path))
+    flow = asl.parse(THREE_STEP)
+    run1 = engine1.start_run(flow, {}, flow_id="f1")
+    engine1.scheduler.drain(until=10.0)
+    runs_before = sleep.stats["run"]
+
+    # recover on the SAME registry (provider survived)
+    engine2 = FlowEngine(registry, clock=clock, journal=Journal(path))
+    engine2.recover({"f1": flow})
+    engine2.run_to_completion(run1.run_id)
+    run2 = engine2.get_run(run1.run_id)
+    assert run2.status == RUN_SUCCEEDED
+    # the sleep action was NOT started a second time (request_id dedup)
+    assert sleep.stats["run"] == runs_before

@@ -1,0 +1,99 @@
+import pytest
+
+from repro.core import schema
+
+
+def test_basic_types():
+    s = {"type": "object", "properties": {"n": {"type": "integer"}},
+         "required": ["n"]}
+    assert schema.validate({"n": 3}, s) == {"n": 3}
+    with pytest.raises(schema.ValidationFailure):
+        schema.validate({"n": "x"}, s)
+    with pytest.raises(schema.ValidationFailure):
+        schema.validate({}, s)
+    with pytest.raises(schema.ValidationFailure):
+        schema.validate({"n": True}, s)  # bool is not integer
+
+
+def test_defaults_applied():
+    s = {"type": "object", "properties": {"k": {"type": "string", "default": "v"}}}
+    assert schema.validate({}, s) == {"k": "v"}
+
+
+def test_nested_and_arrays():
+    s = {
+        "type": "object",
+        "properties": {
+            "items": {
+                "type": "array",
+                "items": {"type": "object", "properties": {"id": {"type": "string"}},
+                          "required": ["id"]},
+                "minItems": 1,
+            }
+        },
+        "required": ["items"],
+    }
+    schema.validate({"items": [{"id": "a"}]}, s)
+    with pytest.raises(schema.ValidationFailure):
+        schema.validate({"items": []}, s)
+    with pytest.raises(schema.ValidationFailure):
+        schema.validate({"items": [{}]}, s)
+
+
+def test_enum_const_pattern_bounds():
+    s = {
+        "type": "object",
+        "properties": {
+            "mode": {"type": "string", "enum": ["a", "b"]},
+            "k": {"const": 5},
+            "name": {"type": "string", "pattern": "^[a-z]+$"},
+            "x": {"type": "number", "minimum": 0, "maximum": 1},
+        },
+    }
+    schema.validate({"mode": "a", "k": 5, "name": "ok", "x": 0.5}, s)
+    for bad in ({"mode": "c"}, {"k": 6}, {"name": "NO"}, {"x": 2}):
+        with pytest.raises(schema.ValidationFailure):
+            schema.validate(bad, s)
+
+
+def test_additional_properties_false():
+    s = {"type": "object", "properties": {"a": {}}, "additionalProperties": False}
+    schema.validate({"a": 1}, s)
+    with pytest.raises(schema.ValidationFailure):
+        schema.validate({"b": 1}, s)
+
+
+def test_union_type_and_anyof():
+    s = {"type": ["string", "number"]}
+    schema.validate("x", s)
+    schema.validate(1.5, s)
+    with pytest.raises(schema.ValidationFailure):
+        schema.validate([], s)
+    s2 = {"anyOf": [{"type": "string"}, {"type": "integer"}]}
+    schema.validate("x", s2)
+    schema.validate(3, s2)
+    with pytest.raises(schema.ValidationFailure):
+        schema.validate(1.5, s2)
+
+
+def test_ref_resolution():
+    s = {
+        "definitions": {"ep": {"type": "string", "minLength": 1}},
+        "type": "object",
+        "properties": {"src": {"$ref": "#/definitions/ep"}},
+    }
+    schema.validate({"src": "x"}, s)
+    with pytest.raises(schema.ValidationFailure):
+        schema.validate({"src": ""}, s)
+
+
+def test_check_schema_rejects_malformed():
+    for bad in (
+        {"type": "nope"},
+        {"properties": []},
+        {"required": [1]},
+        {"pattern": "["},
+        {"anyOf": []},
+    ):
+        with pytest.raises(schema.SchemaError):
+            schema.check_schema(bad)

@@ -1,0 +1,157 @@
+"""Triggers and Timers services under virtual time."""
+
+from repro.core.clock import VirtualClock
+from repro.core.engine import Scheduler
+from repro.core.queues import QueueService
+from repro.core.timers import TimerService
+from repro.core.triggers import TriggerConfig, TriggerService
+
+
+def make_stack():
+    clock = VirtualClock()
+    scheduler = Scheduler(clock)
+    queues = QueueService(clock=clock)
+    return clock, scheduler, queues
+
+
+def test_trigger_predicate_transform_invoke():
+    clock, scheduler, queues = make_stack()
+    q = queues.create_queue("instrument")
+    invoked = []
+    svc = TriggerService(queues, clock=clock, scheduler=scheduler)
+    trig = svc.create_trigger(
+        TriggerConfig(
+            queue_id=q.queue_id,
+            predicate='filename.endswith(".tiff") and size > 100',
+            transform={"path": "filename", "nbytes": "size"},
+            action_invoker=lambda body, caller: invoked.append(body) or "run-x",
+        )
+    )
+    svc.enable(trig.trigger_id)
+    queues.send(q.queue_id, {"filename": "a.tiff", "size": 500})
+    queues.send(q.queue_id, {"filename": "b.h5", "size": 500})
+    queues.send(q.queue_id, {"filename": "c.tiff", "size": 50})
+    scheduler.drain(until=60.0)
+    assert invoked == [{"path": "a.tiff", "nbytes": 500}]
+    assert trig.stats["matched"] == 1
+    assert trig.stats["discarded"] == 2
+    assert trig.stats["invocations"] == 1
+    # all events acked regardless of match
+    assert queues.depth(q.queue_id) == 0
+
+
+def test_trigger_adaptive_polling_backoff():
+    clock, scheduler, queues = make_stack()
+    q = queues.create_queue("quiet")
+    svc = TriggerService(queues, clock=clock, scheduler=scheduler)
+    trig = svc.create_trigger(
+        TriggerConfig(
+            queue_id=q.queue_id,
+            predicate="True",
+            poll_min_s=1.0,
+            poll_max_s=16.0,
+            action_invoker=lambda body, caller: "run",
+        )
+    )
+    svc.enable(trig.trigger_id)
+    scheduler.drain(until=100.0)
+    quiet_polls = trig.stats["polls"]
+    # with backoff 1,2,4,8,16,16,... ~ 9 polls in 100s, not 100
+    assert quiet_polls <= 10
+    # a message resets the interval to poll_min
+    queues.send(q.queue_id, {"x": 1})
+    scheduler.drain(until=120.0)
+    assert trig.interval <= 2.0 or trig.stats["matched"] == 1
+
+
+def test_trigger_disable_stops_polling():
+    clock, scheduler, queues = make_stack()
+    q = queues.create_queue("x")
+    svc = TriggerService(queues, clock=clock, scheduler=scheduler)
+    trig = svc.create_trigger(
+        TriggerConfig(queue_id=q.queue_id, predicate="True",
+                      action_invoker=lambda b, c: "r")
+    )
+    svc.enable(trig.trigger_id)
+    scheduler.drain(until=10.0)
+    svc.disable(trig.trigger_id)
+    polls = trig.stats["polls"]
+    queues.send(q.queue_id, {"x": 1})
+    scheduler.drain(until=100.0)
+    assert trig.stats["polls"] == polls
+    assert trig.stats["invocations"] == 0
+
+
+def test_timer_fires_on_schedule_with_count():
+    clock, scheduler, _ = make_stack()
+    fired = []
+    svc = TimerService(
+        invoker=lambda body, caller: fired.append((clock.now(), dict(body)))
+        or f"run-{len(fired)}",
+        clock=clock,
+        scheduler=scheduler,
+    )
+    svc.create_timer("ckpt", interval=10.0, body={"step": "checkpoint"},
+                     start=5.0, count=3)
+    scheduler.drain(until=1000.0)
+    assert [t for t, _ in fired] == [5.0, 15.0, 25.0]
+    assert all(b == {"step": "checkpoint"} for _, b in fired)
+
+
+def test_timer_end_time_expiry():
+    clock, scheduler, _ = make_stack()
+    fired = []
+    svc = TimerService(
+        invoker=lambda body, caller: fired.append(clock.now()) or "r",
+        clock=clock, scheduler=scheduler,
+    )
+    timer = svc.create_timer("t", interval=7.0, body={}, start=0.0, end=21.0)
+    scheduler.drain(until=100.0)
+    assert fired == [0.0, 7.0, 14.0, 21.0]
+    assert timer.active is False
+
+
+def test_timer_pause_resume():
+    clock, scheduler, _ = make_stack()
+    fired = []
+    svc = TimerService(
+        invoker=lambda body, caller: fired.append(clock.now()) or "r",
+        clock=clock, scheduler=scheduler,
+    )
+    timer = svc.create_timer("t", interval=10.0, body={}, start=0.0, count=100)
+    scheduler.drain(until=25.0)
+    assert len(fired) == 3  # t=0,10,20
+    svc.pause(timer.timer_id)
+    scheduler.drain(until=65.0)
+    assert len(fired) == 3
+    svc.resume(timer.timer_id)
+    scheduler.drain(until=100.0)
+    assert len(fired) > 3
+
+
+def test_timer_persistence_recovers_missed(tmp_path):
+    path = str(tmp_path / "timers.json")
+    clock, scheduler, _ = make_stack()
+    fired = []
+    svc = TimerService(
+        invoker=lambda body, caller: fired.append(clock.now()) or "r",
+        clock=clock, scheduler=scheduler, persist_path=path,
+    )
+    svc.create_timer("t", interval=10.0, body={"k": 1}, start=0.0, count=10)
+    scheduler.drain(until=15.0)
+    assert len(fired) == 2  # fired at 0 and 10; "service goes down" here
+    # restart later: new service, clock far beyond several missed firings
+    clock2 = VirtualClock(start=55.0)
+    sched2 = Scheduler(clock2)
+    fired2 = []
+    svc2 = TimerService(
+        invoker=lambda body, caller: fired2.append(clock2.now()) or "r",
+        clock=clock2, scheduler=sched2, persist_path=path,
+    )
+    sched2.drain(until=100.0)
+    # missed firings (t=20,30,40,50) recovered promptly at restart, then the
+    # schedule continues (60,70,80,90,100) => 9 more firings, 10 total fired
+    timer = svc2.timers()[0]
+    assert timer.fired == 10
+    assert timer.active is False
+    assert len(fired2) == 8

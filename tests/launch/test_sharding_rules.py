@@ -1,0 +1,81 @@
+"""Sharding-rule engine: divisibility-aware joint assignment."""
+
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (
+    ACT_RULES,
+    PARAM_RULES,
+    ShardingRules,
+    assign_spec,
+)
+
+SIZES = {"data": 16, "model": 16}
+SIZES_POD = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_basic_assignment():
+    spec = assign_spec(("embed", "mlp"), (4096, 14336), PARAM_RULES, SIZES)
+    assert spec == P("data", "model")
+
+
+def test_pod_axes_compose():
+    spec = assign_spec(("embed", "mlp"), (4096, 14336), PARAM_RULES, SIZES_POD)
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_non_divisible_axis_released_for_later_dim():
+    """The mixtral bug: experts=8 cannot take model=16; mlp must get it."""
+    spec = assign_spec(
+        ("experts", "embed", "mlp"), (8, 4096, 14336), PARAM_RULES, SIZES
+    )
+    assert spec == P(None, "data", "model")
+
+
+def test_divisible_experts_keep_ep():
+    spec = assign_spec(
+        ("experts", "embed", "mlp"), (128, 4096, 1536), PARAM_RULES, SIZES
+    )
+    assert spec == P("model", "data")  # EP wins; mlp axis taken
+
+
+def test_partial_tuple_assignment():
+    """batch=8 < pod*data=32: take only the axes that divide."""
+    rules = ShardingRules({"batch": ("pod", "data")})
+    spec = assign_spec(("batch", "seq"), (8, 128), rules, SIZES_POD)
+    # pod(2) divides 8, then data(16): 8 % 32 != 0 -> only pod kept
+    assert spec == P("pod")
+
+
+def test_absent_mesh_axis_skipped():
+    spec = assign_spec(("embed", "mlp"), (64, 256), PARAM_RULES,
+                       {"model": 16})
+    assert spec == P(None, "model")
+
+
+def test_indivisible_everything_replicates():
+    spec = assign_spec(("embed", "mlp"), (10, 18), PARAM_RULES, SIZES)
+    assert spec == P()
+
+
+def test_act_rules_batch_heads():
+    spec = assign_spec(
+        ("batch", "seq", "heads", "head_dim"), (256, 4096, 32, 128),
+        ACT_RULES, SIZES,
+    )
+    assert spec == P("data", None, "model")
+
+
+def test_small_kv_heads_replicate_but_release_axis():
+    # kv_heads=8 cannot take model=16; nothing later wants it -> replicated
+    spec = assign_spec(
+        ("batch", "kv_seq", "kv_heads", "head_dim"), (128, 32768, 8, 128),
+        ACT_RULES, SIZES,
+    )
+    assert spec == P("data")
+    # but with kv_seq overridden to model (decode hillclimb), it lands there
+    rules = ACT_RULES.merged({"kv_seq": "model"})
+    spec2 = assign_spec(
+        ("batch", "kv_seq", "kv_heads", "head_dim"), (128, 32768, 8, 128),
+        rules, SIZES,
+    )
+    assert spec2 == P("data", "model")

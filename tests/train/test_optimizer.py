@@ -1,0 +1,104 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import TrainConfig
+from repro.train import optimizer as opt
+
+
+def quad_params():
+    return {"a": jnp.asarray([3.0, -2.0]), "b": jnp.asarray(5.0)}
+
+
+def quad_loss(p):
+    return jnp.sum(jnp.square(p["a"])) + jnp.square(p["b"])
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = TrainConfig(learning_rate=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=100_000, max_grad_norm=100.0)
+    params = quad_params()
+    state = opt.init_adamw(params)
+    for _ in range(300):
+        grads = jax.grad(quad_loss)(params)
+        params, state, metrics = opt.adamw_update(params, grads, state, cfg)
+    assert float(quad_loss(params)) < 1e-3
+    assert int(state.step) == 300
+
+
+def test_weight_decay_shrinks_params():
+    cfg = TrainConfig(learning_rate=0.1, weight_decay=0.5, warmup_steps=0,
+                      max_grad_norm=100.0)
+    params = {"w": jnp.asarray([10.0])}
+    state = opt.init_adamw(params)
+    zero_grads = {"w": jnp.asarray([0.0])}
+    p1, _, _ = opt.adamw_update(params, zero_grads, state, cfg)
+    assert float(p1["w"][0]) < 10.0
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = opt.clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(opt.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    # under the limit: untouched
+    small = {"a": jnp.full((4,), 0.1)}
+    kept, _ = opt.clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(kept["a"], small["a"], rtol=1e-6)
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = TrainConfig(learning_rate=1.0, warmup_steps=10, total_steps=110)
+    lr = opt.cosine_schedule(cfg)
+    assert float(lr(jnp.asarray(0))) == pytest.approx(0.1)
+    assert float(lr(jnp.asarray(9))) == pytest.approx(1.0)
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(lr(jnp.asarray(60))) == pytest.approx(0.5, abs=1e-2)
+    assert float(lr(jnp.asarray(110))) == pytest.approx(0.0, abs=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    lr=st.floats(1e-4, 1e-1),
+)
+def test_adamw_step_is_bounded(seed, lr):
+    """Property: |Δp| <= lr * (1 + wd*|p|) per element (Adam update bound)."""
+    cfg = TrainConfig(learning_rate=lr, weight_decay=0.01, warmup_steps=0,
+                      max_grad_norm=1e9)
+    key = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(key, (8,))}
+    grads = {"w": jax.random.normal(jax.random.fold_in(key, 1), (8,)) * 100}
+    state = opt.init_adamw(params)
+    new_params, _, _ = opt.adamw_update(params, grads, state, cfg)
+    delta = np.abs(np.asarray(new_params["w"] - params["w"]))
+    # bias-corrected first step: |delta| ~ lr * (|g|/|g| + wd|p|)
+    bound = lr * (1.0 + 0.011 * np.abs(np.asarray(params["w"]))) + 1e-6
+    assert (delta <= bound * 1.05).all()
+
+
+def test_grad_compression_int8_error_feedback():
+    from repro.parallel import compression as comp
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    err = jnp.zeros_like(x)
+    # single-shot quantization error is bounded by scale/2
+    q, scale, err1 = comp.compress_int8(x, err)
+    decoded = comp.decompress_int8(q, scale)
+    assert float(jnp.max(jnp.abs(decoded - x))) <= float(scale) / 2 + 1e-6
+    # error feedback: the *accumulated* signal is preserved over many rounds
+    total_in = jnp.zeros_like(x)
+    total_out = jnp.zeros_like(x)
+    err = jnp.zeros_like(x)
+    for i in range(50):
+        g = jnp.asarray(rng.normal(size=(64,)).astype(np.float32)) * 0.01
+        total_in = total_in + g
+        q, scale, err = comp.compress_int8(g, err)
+        total_out = total_out + comp.decompress_int8(q, scale)
+    residual = float(jnp.max(jnp.abs((total_in - total_out) - (-err))))
+    # in - out == err (up to float association over 50 rounds): EF carries
+    # exactly the deficit, so compression noise does not accumulate
+    assert residual < 1e-3
