@@ -1,0 +1,15 @@
+# Developer entry points.  `make check` is the tier-1 verify recipe.
+
+.PHONY: check bench bench-quick shards
+
+check:
+	./scripts/check.sh
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run
+
+bench-quick:
+	PYTHONPATH=src python -m benchmarks.run --quick
+
+shards:
+	PYTHONPATH=src:. python benchmarks/shard_scaling.py

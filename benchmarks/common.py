@@ -28,7 +28,7 @@ SLEEP_FLOW = {
 }
 
 
-def virtual_stack(polling=None, auth=None):
+def virtual_stack(polling=None, auth=None, shards=1):
     """FlowsService + registry on a VirtualClock (deterministic)."""
     from repro.core.actions import ActionRegistry
     from repro.core.clock import VirtualClock
@@ -40,12 +40,14 @@ def virtual_stack(polling=None, auth=None):
     registry.register(EchoProvider(clock=clock, auth=auth))
     sleep = SleepProvider(clock=clock, auth=auth)
     registry.register(sleep)
-    flows = FlowsService(registry, clock=clock, auth=auth, polling=polling)
+    flows = FlowsService(registry, clock=clock, auth=auth, polling=polling,
+                         shards=shards)
     sleep.scheduler = flows.engine.scheduler
     return flows, clock, registry
 
 
-def real_stack(polling=None, max_workers=8):
+def real_stack(polling=None, max_workers=8, shards=1, journal_path=None,
+               fsync=False, journal_latency_s=0.0):
     from repro.core.actions import ActionRegistry
     from repro.core.clock import RealClock
     from repro.core.flows_service import FlowsService
@@ -57,7 +59,9 @@ def real_stack(polling=None, max_workers=8):
     sleep = SleepProvider(clock=clock)
     registry.register(sleep)
     flows = FlowsService(registry, clock=clock, polling=polling,
-                         max_workers=max_workers)
+                         max_workers=max_workers, shards=shards,
+                         journal_path=journal_path, fsync=fsync,
+                         journal_latency_s=journal_latency_s)
     sleep.scheduler = flows.engine.scheduler
     return flows, clock, registry
 

@@ -20,10 +20,10 @@ from benchmarks.common import PASS_FLOW, csv_line, real_stack, save_results, sta
 
 
 def run(clients_sweep=(1, 2, 4, 8, 16, 32, 64, 128), requests_per_client=20,
-        timeout_s=5.0, max_workers=8):
+        timeout_s=5.0, max_workers=8, shards=1):
     rows = []
     for n_clients in clients_sweep:
-        flows, clock, _ = real_stack(max_workers=max_workers)
+        flows, clock, _ = real_stack(max_workers=max_workers, shards=shards)
         record = flows.publish_flow(PASS_FLOW, title="fig7-pass")
         latencies: list[float] = []
         failures = [0]
@@ -52,6 +52,7 @@ def run(clients_sweep=(1, 2, 4, 8, 16, 32, 64, 128), requests_per_client=20,
         total = n_clients * requests_per_client
         rows.append({
             "clients": n_clients,
+            "shards": shards,
             "requests": total,
             "failures": failures[0],
             "rps": (total - failures[0]) / wall,
@@ -60,15 +61,17 @@ def run(clients_sweep=(1, 2, 4, 8, 16, 32, 64, 128), requests_per_client=20,
     return rows
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, shards: int = 1):
     sweep = (1, 4, 16, 64) if quick else (1, 2, 4, 8, 16, 32, 64, 128)
     rows = run(clients_sweep=sweep,
-               requests_per_client=10 if quick else 20)
-    save_results("fig7_throughput", rows)
+               requests_per_client=10 if quick else 20,
+               shards=shards)
+    suffix = f"_shards{shards}" if shards != 1 else ""
+    save_results(f"fig7_throughput{suffix}", rows)
     lines = []
     for r in rows:
         lines.append(csv_line(
-            f"fig7/clients={r['clients']}",
+            f"fig7/clients={r['clients']};shards={r['shards']}",
             r["latency"].get("mean", 0) * 1e6,
             f"rps={r['rps']:.1f};failures={r['failures']}",
         ))
@@ -76,4 +79,11 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true")
+    parser.add_argument("--shards", type=int, default=1,
+                        help="EngineShardPool shard count (default 1)")
+    args = parser.parse_args()
+    print("\n".join(main(quick=args.quick, shards=args.shards)))

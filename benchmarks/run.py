@@ -13,7 +13,8 @@ import sys
 import time
 import traceback
 
-BENCHES = ["fig7", "fig8", "fig9", "table1", "fig10", "soak", "roofline"]
+BENCHES = ["fig7", "fig8", "fig9", "table1", "fig10", "shards", "soak",
+           "roofline"]
 
 
 def _run_roofline() -> list[str]:
@@ -61,6 +62,9 @@ def main() -> int:
     if "fig10" in selected:
         from benchmarks import fig10_adoption
         runners["fig10"] = fig10_adoption.main
+    if "shards" in selected:
+        from benchmarks import shard_scaling
+        runners["shards"] = shard_scaling.main
     if "soak" in selected:
         from benchmarks import soak
         runners["soak"] = soak.main

@@ -1,0 +1,166 @@
+"""Shard scaling: run throughput of an EngineShardPool at 1/2/4/8 shards.
+
+What the paper does at scale — fan flow executions out across Step Functions
+partitions + SQS + Lambda workers — the offline reproduction does with
+:class:`~repro.core.shard_pool.EngineShardPool`.  The serialized resource in
+a *durable* single engine is the write-ahead journal: every run-state
+transition must be durable before the engine acts, the journal is one stream
+under one lock, so run throughput is bounded by sequential write latency no
+matter how many worker threads the engine has.  Sharding gives each shard
+its own journal segment (its own stream and lock), so durability
+parallelizes — the same reason production systems partition their WALs.
+
+Two durability models:
+
+* **default** — ``Journal(latency_s=2ms)`` simulates the managed-state round
+  trip the paper's engine pays on every transition (ASF persists execution
+  state across a network hop; the paper's no-op overhead is seconds).  The
+  simulated RTT is deterministic, so the scaling curve is reproducible on
+  any machine.
+* ``--fsync`` — real per-append ``fsync`` on per-shard segment files.  The
+  honest-hardware mode; on shared/noisy storage the ratio tracks the disk's
+  parallel-vs-serial fsync capacity and can vary wildly between trials.
+
+Method: C concurrent clients each submit echo-flow runs and wait for
+completion (the paper's Figure 7 closed-loop load model); run ids are
+rejection-sampled so every shard owns an equal share (removing small-sample
+hash imbalance from the measurement).  Each configuration is measured
+``trials`` times and the best sustained throughput is reported — with the
+speedup at each shard count relative to 1 shard.
+"""
+
+from __future__ import annotations
+
+import os
+import secrets
+import shutil
+import tempfile
+import threading
+import time
+
+from benchmarks.common import csv_line, real_stack, save_results
+from repro.core.shard_pool import shard_index
+
+ECHO_FLOW = {
+    "StartAt": "E",
+    "States": {
+        "E": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string": "scale"}, "End": True}
+    },
+}
+
+#: simulated managed-state durability RTT (paper §6.1 measures multi-second
+#: end-to-end overheads; 2 ms is deliberately conservative)
+JOURNAL_RTT_S = 0.002
+
+
+def balanced_run_ids(total: int, shards: int) -> list[str]:
+    """Run ids rejection-sampled so each shard owns exactly total/shards."""
+    assert total % shards == 0
+    quota = {i: total // shards for i in range(shards)}
+    out: list[str] = []
+    while len(out) < total:
+        rid = "run-" + secrets.token_hex(8)
+        home = shard_index(rid, shards)
+        if quota[home] > 0:
+            quota[home] -= 1
+            out.append(rid)
+    return out
+
+
+def bench_once(shards: int, runs_total: int, clients: int, fsync: bool,
+               timeout_s: float = 300.0) -> dict:
+    workdir = tempfile.mkdtemp(prefix=f"shard_scaling_{shards}_")
+    flows, _, _ = real_stack(
+        shards=shards,
+        journal_path=os.path.join(workdir, "journal.jsonl"),
+        fsync=fsync,
+        journal_latency_s=0.0 if fsync else JOURNAL_RTT_S,
+    )
+    try:
+        record = flows.publish_flow(ECHO_FLOW, title="shard-scaling-echo")
+        run_ids = balanced_run_ids(runs_total, shards)
+        per_client = [run_ids[i::clients] for i in range(clients)]
+        failures = [0]
+        lock = threading.Lock()
+
+        def client(my_ids: list[str]) -> None:
+            for rid in my_ids:
+                run = flows.engine.start_run(
+                    record.flow, {}, flow_id=record.flow_id, run_id=rid,
+                )
+                flows.engine.wait(run.run_id, timeout=timeout_s)
+                if run.status != "SUCCEEDED":
+                    with lock:
+                        failures[0] += 1
+
+        threads = [threading.Thread(target=client, args=(ids,))
+                   for ids in per_client if ids]
+        t0 = time.time()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.time() - t0
+    finally:
+        flows.engine.shutdown()
+        shutil.rmtree(workdir, ignore_errors=True)
+    return {
+        "shards": shards,
+        "runs": runs_total,
+        "clients": clients,
+        "failures": failures[0],
+        "wall_s": wall,
+        "runs_per_s": (runs_total - failures[0]) / wall,
+    }
+
+
+def run(shards_sweep=(1, 2, 4, 8), runs_total=384, clients=64, trials=2,
+        fsync=False):
+    # interleave trials across shard counts so slow environmental drift
+    # (noisy-neighbour CPU/disk) hits every configuration equally
+    best: dict[int, dict] = {}
+    for _ in range(trials):
+        for shards in shards_sweep:
+            row = bench_once(shards, runs_total=runs_total, clients=clients,
+                             fsync=fsync)
+            if (shards not in best
+                    or row["runs_per_s"] > best[shards]["runs_per_s"]):
+                best[shards] = row
+    rows = [best[s] for s in shards_sweep]
+    base = rows[0]["runs_per_s"]
+    for row in rows:
+        row["speedup_vs_1"] = row["runs_per_s"] / base
+        row["durability"] = "fsync" if fsync else f"rtt={JOURNAL_RTT_S*1e3:g}ms"
+    return rows
+
+
+def main(quick: bool = False, fsync: bool = False):
+    # keep clients >= 8x shards even in quick mode: shard pipelines must stay
+    # deep or the measurement under-reports the scaling the pool delivers
+    rows = run(runs_total=192 if quick else 384,
+               clients=64,
+               trials=1 if quick else 2,
+               fsync=fsync)
+    save_results("shard_scaling", rows)
+    lines = []
+    for r in rows:
+        lines.append(csv_line(
+            f"shard_scaling/shards={r['shards']}",
+            1e6 / r["runs_per_s"],
+            f"runs_per_s={r['runs_per_s']:.1f};"
+            f"speedup={r['speedup_vs_1']:.2f}x;"
+            f"durability={r['durability']};failures={r['failures']}",
+        ))
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true")
+    parser.add_argument("--fsync", action="store_true",
+                        help="real per-append fsync instead of simulated RTT")
+    args = parser.parse_args()
+    print("\n".join(main(quick=args.quick, fsync=args.fsync)))

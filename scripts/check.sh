@@ -1,0 +1,5 @@
+#!/usr/bin/env sh
+# Tier-1 verify: the one-invocation recipe (see ROADMAP.md).
+set -eu
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

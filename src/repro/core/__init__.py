@@ -33,8 +33,9 @@ from .errors import (
     NotFound,
 )
 from .flows_service import FlowsService
-from .journal import Journal
+from .journal import Journal, segment_path
 from .queues import QueueService
+from .shard_pool import EngineShardPool, PoolScheduler, shard_index
 from .timers import TimerService
 from .triggers import TriggerConfig, TriggerService
 
@@ -51,4 +52,5 @@ __all__ = [
     "NotFound",
     "FlowsService", "Journal", "QueueService", "TimerService",
     "TriggerConfig", "TriggerService",
+    "EngineShardPool", "PoolScheduler", "shard_index", "segment_path",
 ]

@@ -102,6 +102,9 @@ class Run:
     parent_state: str | None = None
     children: "list[Run]" = field(default_factory=list)
 
+    # global submission order, stamped by EngineShardPool (0 = shard-internal)
+    seq: int = 0
+
     # events log (web-app Events tab, Fig 2c)
     events: list[dict] = field(default_factory=list)
     # invoked on terminal status (flow-as-action composition, watchers)
@@ -155,6 +158,28 @@ class Scheduler:
         self.call_later(0.0, fn)
 
     # -- virtual-time drive --------------------------------------------------
+    def peek_time(self) -> float | None:
+        """Due time of the earliest pending event (None when empty).
+
+        Used by :class:`~repro.core.shard_pool.PoolScheduler` to merge many
+        shard heaps into one global time order.
+        """
+        with self._cv:
+            return self._heap[0][0] if self._heap else None
+
+    def pop_next(
+        self, until: float | None = None
+    ) -> tuple[float, Callable[[], None]] | None:
+        """Pop the earliest event due at or before ``until`` (None if none)."""
+        with self._cv:
+            if not self._heap:
+                return None
+            t, _, fn = self._heap[0]
+            if until is not None and t > until:
+                return None
+            heapq.heappop(self._heap)
+        return t, fn
+
     def drain(
         self,
         until: float | None = None,
@@ -172,13 +197,10 @@ class Scheduler:
         while n < max_events:
             if stop is not None and stop():
                 return n
-            with self._cv:
-                if not self._heap:
-                    return n
-                t, _, fn = self._heap[0]
-                if until is not None and t > until:
-                    return n
-                heapq.heappop(self._heap)
+            popped = self.pop_next(until)
+            if popped is None:
+                return n
+            t, fn = popped
             if hasattr(self.clock, "advance_to"):
                 self.clock.advance_to(t)
             fn()

@@ -13,6 +13,12 @@ Run-time behaviour follows §5.3.2: the caller's identity is checked against
 the flow's Starter policy, input is validated against the schema, dependent
 tokens for the invoking user (and any RunAs roles) are retrieved and stored
 for use when invoking actions, and the state machine is started.
+
+Execution is delegated to an :class:`~repro.core.shard_pool.EngineShardPool`
+(``shards=1`` by default): the service is a thin routing front-end — it
+publishes and authorizes, the pool hash-routes each run to its owning shard,
+and cross-shard views (``list_runs``) aggregate over all shards.  See
+docs/ARCHITECTURE.md for the layering contract.
 """
 
 from __future__ import annotations
@@ -35,12 +41,12 @@ from .engine import (
     RUN_ACTIVE,
     RUN_FAILED,
     RUN_SUCCEEDED,
-    FlowEngine,
     PollingPolicy,
     Run,
 )
 from .errors import Forbidden, InputValidationError, NotFound
 from .journal import Journal
+from .shard_pool import EngineShardPool
 
 
 @dataclass
@@ -75,14 +81,23 @@ class FlowsService:
         journal: Journal | None = None,
         polling: PollingPolicy | None = None,
         max_workers: int = 8,
+        shards: int = 1,
+        journal_path: str | None = None,
+        fsync: bool = False,
+        journal_latency_s: float = 0.0,
     ):
         self.clock = clock or RealClock()
         self.auth = auth
         self.registry = registry
-        self.engine = FlowEngine(
+        #: sharded execution layer; ``max_workers`` is the per-shard pool size
+        self.engine = EngineShardPool(
             registry,
+            num_shards=shards,
             clock=self.clock,
             journal=journal,
+            journal_path=journal_path,
+            fsync=fsync,
+            journal_latency_s=journal_latency_s,
             polling=polling,
             max_workers=max_workers,
         )
@@ -279,6 +294,7 @@ class FlowsService:
         status: str | None = None,
         tag: str | None = None,
     ) -> list[dict]:
+        # ``engine.runs`` aggregates every shard's runs in submission order
         out = []
         for run in list(self.engine.runs.values()):
             if run.parent is not None:
@@ -309,6 +325,14 @@ class FlowsService:
     def flows_by_id(self) -> dict[str, asl.Flow]:
         with self._lock:
             return {fid: rec.flow for fid, rec in self._flows.items()}
+
+    def recover_runs(self, resume: bool = True) -> list[Run]:
+        """Resume unfinished runs of published flows after a restart.
+
+        Delegates to per-shard journal replay (each shard recovers only the
+        runs it owns; see :meth:`EngineShardPool.recover`).
+        """
+        return self.engine.recover(self.flows_by_id(), resume=resume)
 
     def _require(
         self,

@@ -21,15 +21,45 @@ import io
 import json
 import os
 import threading
+import time
 from typing import Any, Iterator
 
 
-class Journal:
-    """Append-only JSONL journal.  ``path=None`` keeps records in memory."""
+def segment_path(base_path: str, index: int, num_shards: int) -> str:
+    """Per-shard journal segment file name.
 
-    def __init__(self, path: str | None = None, fsync: bool = False):
+    ``journal.jsonl`` with 4 shards becomes ``journal.shard0-of4.jsonl`` ...
+    ``journal.shard3-of4.jsonl``.  The shard count is part of the name so a
+    pool restarted with a different count opens fresh segments and recovers
+    nothing, instead of silently recovering a partial, misrouted view —
+    restart with the original count (visible in the segment file names) to
+    recover.
+    """
+    root, ext = os.path.splitext(base_path)
+    return f"{root}.shard{index}-of{num_shards}{ext}"
+
+
+class Journal:
+    """Append-only JSONL journal.  ``path=None`` keeps records in memory.
+
+    ``latency_s`` simulates the durability round trip the paper's engine
+    pays on every transition (Step Functions persists execution state and
+    SQS persists in-flight work across a network hop).  The sleep is taken
+    *while holding the journal lock*: write-ahead means a transition may not
+    proceed until its record is durable, and a single WAL stream admits one
+    outstanding write — which is exactly the serialization that per-shard
+    journal segments remove (see benchmarks/shard_scaling.py).
+    """
+
+    def __init__(
+        self,
+        path: str | None = None,
+        fsync: bool = False,
+        latency_s: float = 0.0,
+    ):
         self.path = path
         self.fsync = fsync
+        self.latency_s = latency_s
         self._lock = threading.Lock()
         self._memory: list[dict] = []
         self._fh: io.TextIOBase | None = None
@@ -40,6 +70,8 @@ class Journal:
     def append(self, record: dict) -> None:
         line = json.dumps(record, separators=(",", ":"), default=_jsonable)
         with self._lock:
+            if self.latency_s:
+                time.sleep(self.latency_s)
             if self._fh is not None:
                 self._fh.write(line + "\n")
                 self._fh.flush()

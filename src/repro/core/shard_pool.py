@@ -1,0 +1,313 @@
+"""EngineShardPool: horizontally sharded flow execution (paper §5.3 at scale).
+
+The paper's Flows service scales by fanning run execution out across Step
+Functions + SQS + Lambda workers while presenting one logical service.  This
+module reproduces that shape in-process: a pool of N independent
+:class:`~repro.core.engine.FlowEngine` shards — each with its own scheduler
+heap, lock, worker threads, and write-ahead journal *segment* — behind a
+facade that is call-compatible with a single engine.
+
+Partitioning contract
+---------------------
+* Runs are **hash-partitioned by run id**: ``shard_index(run_id, n)`` maps a
+  run to its home shard with a stable (process-independent) CRC32 hash, so
+  routing is stateless and a restarted pool recovers the same placement from
+  its journal segments.
+* ``Parallel`` branch children get ids of the form ``<parent>.bN``; the hash
+  covers only the root id, so children **co-locate with their parent** (the
+  branch join never crosses a shard boundary).
+* Cross-shard traffic exists only at the facade: ``list_runs`` aggregates all
+  shards, and flow-as-action composition may place a child flow's run on a
+  different shard than its parent (each side only touches its own shard's
+  state; the parent observes the child through the provider API, exactly as
+  the paper's flows observe remote actions).
+
+Determinism contract
+--------------------
+Under a :class:`~repro.core.clock.VirtualClock` all shards share one clock,
+and :meth:`PoolScheduler.drain` executes events in **global time order** by
+merging the per-shard heaps (ties broken by shard index, then per-shard
+submission order).  A flow run therefore produces the same transitions,
+context, and terminal state regardless of the shard count.
+
+Durability contract
+-------------------
+Each shard journals to its own segment (``<base>.shard<i>-of<n>.jsonl``)
+*before* acting — the per-shard write-ahead rule is identical to the single
+engine's.  Recovery is per-shard: each shard replays only its own segment, so
+a pool restarted with the same ``num_shards`` recovers every unfinished run
+on its original home shard.  Restarting with a *different* count opens fresh
+segments and recovers nothing (the count is embedded in the segment file
+names) — restart with the original count to recover.  For callers wiring
+explicit ``journals=`` whose contents don't match the hash placement,
+``get_run`` falls back to scanning all shards so reads still resolve.
+"""
+
+from __future__ import annotations
+
+import secrets
+import threading
+import zlib
+from typing import Callable
+
+from . import actions as ap
+from . import asl
+from .clock import Clock, MonotonicId, RealClock
+from .engine import RUN_ACTIVE, FlowEngine, PollingPolicy, Run, Scheduler
+from .errors import NotFound
+from .journal import Journal, segment_path
+
+
+def shard_index(run_id: str, num_shards: int) -> int:
+    """Stable hash partition of a run id onto ``num_shards`` shards.
+
+    Only the root id (before the first ``.``) is hashed so ``Parallel``
+    branch children (``<parent>.bN``) land on their parent's shard.
+    """
+    root = run_id.split(".", 1)[0]
+    return zlib.crc32(root.encode("utf-8")) % num_shards
+
+
+class PoolScheduler:
+    """Facade over the per-shard schedulers.
+
+    Presents the same surface as :class:`~repro.core.engine.Scheduler` so
+    existing callers (``flows.engine.scheduler.drain(...)``, trigger/timer
+    services, providers firing completion callbacks) work unchanged against a
+    pool.  Events submitted *through the facade* land on shard 0's heap;
+    events the shards schedule for themselves stay on their own heaps.
+    ``drain`` merges all heaps into one global time order.
+    """
+
+    def __init__(self, schedulers: list[Scheduler], clock: Clock):
+        self.clock = clock
+        self._schedulers = schedulers
+
+    # -- Scheduler-compatible submission (auxiliary events -> shard 0) -------
+    def call_at(self, t: float, fn: Callable[[], None]) -> None:
+        self._schedulers[0].call_at(t, fn)
+
+    def call_later(self, delay: float, fn: Callable[[], None]) -> None:
+        self._schedulers[0].call_later(delay, fn)
+
+    def submit(self, fn: Callable[[], None]) -> None:
+        self._schedulers[0].submit(fn)
+
+    def pending(self) -> int:
+        return sum(s.pending() for s in self._schedulers)
+
+    def stop(self) -> None:
+        for s in self._schedulers:
+            s.stop()
+
+    # -- virtual-time drive ---------------------------------------------------
+    def drain(
+        self,
+        until: float | None = None,
+        max_events: int = 10_000_000,
+        stop: Callable[[], bool] | None = None,
+    ) -> int:
+        """Execute events across ALL shards in global time order.
+
+        The deterministic analogue of N shards running concurrently: at each
+        step the globally earliest due event runs (ties broken by shard
+        index), the shared VirtualClock advances to its due time, and the
+        loop repeats until quiescence, ``until``, ``max_events``, or ``stop``.
+        """
+        n = 0
+        while n < max_events:
+            if stop is not None and stop():
+                return n
+            best_t: float | None = None
+            best_sched: Scheduler | None = None
+            for sched in self._schedulers:
+                t = sched.peek_time()
+                if t is None:
+                    continue
+                if best_t is None or t < best_t:
+                    best_t, best_sched = t, sched
+            if best_sched is None or (until is not None and best_t > until):
+                return n
+            popped = best_sched.pop_next(best_t)
+            if popped is None:  # raced by a live worker thread; re-scan
+                continue
+            t, fn = popped
+            if hasattr(self.clock, "advance_to"):
+                self.clock.advance_to(t)
+            fn()
+            n += 1
+        return n
+
+
+class EngineShardPool:
+    """N independent FlowEngine shards behind a single-engine-compatible API.
+
+    ``FlowsService`` routes every run-scoped call (``start_run`` /
+    ``get_run`` / ``cancel_run`` / ``wait`` / ``run_to_completion``) to the
+    owning shard and aggregates the cross-shard views (``runs``, ``stats``,
+    ``recover``).  With ``num_shards=1`` the pool is a thin wrapper with
+    identical semantics to a bare engine.
+    """
+
+    def __init__(
+        self,
+        registry: ap.ActionRegistry,
+        num_shards: int = 1,
+        clock: Clock | None = None,
+        journal: Journal | None = None,
+        journal_path: str | None = None,
+        journals: list[Journal] | None = None,
+        fsync: bool = False,
+        journal_latency_s: float = 0.0,
+        polling: PollingPolicy | None = None,
+        max_workers: int = 8,
+        start_threads: bool | None = None,
+    ):
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        if journal is not None and num_shards != 1:
+            raise ValueError(
+                "a single shared Journal only makes sense with num_shards=1; "
+                "pass journal_path= (per-shard segments) or journals= instead"
+            )
+        if journals is not None and len(journals) != num_shards:
+            raise ValueError(
+                f"journals must have one entry per shard "
+                f"({len(journals)} != {num_shards})"
+            )
+        self.registry = registry
+        self.clock = clock or RealClock()
+        self.num_shards = num_shards
+        self.journal_path = journal_path
+        self.engines: list[FlowEngine] = []
+        for i in range(num_shards):
+            if journals is not None:
+                seg = journals[i]
+            elif journal is not None:
+                seg = journal
+            elif journal_path is not None:
+                seg = Journal(
+                    segment_path(journal_path, i, num_shards),
+                    fsync=fsync,
+                    latency_s=journal_latency_s,
+                )
+            else:
+                seg = Journal(latency_s=journal_latency_s)
+            self.engines.append(
+                FlowEngine(
+                    registry,
+                    clock=self.clock,
+                    journal=seg,
+                    polling=polling,
+                    max_workers=max_workers,
+                    start_threads=start_threads,
+                )
+            )
+        self.scheduler = PoolScheduler([e.scheduler for e in self.engines], self.clock)
+        self._seq = MonotonicId()  # global submission order for list_runs
+
+    # ------------------------------------------------------------- routing
+    def shard_of(self, run_id: str) -> FlowEngine:
+        """The home shard that owns (or would own) ``run_id``."""
+        return self.engines[shard_index(run_id, self.num_shards)]
+
+    def _owner(self, run_id: str) -> FlowEngine:
+        """Resolve the engine actually holding ``run_id``.
+
+        The home shard almost always matches; the fallback scan covers runs
+        recovered from segments written under a different shard count.
+        """
+        home = self.shard_of(run_id)
+        if run_id in home.runs:
+            return home
+        for engine in self.engines:
+            if run_id in engine.runs:
+                return engine
+        return home  # raise NotFound from the canonical place
+
+    # ------------------------------------------------------------- run API
+    def start_run(self, flow: asl.Flow, flow_input: dict, **kwargs) -> Run:
+        run_id = kwargs.pop("run_id", None) or "run-" + secrets.token_hex(8)
+        run = self.shard_of(run_id).start_run(
+            flow, flow_input, run_id=run_id, **kwargs
+        )
+        run.seq = self._seq.next()
+        return run
+
+    def get_run(self, run_id: str) -> Run:
+        return self._owner(run_id).get_run(run_id)
+
+    def cancel_run(self, run_id: str) -> Run:
+        return self._owner(run_id).cancel_run(run_id)
+
+    def wait(self, run_id: str, timeout: float | None = None) -> Run:
+        return self._owner(run_id).wait(run_id, timeout)
+
+    def run_to_completion(
+        self,
+        run_id: str,
+        until: float | None = None,
+        max_events: int = 10_000_000,
+    ) -> Run:
+        """Virtual-time mode: drain ALL shards until this run completes.
+
+        The whole pool is drained (not just the owning shard) because a run
+        may depend on another shard's progress — e.g. a flow-as-action child
+        placed on a different shard.
+        """
+        run = self.get_run(run_id)
+        self.scheduler.drain(
+            until=until,
+            max_events=max_events,
+            stop=lambda: run.status != RUN_ACTIVE,
+        )
+        return run
+
+    def drain(self, until: float | None = None) -> int:
+        """Virtual-time drive: run all due events on all shards."""
+        return self.scheduler.drain(until=until)
+
+    def shutdown(self) -> None:
+        for engine in self.engines:
+            engine.shutdown()
+
+    # ---------------------------------------------------------- aggregation
+    @property
+    def runs(self) -> dict[str, Run]:
+        """Merged snapshot of every shard's runs, in global submission order.
+
+        Runs created internally by the shards (``Parallel`` children,
+        recovered runs) carry ``seq == 0`` and sort by start time instead.
+        """
+        merged: list[Run] = []
+        for engine in self.engines:
+            with engine._lock:
+                merged.extend(engine.runs.values())
+        merged.sort(key=lambda r: (r.seq, r.start_time, r.run_id))
+        return {r.run_id: r for r in merged}
+
+    @property
+    def stats(self) -> dict[str, int]:
+        """Counters summed across shards (per-shard via ``engines[i].stats``)."""
+        totals: dict[str, int] = {}
+        for engine in self.engines:
+            with engine._lock:
+                for key, value in engine.stats.items():
+                    totals[key] = totals.get(key, 0) + value
+        return totals
+
+    # ------------------------------------------------------------- recovery
+    def recover(
+        self,
+        flows_by_id: dict[str, asl.Flow],
+        resume: bool = True,
+    ) -> list[Run]:
+        """Per-shard crash recovery: each shard replays its own segment.
+
+        Shards are independent — one shard's corrupt or missing segment does
+        not block the others (the caller sees whatever recovered).
+        """
+        resumed: list[Run] = []
+        for engine in self.engines:
+            resumed.extend(engine.recover(flows_by_id, resume=resume))
+        return resumed

@@ -147,7 +147,7 @@ def run_cell(
                     record.setdefault("memory", {})[key] = getattr(
                         mem, key, None
                     )
-            cost = compiled.cost_analysis()
+            cost = hlo_mod.cost_analysis_dict(compiled)
             if cost:
                 record["cost"] = {
                     k: cost[k]

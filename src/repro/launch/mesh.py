@@ -17,19 +17,25 @@ HBM_BANDWIDTH = 819e9           # B/s
 ICI_LINK_BANDWIDTH = 50e9       # B/s per link
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _axis_type_kwargs(n: int) -> dict:
+    # jax.sharding.AxisType landed in jax 0.5; older versions have neither
+    # the enum nor the make_mesh(axis_types=...) parameter.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary mesh helper (tests, elastic rescale demos)."""
-    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=_auto(len(axes)))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **_axis_type_kwargs(len(axes)))
 
 
 def mesh_chip_count(mesh) -> int:

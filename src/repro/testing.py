@@ -1,0 +1,128 @@
+"""Deterministic stand-ins for optional test dependencies.
+
+The tier-1 suite uses `hypothesis <https://hypothesis.works>`_ for
+property-based tests, but the execution environment may not have it
+installed.  :func:`hypothesis_shim` returns the real ``(given, settings,
+strategies)`` triple when hypothesis is importable, and otherwise a minimal
+deterministic replacement: each ``@given`` test runs ``max_examples`` times
+against seeded pseudo-random draws from the strategy expressions, so the
+property still gets a reproducible sweep instead of being skipped.
+
+Usage in a test module::
+
+    from repro.testing import hypothesis_shim
+
+    given, settings, st = hypothesis_shim()
+
+Only the strategy combinators the suite uses are implemented; the fallback
+raises ``AttributeError`` for anything else so silent no-op coverage cannot
+creep in.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import string
+from typing import Any, Callable
+
+_DEFAULT_EXAMPLES = 25
+_SEED = 0x5EED
+
+
+class _Strategy:
+    """A sampleable value generator (fallback analogue of a SearchStrategy)."""
+
+    def __init__(self, sample: Callable[[random.Random], Any]):
+        self._sample = sample
+
+    def sample(self, rng: random.Random) -> Any:
+        return self._sample(rng)
+
+
+class _Strategies:
+    """Fallback for ``hypothesis.strategies`` — seeded random draws."""
+
+    @staticmethod
+    def just(value) -> _Strategy:
+        return _Strategy(lambda rng: value)
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def integers(min_value=-(2**63), max_value=2**63) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_ignored) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def text(alphabet=string.ascii_lowercase, min_size=0, max_size=8) -> _Strategy:
+        def sample(rng: random.Random) -> str:
+            n = rng.randint(min_size, max_size)
+            return "".join(rng.choice(alphabet) for _ in range(n))
+
+        return _Strategy(sample)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def one_of(*strategies) -> _Strategy:
+        return _Strategy(lambda rng: rng.choice(strategies).sample(rng))
+
+    @staticmethod
+    def tuples(*strategies) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.sample(rng) for s in strategies))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size=0, max_size=10) -> _Strategy:
+        def sample(rng: random.Random) -> list:
+            n = rng.randint(min_size, max_size)
+            return [elements.sample(rng) for _ in range(n)]
+
+        return _Strategy(sample)
+
+
+def _fallback_given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            examples = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+            for i in range(examples):
+                rng = random.Random((_SEED << 16) + i)
+                drawn_args = tuple(s.sample(rng) for s in arg_strategies)
+                drawn_kwargs = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                fn(*drawn_args, **drawn_kwargs)
+
+        # all arguments are drawn from strategies — hide the wrapped
+        # signature so pytest does not look for same-named fixtures
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorate
+
+
+def _fallback_settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def hypothesis_shim():
+    """Return ``(given, settings, strategies)`` — real or deterministic."""
+    try:
+        from hypothesis import given, settings, strategies
+
+        return given, settings, strategies
+    except ImportError:
+        return _fallback_given, _fallback_settings, _Strategies()

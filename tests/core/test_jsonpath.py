@@ -1,7 +1,10 @@
 import pytest
-from hypothesis import given, strategies as st
 
 from repro.core import jsonpath as jp
+from repro.testing import hypothesis_shim
+
+# real hypothesis when installed; deterministic seeded sweep otherwise
+given, settings, st = hypothesis_shim()
 
 
 def test_parse_basic():

@@ -1,7 +1,10 @@
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.auth import AuthService, Caller
+from repro.testing import hypothesis_shim
+
+# real hypothesis when installed; deterministic seeded sweep otherwise
+given, settings, st = hypothesis_shim()
 from repro.core.clock import VirtualClock
 from repro.core.errors import Forbidden, QueueInvariantError
 from repro.core.queues import QueueService

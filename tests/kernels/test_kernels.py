@@ -7,9 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
+from repro.testing import hypothesis_shim
+
+# real hypothesis when installed; deterministic seeded sweep otherwise
+given, settings, st = hypothesis_shim()
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mamba_scan import mamba_scan
 from repro.kernels.moe_gmm import gmm

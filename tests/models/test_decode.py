@@ -113,7 +113,13 @@ def test_vlm_prefix_then_decode():
 
 def test_sliding_window_restricts_attention():
     """With SWA, logits at position t must not depend on tokens < t-window."""
+    import dataclasses
+
     cfg = fp32(configs.get("mixtral-8x7b", smoke=True)).replace(sliding_window=4)
+    # capacity-bounded MoE dispatch couples tokens through slot competition
+    # (an expected property, not an attention leak) — give the router slack
+    # so this test isolates the attention mask
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
     model = Model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
     t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab_size)

@@ -2,9 +2,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import TrainConfig
+from repro.testing import hypothesis_shim
+
+# real hypothesis when installed; deterministic seeded sweep otherwise
+given, settings, st = hypothesis_shim()
 from repro.train import optimizer as opt
 
 
