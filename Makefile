@@ -1,6 +1,6 @@
 # Developer entry points.  `make check` is the tier-1 verify recipe.
 
-.PHONY: check bench bench-quick shards
+.PHONY: check bench bench-quick shards fanout
 
 check:
 	./scripts/check.sh
@@ -13,3 +13,6 @@ bench-quick:
 
 shards:
 	PYTHONPATH=src:. python benchmarks/shard_scaling.py
+
+fanout:
+	PYTHONPATH=src:. python benchmarks/fig_event_fanout.py

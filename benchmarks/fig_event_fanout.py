@@ -1,0 +1,288 @@
+"""Event fan-out: EventRouter vs. per-trigger polling at 10/100/1000 triggers.
+
+The paper's Triggers service (§5.5) polls its queue per enabled trigger with
+an adaptive interval.  At fleet scale (AERO, arXiv:2505.18408; Steering a
+Fleet, arXiv:2403.06077) that is N independent timer chains and N separate
+``QueueService.receive`` calls per interval, almost all of them empty.  The
+:class:`~repro.core.triggers.EventRouter` replaces the chains with push
+subscriptions (``send()`` wakes the router at the message's delivery time)
+plus one coalesced batched sweep per queue for redeliveries — so receive
+pressure tracks *traffic*, not trigger count.
+
+Method (VirtualClock, deterministic): N triggers, one queue each (the
+pre-router design required it — co-queued pollers steal each other's
+messages).  A fixed fraction of queues is active; each active queue gets
+bursty traffic over a fixed horizon.  Both designs run the identical
+workload; we report ``QueueService.receive`` calls, dispatch throughput in
+events per *wall* second, and the median event→invocation latency in
+*virtual* seconds (poll-interval waiting is the paper's dominant trigger
+latency).
+
+A second phase checks the determinism contract end-to-end: the same
+FlowsService trigger workload at shards ∈ {1, 4, 8} must produce
+bit-identical router dispatch logs under a VirtualClock.
+
+    PYTHONPATH=src:. python benchmarks/fig_event_fanout.py [--quick]
+"""
+
+from __future__ import annotations
+
+import random
+import time
+
+from benchmarks.common import csv_line, save_results
+from repro.core import predicate as predlang
+from repro.core.actions import ActionRegistry
+from repro.core.clock import VirtualClock
+from repro.core.engine import Scheduler
+from repro.core.flows_service import FlowsService
+from repro.core.providers import EchoProvider
+from repro.core.queues import QueueService
+from repro.core.triggers import EventRouter, Trigger, TriggerConfig
+
+HORIZON_S = 600.0
+ACTIVE_FRACTION = 0.1
+BURSTS_PER_ACTIVE = 5
+BURST_SIZE = 8
+POLL_MIN_S = 1.0
+POLL_MAX_S = 30.0
+
+ECHO_FLOW = {
+    "StartAt": "E",
+    "States": {
+        "E": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string.$": "$.msg"}, "End": True}
+    },
+}
+
+
+class PollingTriggerService:
+    """The pre-EventRouter baseline: one adaptive poll chain per trigger.
+
+    Faithful reimplementation of the old ``TriggerService`` loop — poll,
+    handle, back off (x2 to ``poll_max_s``) when quiet, reset to
+    ``poll_min_s`` on traffic — kept here as the measured baseline.
+    """
+
+    def __init__(self, queues, clock, scheduler):
+        self.queues = queues
+        self.clock = clock
+        self.scheduler = scheduler
+        self._triggers: dict[str, Trigger] = {}
+
+    def create_trigger(self, config: TriggerConfig, trigger_id: str) -> Trigger:
+        trig = Trigger(trigger_id=trigger_id, config=config,
+                       interval=config.poll_min_s)
+        trig._compiled = predlang.compile_expr(config.predicate)
+        self._triggers[trig.trigger_id] = trig
+        return trig
+
+    def enable(self, trigger_id: str) -> None:
+        trig = self._triggers[trigger_id]
+        trig.enabled = True
+        self.scheduler.submit(lambda: self._poll(trig))
+
+    def _poll(self, trig: Trigger) -> None:
+        if not trig.enabled:
+            return
+        trig.stats["polls"] += 1
+        messages = self.queues.receive(
+            trig.config.queue_id, max_messages=trig.config.batch
+        )
+        for m in messages:
+            self._handle(trig, m)
+        if messages:
+            trig.interval = trig.config.poll_min_s
+        else:
+            trig.interval = min(trig.interval * 2.0, trig.config.poll_max_s)
+        self.scheduler.call_later(trig.interval, lambda: self._poll(trig))
+
+    def _handle(self, trig: Trigger, message: dict) -> None:
+        trig.stats["events"] += 1
+        props = message["body"]
+        if predlang.matches(trig._compiled, props):
+            trig.stats["matched"] += 1
+            trig.config.action_invoker(
+                predlang.transform(trig.config.transform, props), None
+            )
+            trig.stats["invocations"] += 1
+        else:
+            trig.stats["discarded"] += 1
+        self.queues.ack(trig.config.queue_id, message["receipt"])
+
+
+def make_schedule(n_triggers: int, seed: int = 0):
+    """Deterministic bursty traffic: (queue_index, send_time) pairs.
+
+    A burst lands at one instant (a detector writes a batch of frames, a
+    backlog is released): the router coalesces each burst into one batched
+    dispatch, while the polling baseline pays its chains regardless.
+    """
+    rng = random.Random(seed)
+    active = max(1, int(n_triggers * ACTIVE_FRACTION))
+    sends = []
+    for qi in range(active):
+        for b in range(BURSTS_PER_ACTIVE):
+            t0 = rng.uniform(5.0, HORIZON_S - 60.0)
+            sends.extend((qi, t0) for _ in range(BURST_SIZE))
+    sends.sort(key=lambda s: (s[1], s[0]))
+    return sends
+
+
+def _bench(n_triggers: int, use_router: bool) -> dict:
+    clock = VirtualClock()
+    scheduler = Scheduler(clock)
+    queues = QueueService(clock=clock)
+    qids = [queues.create_queue(f"q{i}").queue_id for i in range(n_triggers)]
+    latencies: list[float] = []
+    invocations = [0]
+
+    def invoker(body, caller):
+        latencies.append(clock.now() - body["sent_at"])
+        invocations[0] += 1
+        return "run"
+
+    config = dict(
+        predicate="n % 2 == 0",  # half the events match
+        transform={"n": "n", "sent_at": "sent_at"},
+        poll_min_s=POLL_MIN_S, poll_max_s=POLL_MAX_S,
+    )
+    if use_router:
+        svc = EventRouter(queues, clock=clock, scheduler=scheduler)
+        for i, qid in enumerate(qids):
+            trig = svc.create_trigger(
+                TriggerConfig(queue_id=qid, action_invoker=invoker, **config),
+                trigger_id=f"trig-{i:04d}",
+            )
+            svc.enable(trig.trigger_id)
+    else:
+        svc = PollingTriggerService(queues, clock, scheduler)
+        for i, qid in enumerate(qids):
+            svc.create_trigger(
+                TriggerConfig(queue_id=qid, action_invoker=invoker, **config),
+                trigger_id=f"trig-{i:04d}",
+            )
+            svc.enable(f"trig-{i:04d}")
+
+    for n, (qi, t) in enumerate(make_schedule(n_triggers)):
+        scheduler.call_at(
+            t, lambda qi=qi, t=t, n=n: queues.send(
+                qids[qi], {"n": n, "sent_at": t})
+        )
+    wall0 = time.perf_counter()
+    scheduler.drain(until=HORIZON_S)
+    wall = time.perf_counter() - wall0
+
+    latencies.sort()
+    return {
+        "design": "router" if use_router else "polling",
+        "triggers": n_triggers,
+        "receive_calls": queues.stats["receives"],
+        "events_sent": queues.stats["sends"],
+        "invocations": invocations[0],
+        "wall_s": wall,
+        "events_per_s": queues.stats["sends"] / wall if wall > 0 else 0.0,
+        "latency_p50_s": latencies[len(latencies) // 2] if latencies else 0.0,
+    }
+
+
+# ------------------------------------------------- determinism (shard sweep)
+
+def _dispatch_log(num_shards: int):
+    """FlowsService trigger workload; normalized router dispatch log."""
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    queues = QueueService(clock=clock)
+    flows = FlowsService(registry, clock=clock, shards=num_shards,
+                         queues=queues)
+    flows.publish_flow(ECHO_FLOW, title="fanout-det", flow_id="fanout-flow")
+    q = queues.create_queue("det")
+    for i in range(8):
+        trig = flows.create_trigger(
+            queue_id=q.queue_id, predicate=f"n % 4 == {i % 4}",
+            flow_id="fanout-flow", transform={"msg": "name"},
+            trigger_id=f"det-{i}",
+        )
+        flows.enable_trigger(trig.trigger_id)
+    name_of = {}
+
+    def send(j):
+        mid = queues.send(q.queue_id, {"n": j, "name": f"m{j}"})
+        name_of[mid] = f"m{j}"
+
+    for j in range(64):
+        flows.engine.scheduler.call_at(1.0 + j * 0.37, lambda j=j: send(j))
+    flows.engine.drain(until=10_000.0)
+    assert queues.depth(q.queue_id) == 0
+    return [(t, trig, name_of[mid], disp)
+            for t, trig, mid, disp in flows.router.dispatch_log]
+
+
+def check_determinism(shard_counts=(1, 4, 8)) -> str:
+    baseline = _dispatch_log(shard_counts[0])
+    for n in shard_counts[1:]:
+        log = _dispatch_log(n)
+        assert log == baseline, (
+            f"router dispatch diverged at shards={n} "
+            f"({len(log)} vs {len(baseline)} entries)"
+        )
+    return (f"dispatch bit-identical at shards={list(shard_counts)};"
+            f"entries={len(baseline)}")
+
+
+def main(quick: bool = False):
+    sweep = (10, 100) if quick else (10, 100, 1000)
+    shard_counts = (1, 4) if quick else (1, 4, 8)
+    rows = []
+    for n in sweep:
+        polling = _bench(n, use_router=False)
+        router = _bench(n, use_router=True)
+        router["receive_reduction"] = (
+            polling["receive_calls"] / max(1, router["receive_calls"])
+        )
+        router["events_per_s_vs_polling"] = (
+            router["events_per_s"] / max(1e-12, polling["events_per_s"])
+        )
+        rows.extend([polling, router])
+    det = check_determinism(shard_counts)
+    save_results("fig_event_fanout", rows)
+
+    # acceptance: at the largest trigger count the router does >=10x fewer
+    # receive calls and sustains higher wall-clock event throughput
+    top_poll, top_router = rows[-2], rows[-1]
+    assert top_router["receive_reduction"] >= 10.0, (
+        f"receive reduction {top_router['receive_reduction']:.1f}x < 10x "
+        f"at {top_router['triggers']} triggers"
+    )
+    assert top_router["events_per_s"] > top_poll["events_per_s"], (
+        "router should sustain higher events/sec than per-trigger polling"
+    )
+
+    lines = []
+    for r in rows:
+        derived = (
+            f"receives={r['receive_calls']};"
+            f"invocations={r['invocations']};"
+            f"events_per_s={r['events_per_s']:.0f};"
+            f"latency_p50={r['latency_p50_s']*1e3:.0f}ms"
+        )
+        if "receive_reduction" in r:
+            derived += (f";receive_reduction={r['receive_reduction']:.1f}x;"
+                        f"speedup={r['events_per_s_vs_polling']:.2f}x")
+        lines.append(csv_line(
+            f"fanout/{r['design']}/triggers={r['triggers']}",
+            r["wall_s"] * 1e6 / max(1, r["events_sent"]),
+            derived,
+        ))
+    lines.append(csv_line("fanout/determinism", 0.0, det))
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true")
+    args = parser.parse_args()
+    print("\n".join(main(quick=args.quick)))

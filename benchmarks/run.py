@@ -13,8 +13,8 @@ import sys
 import time
 import traceback
 
-BENCHES = ["fig7", "fig8", "fig9", "table1", "fig10", "shards", "soak",
-           "roofline"]
+BENCHES = ["fig7", "fig8", "fig9", "table1", "fig10", "shards", "fanout",
+           "soak", "roofline"]
 
 
 def _run_roofline() -> list[str]:
@@ -65,6 +65,9 @@ def main() -> int:
     if "shards" in selected:
         from benchmarks import shard_scaling
         runners["shards"] = shard_scaling.main
+    if "fanout" in selected:
+        from benchmarks import fig_event_fanout
+        runners["fanout"] = fig_event_fanout.main
     if "soak" in selected:
         from benchmarks import soak
         runners["soak"] = soak.main

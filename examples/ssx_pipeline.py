@@ -10,8 +10,10 @@ Two flows, exactly as the paper describes:
 
 A Trigger watches the instrument queue and starts the per-image flow per
 detector frame; a second Trigger fires the structure flow once enough hits
-accumulate.  "DIALS" and "PRIME" are stand-in JAX computations over the real
-staged bytes.
+accumulate.  Both ride the FlowsService's shared EventRouter (push-based
+event fabric: detector sends wake the dispatcher immediately — no polling).
+"DIALS" and "PRIME" are stand-in JAX computations over the real staged
+bytes.
 
     PYTHONPATH=src python examples/ssx_pipeline.py [--images 24]
 """
@@ -27,7 +29,7 @@ from repro.core.actions import ActionRegistry
 from repro.core.engine import PollingPolicy
 from repro.core.providers import ComputeProvider, SearchProvider, TransferProvider
 from repro.core.queues import QueueService
-from repro.core.triggers import TriggerConfig, TriggerService
+from repro.core.triggers import TriggerConfig
 
 
 def main():
@@ -90,8 +92,10 @@ def main():
     f_prime = compute.register_function(
         prime_solve, modeled_duration=lambda kw: 120.0)
 
+    queues = QueueService(clock=clock)
     flows = FlowsService(registry, clock=clock,
-                         polling=PollingPolicy(use_callbacks=True))
+                         polling=PollingPolicy(use_callbacks=True),
+                         queues=queues)
 
     def compute_state(fid, kwargs):
         return {"Type": "Action", "ActionUrl": "ap://compute",
@@ -160,12 +164,13 @@ def main():
         },
     }, title="SSX structure")
 
-    # triggers: detector frames -> per-image flow; hit threshold -> PRIME
-    queues = QueueService(clock=clock)
+    # triggers: detector frames -> per-image flow; hit threshold -> PRIME.
+    # Both live on the FlowsService's shared EventRouter: detector sends
+    # wake the dispatcher at the frame's delivery time (push-first), and
+    # each received batch is matched against every predicate in one pass.
     frames_q = queues.create_queue("detector-frames")
     hits_q = queues.create_queue("hit-counter")
-    triggers = TriggerService(queues, clock=clock,
-                              scheduler=flows.engine.scheduler)
+    router = flows.router
     image_runs, structure_runs = [], []
 
     def run_image(body, caller):
@@ -184,18 +189,18 @@ def main():
         structure_runs.append(r.run_id)
         return r.run_id
 
-    t1 = triggers.create_trigger(TriggerConfig(
+    t1 = router.create_trigger(TriggerConfig(
         queue_id=frames_q.queue_id,
         predicate='image.endswith(".cbf")',
         transform={"image": "image"},
         action_invoker=run_image))
-    t2 = triggers.create_trigger(TriggerConfig(
+    t2 = router.create_trigger(TriggerConfig(
         queue_id=hits_q.queue_id,
         predicate=f"hits >= {args.hits_needed}",
         transform={"n_hits": "hits"},
         action_invoker=run_structure))
-    triggers.enable(t1.trigger_id)
-    triggers.enable(t2.trigger_id)
+    router.enable(t1.trigger_id)
+    router.enable(t2.trigger_id)
 
     # the instrument: 10 Hz frame generation (paper rate), ~1.5 MB images
     for i in range(args.images):

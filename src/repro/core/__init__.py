@@ -33,11 +33,16 @@ from .errors import (
     NotFound,
 )
 from .flows_service import FlowsService
-from .journal import Journal, segment_path
+from .journal import (
+    Journal,
+    TriggerImage,
+    replay_triggers,
+    segment_path,
+)
 from .queues import QueueService
 from .shard_pool import EngineShardPool, PoolScheduler, shard_index
 from .timers import TimerService
-from .triggers import TriggerConfig, TriggerService
+from .triggers import EventRouter, Trigger, TriggerConfig, TriggerService
 
 __all__ = [
     "ACTIVE", "FAILED", "SUCCEEDED",
@@ -51,6 +56,7 @@ __all__ = [
     "FlowValidationError", "Forbidden", "InputValidationError", "NodeFailure",
     "NotFound",
     "FlowsService", "Journal", "QueueService", "TimerService",
-    "TriggerConfig", "TriggerService",
+    "EventRouter", "Trigger", "TriggerConfig", "TriggerService",
+    "TriggerImage", "replay_triggers",
     "EngineShardPool", "PoolScheduler", "shard_index", "segment_path",
 ]

@@ -45,8 +45,10 @@ from .engine import (
     Run,
 )
 from .errors import Forbidden, InputValidationError, NotFound
-from .journal import Journal
+from .journal import Journal, TriggerImage
+from .queues import QueueService
 from .shard_pool import EngineShardPool
+from .triggers import EventRouter, Trigger, TriggerConfig
 
 
 @dataclass
@@ -85,6 +87,7 @@ class FlowsService:
         journal_path: str | None = None,
         fsync: bool = False,
         journal_latency_s: float = 0.0,
+        queues: QueueService | None = None,
     ):
         self.clock = clock or RealClock()
         self.auth = auth
@@ -103,6 +106,20 @@ class FlowsService:
         )
         self._flows: dict[str, FlowRecord] = {}
         self._lock = threading.RLock()
+        #: shared event fabric (paper §5.4/§5.5): one EventRouter dispatches
+        #: every trigger; trigger records are journaled to the owning shard's
+        #: segment (hash-owned by trigger id, like runs by run id), and the
+        #: router schedules through the pool so VirtualClock dispatch stays
+        #: deterministic at every shard count
+        self.queues = queues
+        self.router: EventRouter | None = None
+        if queues is not None:
+            self.router = EventRouter(
+                queues,
+                clock=self.clock,
+                scheduler=self.engine.scheduler,
+                journal_for=self.engine.journal_for,
+            )
         if auth is not None:
             auth.register_resource_server("flows.repro")
             self.manage_scope = auth.register_scope(
@@ -333,6 +350,100 @@ class FlowsService:
         runs it owns; see :meth:`EngineShardPool.recover`).
         """
         return self.engine.recover(self.flows_by_id(), resume=resume)
+
+    # ------------------------------------------------------------- triggers
+    def _router(self) -> EventRouter:
+        if self.router is None:
+            raise NotFound(
+                "no event fabric: construct FlowsService(queues=QueueService(...))"
+            )
+        return self.router
+
+    def _trigger_invoker(self, flow_id: str):
+        def invoke(action_input: dict, caller: Caller | None) -> str:
+            return self.run_flow(flow_id, action_input, caller=caller).run_id
+
+        return invoke
+
+    def create_trigger(
+        self,
+        queue_id: str,
+        predicate: str,
+        flow_id: str,
+        transform: dict[str, str] | None = None,
+        owner: str = "anonymous",
+        trigger_id: str | None = None,
+        poll_min_s: float = 0.5,
+        poll_max_s: float = 30.0,
+        batch: int = 10,
+    ) -> Trigger:
+        """Bind a queue + predicate to a published flow (paper §5.5).
+
+        The binding is journaled (``trigger_created``) to the owning shard's
+        segment with the durable action ref ``flow:<flow_id>``, so
+        :meth:`recover_triggers` can re-bind the invoker after a restart.
+        """
+        self._record(flow_id)  # raises NotFound for unpublished flows
+        config = TriggerConfig(
+            queue_id=queue_id,
+            predicate=predicate,
+            action_invoker=self._trigger_invoker(flow_id),
+            transform=dict(transform or {}),
+            poll_min_s=poll_min_s,
+            poll_max_s=poll_max_s,
+            batch=batch,
+            action_ref=f"flow:{flow_id}",
+        )
+        return self._router().create_trigger(
+            config, owner=owner, trigger_id=trigger_id
+        )
+
+    def enable_trigger(self, trigger_id: str, caller: Caller | None = None) -> None:
+        self._router().enable(trigger_id, caller=caller)
+
+    def disable_trigger(self, trigger_id: str) -> None:
+        self._router().disable(trigger_id)
+
+    def trigger_status(self, trigger_id: str) -> dict:
+        trig = self._router().get(trigger_id)
+        return {
+            "trigger_id": trig.trigger_id,
+            "queue_id": trig.config.queue_id,
+            "action_ref": trig.config.action_ref,
+            "predicate": trig.config.predicate,
+            "owner": trig.owner,
+            "enabled": trig.enabled,
+            "stats": dict(trig.stats),
+            "recent_results": list(trig.recent_results[-10:]),
+        }
+
+    def recover_triggers(self) -> list[Trigger]:
+        """Restore journaled triggers after a restart (paper §5.5 durably).
+
+        Replays every shard's journal segment (triggers are hash-owned by
+        shards), re-binds each ``flow:<flow_id>`` action ref to
+        :meth:`run_flow`, and re-enables triggers that were enabled at the
+        crash.  Flows must be re-published (same ``flow_id``) first; a
+        trigger whose flow is no longer published is recovered *disabled*.
+        """
+        router = self._router()
+
+        def invoker_for(image: TriggerImage):
+            flow_id = image.action_ref.removeprefix("flow:")
+            return self._trigger_invoker(flow_id)
+
+        def flow_published(image: TriggerImage) -> bool:
+            with self._lock:
+                return image.action_ref.removeprefix("flow:") in self._flows
+
+        # the publication check gates enable (it must not run after: with
+        # real-clock worker threads an enabled trigger can dispatch before a
+        # later disable lands)
+        return router.recover(
+            invoker_for,
+            journals=self.engine.journals,
+            enable_filter=flow_published,
+        )
 
     def _require(
         self,

@@ -174,3 +174,73 @@ def replay(journal: Journal) -> dict[str, RunImage]:
             image = images[run_id] = RunImage(run_id)
         image.apply(rec)
     return images
+
+
+class TriggerImage:
+    """Reconstructed view of one trigger from journal records.
+
+    Triggers share the write-ahead journal with runs: ``trigger_created`` /
+    ``trigger_enabled`` / ``trigger_disabled`` record the lifecycle, and each
+    ``trigger_fired`` records ack-progress — which message ids this trigger
+    has already successfully handled — so crash recovery redelivers *only*
+    the events that had not yet produced an invocation.
+    """
+
+    def __init__(self, trigger_id: str):
+        self.trigger_id = trigger_id
+        self.queue_id: str | None = None
+        self.predicate: str = "True"
+        self.transform: dict = {}
+        self.action_ref: str = ""
+        self.owner: str = "anonymous"
+        self.enabled: bool = False
+        self.poll_min_s: float = 0.5
+        self.poll_max_s: float = 30.0
+        self.batch: int = 10
+        self.stats: dict = {}
+        #: message ids already handled to completion (invoked or discarded)
+        self.resolved_message_ids: set[str] = set()
+        #: the subset of resolved messages whose disposition was "invoked"
+        self.invoked_message_ids: set[str] = set()
+
+    def apply(self, rec: dict) -> None:
+        kind = rec["type"]
+        if kind == "trigger_created":
+            self.queue_id = rec.get("queue_id")
+            self.predicate = rec.get("predicate", "True")
+            self.transform = rec.get("transform", {})
+            self.action_ref = rec.get("action_ref", "")
+            self.owner = rec.get("owner", "anonymous")
+            self.poll_min_s = rec.get("poll_min_s", 0.5)
+            self.poll_max_s = rec.get("poll_max_s", 30.0)
+            self.batch = rec.get("batch", 10)
+        elif kind == "trigger_enabled":
+            self.enabled = True
+        elif kind == "trigger_disabled":
+            self.enabled = False
+        elif kind == "trigger_resolved":
+            if "stats" in rec:
+                self.stats = rec["stats"]
+            mid = rec.get("message_id")
+            if mid is not None:
+                self.resolved_message_ids.add(mid)
+                if rec.get("disposition") == "invoked":
+                    self.invoked_message_ids.add(mid)
+
+
+def replay_triggers(journal: Journal) -> dict[str, TriggerImage]:
+    """Group journal records into per-trigger images (ordered by appearance).
+
+    Run records carry ``run_id`` and trigger records carry ``trigger_id``, so
+    the two replays are independent views over one shared segment.
+    """
+    images: dict[str, TriggerImage] = {}
+    for rec in journal.records():
+        trigger_id = rec.get("trigger_id")
+        if trigger_id is None or "run_id" in rec:
+            continue
+        image = images.get(trigger_id)
+        if image is None:
+            image = images[trigger_id] = TriggerImage(trigger_id)
+        image.apply(rec)
+    return images

@@ -9,7 +9,14 @@ Reliable, secure delivery of messages from senders to receivers with:
 * **deferred delivery** — a send may specify a delay (SQS-style), which is
   how the paper's action queue implements polling backoff;
 * **role-based access** — Administrator / Sender / Receiver roles per queue;
-* optional JSONL **persistence** so queues survive restarts.
+* optional JSONL **persistence** so queues survive restarts;
+* **push subscriptions** — a subscriber callback is notified on every
+  ``send`` with the message's delivery time, so event-driven consumers
+  (:class:`~repro.core.triggers.EventRouter`) wake immediately instead of
+  waiting out a poll interval.  Notifications are best-effort wake-ups, not
+  deliveries: consumers still ``receive``/``ack`` for the at-least-once
+  guarantee, and notifications are *not* persisted — after a restart the
+  subscriber's recovery sweep drains the backlog.
 """
 
 from __future__ import annotations
@@ -19,7 +26,7 @@ import os
 import secrets
 import threading
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Callable
 
 from .auth import Caller, principal_matches
 from .clock import Clock, RealClock
@@ -69,6 +76,21 @@ class QueueService:
         self.auth = auth
         self._queues: dict[str, Queue] = {}
         self._lock = threading.RLock()
+        #: counters get their own lock so hot paths (send/receive/ack) do not
+        #: contend on the service lock across unrelated queues
+        self._stats_lock = threading.Lock()
+        #: per-queue push subscribers: queue_id -> {sub_id: callback}
+        self._subscribers: dict[str, dict[str, Callable[[str, float], None]]] = {}
+        #: service-wide operation counters (receive-call pressure is what the
+        #: event-fanout benchmark compares between polling and push routing)
+        self.stats = {
+            "sends": 0,
+            "receives": 0,
+            "empty_receives": 0,
+            "messages_delivered": 0,
+            "acks": 0,
+            "notifies": 0,
+        }
         self.persist_path = persist_path
         if persist_path and os.path.exists(persist_path):
             self._load()
@@ -143,7 +165,35 @@ class QueueService:
         with q.lock:
             q.messages.append(msg)
         self._persist()
+        with self._lock:
+            subscribers = list(self._subscribers.get(queue_id, {}).values())
+        with self._stats_lock:
+            self.stats["sends"] += 1
+            self.stats["notifies"] += len(subscribers)
+        # notify outside all locks: callbacks may call back into the service
+        for callback in subscribers:
+            callback(queue_id, msg.deliver_after)
         return msg.message_id
+
+    # -- push subscriptions -------------------------------------------------------
+    def subscribe(
+        self, queue_id: str, callback: Callable[[str, float], None]
+    ) -> str:
+        """Register ``callback(queue_id, deliver_at)`` to fire on every send.
+
+        The callback is a wake-up signal (push-first delivery): it must not
+        assume the message is still present — it should ``receive`` and
+        ``ack`` as usual.  Returns a subscription id for :meth:`unsubscribe`.
+        """
+        self._queue(queue_id)  # raises NotFound for unknown queues
+        sub_id = "sub-" + secrets.token_hex(8)
+        with self._lock:
+            self._subscribers.setdefault(queue_id, {})[sub_id] = callback
+        return sub_id
+
+    def unsubscribe(self, queue_id: str, sub_id: str) -> None:
+        with self._lock:
+            self._subscribers.get(queue_id, {}).pop(sub_id, None)
 
     def receive(
         self,
@@ -184,8 +234,19 @@ class QueueService:
                         "body": msg.body,
                         "attributes": msg.attributes,
                         "receive_count": msg.receive_count,
+                        "sent_at": msg.sent_at,
+                        "deliver_after": msg.deliver_after,
+                        # when an unacknowledged receipt expires and the
+                        # message becomes redeliverable — consumers that leave
+                        # a message unacked schedule their retry at this time
+                        "invisible_until": msg.invisible_until,
                     }
                 )
+        with self._stats_lock:
+            self.stats["receives"] += 1
+            self.stats["messages_delivered"] += len(out)
+            if not out:
+                self.stats["empty_receives"] += 1
         if out:
             self._persist()
         return out
@@ -204,6 +265,8 @@ class QueueService:
                     msg.acked = True
                     self._gc(q)
                     self._persist()
+                    with self._stats_lock:
+                        self.stats["acks"] += 1
                     return
         raise QueueInvariantError(f"unknown or already-acked receipt {receipt!r}")
 
@@ -211,6 +274,55 @@ class QueueService:
         q = self._queue(queue_id)
         with q.lock:
             return sum(1 for m in q.messages if not m.acked)
+
+    def can_receive(self, queue_id: str, caller: Caller | None) -> bool:
+        """Whether ``caller`` holds the Receiver role (no message consumed).
+
+        Shared consumers (the EventRouter) use this to authorize each
+        subscriber before evaluating it against a batch received with
+        another subscriber's wallet.
+        """
+        q = self._queue(queue_id)
+        try:
+            self._require_role(q, q.receivers, caller, "Receiver")
+        except Forbidden:
+            return False
+        return True
+
+    def unacked_message_ids(self, queue_id: str) -> set[str]:
+        """Ids of every message not yet acknowledged (in flight or waiting)."""
+        q = self._queue(queue_id)
+        with q.lock:
+            return {m.message_id for m in q.messages if not m.acked}
+
+    def next_wake_at(self, queue_id: str) -> float | None:
+        """Earliest time the next ``receive`` could return a message.
+
+        ``None`` when the queue holds no unacked messages.  Respects the
+        in-order guarantee: a deferred message gates everything behind it
+        (its delivery time is the wake time), while an invisible message is
+        skipped the way ``receive`` skips it (its visibility deadline only
+        competes with later messages' own times).  Event-driven consumers
+        use this after an empty ``receive`` to schedule exactly one wake-up
+        instead of polling blind.
+        """
+        q = self._queue(queue_id)
+        now = self.clock.now()
+        best: float | None = None
+        with q.lock:
+            for m in q.messages:
+                if m.acked:
+                    continue
+                if m.deliver_after > now:
+                    # FIFO: later messages must wait for this one anyway
+                    t = m.deliver_after
+                    return t if best is None else min(best, t)
+                if m.invisible_until > now:
+                    t = m.invisible_until
+                    best = t if best is None else min(best, t)
+                    continue
+                return now  # receivable immediately
+        return best
 
     # -- internals ---------------------------------------------------------------
     def _gc(self, q: Queue) -> None:

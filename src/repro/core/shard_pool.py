@@ -211,6 +211,21 @@ class EngineShardPool:
         """The home shard that owns (or would own) ``run_id``."""
         return self.engines[shard_index(run_id, self.num_shards)]
 
+    def journal_for(self, owner_id: str) -> Journal:
+        """The journal segment owned by ``owner_id``'s home shard.
+
+        Durable state that is not a run — trigger lifecycle and ack-progress
+        records from the :class:`~repro.core.triggers.EventRouter` — is
+        hash-owned by shards exactly like runs: records for ``owner_id`` land
+        in ``shard_index(owner_id, N)``'s segment and are recovered with it.
+        """
+        return self.engines[shard_index(owner_id, self.num_shards)].journal
+
+    @property
+    def journals(self) -> list[Journal]:
+        """Every shard's journal segment, in shard order."""
+        return [engine.journal for engine in self.engines]
+
     def _owner(self, run_id: str) -> FlowEngine:
         """Resolve the engine actually holding ``run_id``.
 

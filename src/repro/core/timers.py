@@ -7,6 +7,11 @@ timers, posts invocations, computes the next execution, and re-inserts while
 not expired.  Timer state is persisted so that "should the service be down at
 the time of a scheduled timer, it will recover any missed timers and schedule
 the required actions."
+
+A timer can also feed the **event fabric** instead of invoking directly:
+``create_timer(..., queue_id=...)`` sends the timer body to a queue on each
+firing, where an :class:`~repro.core.triggers.EventRouter` trigger filters
+and fans it out — the paper's timer→queue→trigger→flow composition.
 """
 
 from __future__ import annotations
@@ -39,6 +44,9 @@ class Timer:
     missed_fired: int = 0
     next_due: float = 0.0
     last_results: list[Any] = field(default_factory=list)
+    #: when set, each firing sends ``body`` to this queue (event fabric)
+    #: instead of calling the service invoker directly
+    queue_id: str | None = None
 
 
 class TimerService:
@@ -49,9 +57,16 @@ class TimerService:
         scheduler: Scheduler | None = None,
         persist_path: str | None = None,
         catch_up_missed: bool = True,
+        queues=None,
     ):
-        """``invoker(body, caller) -> run id`` starts the timer's flow/action."""
+        """``invoker(body, caller) -> run id`` starts the timer's flow/action.
+
+        ``queues`` (a :class:`~repro.core.queues.QueueService`) enables the
+        fabric path: timers created with ``queue_id=...`` send their body as
+        a queue message instead of invoking directly.
+        """
         self.invoker = invoker
+        self.queues = queues
         self.clock = clock or RealClock()
         self.scheduler = scheduler or Scheduler(self.clock)
         self.persist_path = persist_path
@@ -73,7 +88,12 @@ class TimerService:
         end: float | None = None,
         owner: str = "anonymous",
         caller: Caller | None = None,
+        queue_id: str | None = None,
     ) -> Timer:
+        if queue_id is not None and self.queues is None:
+            raise ValueError(
+                "queue_id requires TimerService(queues=QueueService(...))"
+            )
         now = self.clock.now()
         timer = Timer(
             timer_id="timer-" + secrets.token_hex(8),
@@ -84,6 +104,7 @@ class TimerService:
             count=count,
             end=end,
             owner=owner,
+            queue_id=queue_id,
         )
         timer.next_due = timer.start
         with self._lock:
@@ -149,8 +170,16 @@ class TimerService:
             self._persist()
             return
         try:
-            run_id = self.invoker(dict(timer.body), caller)
-            timer.last_results.append({"run_id": run_id, "t": now})
+            if timer.queue_id is not None:
+                # event-fabric path: the firing is a queue message; triggers
+                # downstream filter, transform, and invoke
+                message_id = self.queues.send(
+                    timer.queue_id, dict(timer.body), caller=caller
+                )
+                timer.last_results.append({"message_id": message_id, "t": now})
+            else:
+                run_id = self.invoker(dict(timer.body), caller)
+                timer.last_results.append({"run_id": run_id, "t": now})
             if len(timer.last_results) > 20:
                 timer.last_results.pop(0)
         except Exception as e:
@@ -187,6 +216,7 @@ class TimerService:
                     "active": t.active,
                     "fired": t.fired,
                     "next_due": t.next_due,
+                    "queue_id": t.queue_id,
                 }
                 for t in self._timers.values()
             ]
@@ -198,6 +228,11 @@ class TimerService:
     def _load(self) -> None:
         with open(self.persist_path) as fh:
             doc = json.load(fh)
+        if self.queues is None and any(td.get("queue_id") for td in doc):
+            raise ValueError(
+                "persisted timers use queue_id (event-fabric path); "
+                "construct TimerService(queues=QueueService(...)) to restore"
+            )
         for td in doc:
             timer = Timer(
                 timer_id=td["timer_id"],
@@ -211,6 +246,7 @@ class TimerService:
                 active=td["active"],
                 fired=td["fired"],
                 next_due=td["next_due"],
+                queue_id=td.get("queue_id"),
             )
             self._timers[timer.timer_id] = timer
             self._callers[timer.timer_id] = None

@@ -1,4 +1,5 @@
-"""Docs stay truthful: every `repro.*` name resolves, every asl.md flow runs."""
+"""Docs stay truthful: every `repro.*` name resolves, every asl.md flow
+runs, and every events.md Python example executes."""
 
 import json
 import os
@@ -13,7 +14,7 @@ from repro.core.engine import RUN_ACTIVE, FlowEngine
 from repro.core.providers import EchoProvider, SleepProvider
 
 DOCS = os.path.join(os.path.dirname(__file__), "..", "..", "docs")
-DOC_FILES = ["ARCHITECTURE.md", "providers.md", "asl.md"]
+DOC_FILES = ["ARCHITECTURE.md", "providers.md", "asl.md", "events.md"]
 
 # dotted references like `repro.core.engine.FlowEngine` (module or symbol)
 _REF = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
@@ -64,6 +65,18 @@ def test_asl_examples_are_valid_json_and_parse():
     for block in _asl_examples():
         definition = json.loads(block)
         asl.parse(definition)  # raises FlowValidationError if stale
+
+
+def test_events_examples_execute():
+    """Every ```python block in events.md runs (self-contained examples)."""
+    blocks = re.findall(r"```python\n(.*?)```", _read("events.md"), flags=re.S)
+    assert len(blocks) >= 5  # queues, router, recovery, flows, timers
+    for i, block in enumerate(blocks):
+        namespace: dict = {}
+        try:
+            exec(compile(block, f"events.md[block {i}]", "exec"), namespace)
+        except Exception as e:  # pragma: no cover - failure formatting
+            pytest.fail(f"events.md python block {i} failed: {e!r}")
 
 
 def test_asl_examples_run_to_completion():

@@ -1,0 +1,68 @@
+"""Pin the seed xLSTM numerics bug at its minimal repro (see ROADMAP.md).
+
+``test_train_step_decreases_loss[xlstm-1.3b]`` gets non-finite gradients in
+the mLSTM block params (embed/conv/norm/up/w_if).  ``mlstm_chunkwise`` grads
+are finite in isolation with random inputs; the NaN appears only through the
+``apply_mlstm_block`` path when fed the model's *actual* (bfloat16) embedding
+output.  This strict xfail keeps the bug visible: the future numerics PR that
+fixes it will XPASS here and must flip the test to a plain assertion.
+"""
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+import pytest
+
+from repro import configs
+from repro.models import transformer as tfm
+from repro.models import xlstm
+from repro.models.model import Model
+
+XFAIL_REASON = (
+    "seed bug (ROADMAP): non-finite mLSTM grads through apply_mlstm_block "
+    "on the model's embedded-token inputs — pending a numerics PR"
+)
+
+
+def _minimal_repro():
+    """Smallest known reproduction: one mLSTM block, real embed output."""
+    cfg = configs.get("xlstm-1.3b", smoke=True)
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    tokens = jax.random.randint(ks[0], (2, 32), 0, cfg.vocab_size)
+    x0 = tfm.embed_tokens(params, cfg, tokens)
+    # a single block's params (layer-stacked arrays -> block [0, 0])
+    block = jtu.tree_map(lambda a: a[0, 0], params["super"]["mlstm"])
+
+    def loss_fn(p):
+        y, _ = xlstm.apply_mlstm_block(p, cfg, x0)
+        return jnp.mean(jnp.square(y))
+
+    return jax.grad(loss_fn)(block)
+
+
+@pytest.mark.xfail(strict=True, reason=XFAIL_REASON)
+def test_mlstm_block_grads_finite_minimal_repro():
+    grads = _minimal_repro()
+    nonfinite = [
+        "/".join(str(getattr(p, "key", p)) for p in path)
+        for path, g in jtu.tree_flatten_with_path(grads)[0]
+        if not bool(jnp.all(jnp.isfinite(g)))
+    ]
+    assert not nonfinite, f"non-finite grads in {nonfinite}"
+
+
+def test_mlstm_block_forward_is_finite():
+    """The forward pass is fine — only the backward blows up.  This pass
+    keeps the repro honest: if the forward ever goes non-finite too, the
+    bug has changed shape and the xfail above needs re-triage."""
+    cfg = configs.get("xlstm-1.3b", smoke=True)
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    tokens = jax.random.randint(ks[0], (2, 32), 0, cfg.vocab_size)
+    x0 = tfm.embed_tokens(params, cfg, tokens)
+    block = jtu.tree_map(lambda a: a[0, 0], params["super"]["mlstm"])
+    y, _ = xlstm.apply_mlstm_block(block, cfg, x0)
+    assert bool(jnp.all(jnp.isfinite(y)))
