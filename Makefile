@@ -1,18 +1,56 @@
 # Developer entry points.  `make check` is the tier-1 verify recipe.
+#
+# REPRO_PYTHONPATH is the ONE place the repo's import path is defined:
+# `src` for the `repro` package, `.` for `benchmarks.*` helpers.  Every
+# target, scripts/check.sh, and CI consume it (scripts default it to the
+# same value for direct invocation), so a benchmark cannot import cleanly
+# under `make` yet break only in CI.
+export REPRO_PYTHONPATH := src:.
 
-.PHONY: check bench bench-quick shards fanout
+# extra args for benchmark targets, e.g. `make fanout ARGS=--quick`
+ARGS ?=
+
+.PHONY: check bench bench-quick bench-nightly shards fanout recovery \
+        durability xfail-guard regression-gate baseline
 
 check:
 	./scripts/check.sh
 
 bench:
-	PYTHONPATH=src python -m benchmarks.run
+	PYTHONPATH=$(REPRO_PYTHONPATH) python -m benchmarks.run $(ARGS)
 
 bench-quick:
-	PYTHONPATH=src python -m benchmarks.run --quick
+	PYTHONPATH=$(REPRO_PYTHONPATH) python -m benchmarks.run --quick $(ARGS)
+
+# the nightly sweep: quick automation-core benchmarks, JSON results under
+# benchmarks/results/, gated against the checked-in baseline
+bench-nightly:
+	PYTHONPATH=$(REPRO_PYTHONPATH) python -m benchmarks.run --quick \
+	  --only shards,fanout,recovery $(ARGS)
 
 shards:
-	PYTHONPATH=src:. python benchmarks/shard_scaling.py
+	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/shard_scaling.py $(ARGS)
 
 fanout:
-	PYTHONPATH=src:. python benchmarks/fig_event_fanout.py
+	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/fig_event_fanout.py $(ARGS)
+
+recovery:
+	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/fig_recovery.py $(ARGS)
+
+# crash-point / fault-injection durability suite (CI runs it as its own
+# job with REPRO_TEST_SHARDS=4 and a dedicated timeout)
+durability:
+	PYTHONPATH=$(REPRO_PYTHONPATH) python -m pytest -q \
+	  tests/core/test_group_commit.py tests/core/test_compaction.py \
+	  tests/core/test_recovery.py tests/core/test_shard_pool.py \
+	  tests/core/test_queue_properties.py tests/core/test_event_router.py
+
+xfail-guard:
+	./scripts/check_xfails.sh
+
+regression-gate:
+	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/check_regression.py
+
+baseline:
+	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/check_regression.py \
+	  --write-baseline

@@ -1,0 +1,156 @@
+"""Nightly benchmark regression gate.
+
+Reads the JSON results the quick sweep just wrote under
+``benchmarks/results/`` (``make bench-nightly``: shard_scaling,
+fig_event_fanout, fig_recovery), distills them into a small set of named
+metrics, and compares each against the checked-in
+``benchmarks/results/baseline.json``:
+
+* **higher-is-better** metrics (throughput, speedups, receive-call
+  reduction) fail if current < baseline x (1 - tolerance);
+* **lower-is-better** metrics (compacted recovery time) fail if
+  current > baseline x (1 + tolerance).
+
+Default tolerance is 20% (the nightly workflow's gate).  Refresh the
+baseline deliberately — after a PR that legitimately moves a metric —
+with ``make baseline`` (runs this script with ``--write-baseline``) and
+commit the diff; the baseline file records which machine class produced
+it, since absolute throughputs are hardware-dependent.
+
+    PYTHONPATH=src:. python benchmarks/check_regression.py [--tolerance 0.2]
+    PYTHONPATH=src:. python benchmarks/check_regression.py --write-baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+BASELINE_PATH = os.path.join(RESULTS_DIR, "baseline.json")
+
+
+def _load(name: str):
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    try:
+        with open(path, encoding="utf-8") as fh:
+            return json.load(fh)
+    except FileNotFoundError:
+        return None
+
+
+def collect_metrics() -> dict[str, dict]:
+    """{name: {"value": float, "higher_is_better": bool}} from results/."""
+    metrics: dict[str, dict] = {}
+
+    rows = _load("shard_scaling") or []
+    for row in rows:
+        if "speedup_vs_1" in row:  # the shard-count sweep
+            metrics[f"shard_scaling/shards={row['shards']}/runs_per_s"] = {
+                "value": row["runs_per_s"], "higher_is_better": True,
+            }
+        if "speedup_vs_serialized" in row and row.get("group_commit"):
+            metrics["shard_scaling/group_commit_speedup"] = {
+                "value": row["speedup_vs_serialized"],
+                "higher_is_better": True,
+            }
+
+    fan = _load("fig_event_fanout") or []
+    routers = [r for r in fan
+               if r.get("design") == "router" and "receive_reduction" in r]
+    if routers:
+        biggest = max(routers, key=lambda r: r["triggers"])
+        metrics["fig_event_fanout/receive_reduction"] = {
+            "value": biggest["receive_reduction"], "higher_is_better": True,
+        }
+        metrics["fig_event_fanout/events_per_s"] = {
+            "value": biggest["events_per_s"], "higher_is_better": True,
+        }
+
+    rec = _load("fig_recovery") or []
+    if rec:
+        longest = max(rec, key=lambda r: r["records_before"])
+        metrics["fig_recovery/compacted_recover_s"] = {
+            "value": longest["recover_compacted_s"], "higher_is_better": False,
+        }
+        metrics["fig_recovery/compaction_speedup"] = {
+            "value": longest["speedup"], "higher_is_better": True,
+        }
+    return metrics
+
+
+def write_baseline(metrics: dict[str, dict]) -> None:
+    doc = {
+        "_comment": (
+            "Nightly benchmark gate baseline — refresh deliberately with "
+            "`make baseline` after a PR that legitimately moves a metric."
+        ),
+        "machine": platform.platform(),
+        "metrics": metrics,
+    }
+    with open(BASELINE_PATH, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"baseline written: {BASELINE_PATH} ({len(metrics)} metrics)")
+
+
+def check(metrics: dict[str, dict], tolerance: float) -> int:
+    try:
+        with open(BASELINE_PATH, encoding="utf-8") as fh:
+            baseline = json.load(fh)["metrics"]
+    except FileNotFoundError:
+        print(f"FAIL: no baseline at {BASELINE_PATH}; run `make baseline`")
+        return 1
+    failures = 0
+    for name, spec in sorted(baseline.items()):
+        base = spec["value"]
+        higher = spec.get("higher_is_better", True)
+        current = metrics.get(name)
+        if current is None:
+            print(f"FAIL {name}: metric missing from current results "
+                  f"(benchmark did not run?)")
+            failures += 1
+            continue
+        value = current["value"]
+        if higher:
+            ok = value >= base * (1.0 - tolerance)
+            direction = ">="
+            bound = base * (1.0 - tolerance)
+        else:
+            ok = value <= base * (1.0 + tolerance)
+            direction = "<="
+            bound = base * (1.0 + tolerance)
+        status = "ok  " if ok else "FAIL"
+        print(f"{status} {name}: {value:.4g} (need {direction} {bound:.4g}, "
+              f"baseline {base:.4g})")
+        if not ok:
+            failures += 1
+    for name in sorted(set(metrics) - set(baseline)):
+        print(f"note {name}: not in baseline (run `make baseline` to adopt)")
+    if failures:
+        print(f"{failures} metric(s) regressed beyond {tolerance:.0%}")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--tolerance", type=float, default=0.20,
+                        help="allowed relative regression (default 0.20)")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="adopt the current results as the new baseline")
+    args = parser.parse_args()
+    metrics = collect_metrics()
+    if not metrics:
+        print("FAIL: no benchmark results found under benchmarks/results/")
+        return 1
+    if args.write_baseline:
+        write_baseline(metrics)
+        return 0
+    return check(metrics, args.tolerance)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -47,7 +47,7 @@ def virtual_stack(polling=None, auth=None, shards=1):
 
 
 def real_stack(polling=None, max_workers=8, shards=1, journal_path=None,
-               fsync=False, journal_latency_s=0.0):
+               fsync=False, journal_latency_s=0.0, group_commit=True):
     from repro.core.actions import ActionRegistry
     from repro.core.clock import RealClock
     from repro.core.flows_service import FlowsService
@@ -61,7 +61,8 @@ def real_stack(polling=None, max_workers=8, shards=1, journal_path=None,
     flows = FlowsService(registry, clock=clock, polling=polling,
                          max_workers=max_workers, shards=shards,
                          journal_path=journal_path, fsync=fsync,
-                         journal_latency_s=journal_latency_s)
+                         journal_latency_s=journal_latency_s,
+                         group_commit=group_commit)
     sleep.scheduler = flows.engine.scheduler
     return flows, clock, registry
 

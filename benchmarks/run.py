@@ -14,7 +14,7 @@ import time
 import traceback
 
 BENCHES = ["fig7", "fig8", "fig9", "table1", "fig10", "shards", "fanout",
-           "soak", "roofline"]
+           "recovery", "soak", "roofline"]
 
 
 def _run_roofline() -> list[str]:
@@ -68,6 +68,9 @@ def main() -> int:
     if "fanout" in selected:
         from benchmarks import fig_event_fanout
         runners["fanout"] = fig_event_fanout.main
+    if "recovery" in selected:
+        from benchmarks import fig_recovery
+        runners["recovery"] = fig_recovery.main
     if "soak" in selected:
         from benchmarks import soak
         runners["soak"] = soak.main

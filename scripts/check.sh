@@ -1,5 +1,11 @@
 #!/usr/bin/env sh
 # Tier-1 verify: the one-invocation recipe (see ROADMAP.md).
+#
+# The import path comes from ONE place: REPRO_PYTHONPATH, exported by the
+# Makefile (`src:.` — src for `repro`, `.` for `benchmarks.*`) and
+# defaulted here to the same value for direct invocation, so tests and
+# benchmarks see identical paths locally and in CI.
 set -eu
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+PYTHONPATH="${REPRO_PYTHONPATH:-src:.}${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m pytest -x -q "$@"

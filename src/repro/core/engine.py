@@ -42,7 +42,7 @@ from .errors import (
     StateMachineError,
     error_matches,
 )
-from .journal import Journal, RunImage, replay
+from .journal import Journal, RunImage, replay_segment
 
 RUN_ACTIVE = "ACTIVE"
 RUN_SUCCEEDED = "SUCCEEDED"
@@ -867,6 +867,18 @@ class FlowEngine:
                 return caller
         return run.caller
 
+    # -- durability maintenance -------------------------------------------------
+    def compact(self) -> dict:
+        """Checkpoint-compact this shard's journal segment.
+
+        Snapshots the engine's service counters into the checkpoint record
+        alongside the live run/trigger images the journal replays for
+        itself; see :meth:`repro.core.journal.Journal.compact`.
+        """
+        with self._lock:
+            counters = dict(self.stats)
+        return self.journal.compact(counters=counters)
+
     # -- recovery ---------------------------------------------------------------
     def recover(
         self,
@@ -878,9 +890,21 @@ class FlowEngine:
         ``flows_by_id`` maps flow ids to parsed definitions (the Flows
         service persists definitions separately from run state, as in the
         paper where ASF holds the deployed state machine).
+
+        Replay is checkpoint-aware: a compacted segment yields one
+        checkpoint image set plus the post-checkpoint tail instead of the
+        full history, and the checkpoint's service-counter snapshot is
+        folded back into ``stats`` (advisory — tail activity between the
+        checkpoint and the crash is not re-counted).
         """
+        view = replay_segment(self.journal)  # one pass: images + counters
+        if view.counters:
+            with self._lock:
+                for key, value in view.counters.items():
+                    if isinstance(value, (int, float)):
+                        self.stats[key] = max(self.stats.get(key, 0), value)
         resumed: list[Run] = []
-        for image in replay(self.journal).values():
+        for image in view.runs.values():
             if image.status != RUN_ACTIVE or image.run_id in self.runs:
                 continue
             flow = flows_by_id.get(image.flow_id)

@@ -87,6 +87,8 @@ class FlowsService:
         journal_path: str | None = None,
         fsync: bool = False,
         journal_latency_s: float = 0.0,
+        group_commit: bool = True,
+        compact_every: int | None = None,
         queues: QueueService | None = None,
     ):
         self.clock = clock or RealClock()
@@ -101,6 +103,8 @@ class FlowsService:
             journal_path=journal_path,
             fsync=fsync,
             journal_latency_s=journal_latency_s,
+            group_commit=group_commit,
+            compact_every=compact_every,
             polling=polling,
             max_workers=max_workers,
         )
@@ -350,6 +354,18 @@ class FlowsService:
         runs it owns; see :meth:`EngineShardPool.recover`).
         """
         return self.engine.recover(self.flows_by_id(), resume=resume)
+
+    def compact(self) -> list[dict]:
+        """Checkpoint-compact every shard's journal segment on demand.
+
+        Collapses each segment's append-only history into one checkpoint
+        record (live runs, triggers + ack-progress, service counters) so
+        the next recovery replays O(live state) instead of the full
+        history.  Construct the service with ``compact_every=N`` for
+        automatic compaction once a segment's post-checkpoint tail exceeds
+        N records.  Returns one summary dict per shard.
+        """
+        return self.engine.compact()
 
     # ------------------------------------------------------------- triggers
     def _router(self) -> EventRouter:

@@ -13,6 +13,21 @@ action_started" and "provider run()" resolves to at-least-once dispatch with
 exactly-once effect for providers that survived (and clean re-execution for
 in-process providers that did not — the paper's model, where re-running an
 idempotent action is the recovery path).
+
+Two mechanisms keep durability cheap as flows age (see docs/durability.md):
+
+* **Group commit** — concurrent ``append()`` callers enqueue records and
+  block on a commit ticket; one caller becomes the batch *leader* and
+  performs a single write+flush+fsync for everything queued, so N concurrent
+  transitions pay ~1 durability round trip instead of N serialized ones.
+  The write-ahead invariant is untouched: ``append()`` returns only after
+  the caller's record is durable.
+* **Checkpoint compaction** — ``Journal.compact()`` collapses the full
+  append-only history into one ``checkpoint`` record (live run images,
+  trigger images + ack-progress, service counters) written to a fresh
+  segment *generation* and atomically swapped over the old file, so
+  ``recover()`` replays one checkpoint plus the post-checkpoint tail:
+  recovery cost is O(live state), not O(history).
 """
 
 from __future__ import annotations
@@ -22,7 +37,7 @@ import json
 import os
 import threading
 import time
-from typing import Any, Iterator
+from typing import Any, Callable, Iterator
 
 
 def segment_path(base_path: str, index: int, num_shards: int) -> str:
@@ -39,16 +54,178 @@ def segment_path(base_path: str, index: int, num_shards: int) -> str:
     return f"{root}.shard{index}-of{num_shards}{ext}"
 
 
+class SimulatedCrash(RuntimeError):
+    """Raised by a fault hook to simulate the process dying at a kill point.
+
+    Crash-point injection tests install a :class:`Journal` ``fault_hook``
+    that raises this between batch write, flush, and fsync; the journal
+    poisons itself (every later ``append`` raises :class:`JournalCrashed`,
+    like a dead process), and the test recovers from the on-disk segment
+    with a fresh journal.
+    """
+
+
+class JournalCrashed(RuntimeError):
+    """The journal's committer died; no further appends are possible."""
+
+
+class GroupCommitter:
+    """Leader-based group commit: coalesce concurrent durability requests.
+
+    Callers ``submit()`` an item (getting a monotonically increasing ticket)
+    and then ``commit(ticket)``.  The first committer to arrive becomes the
+    *leader*: it drains everything submitted so far and hands the batch to
+    ``flush`` in one call; every waiter whose ticket the batch covers is
+    released when the flush returns.  Waiters that arrive while a flush is
+    in flight queue up for the next batch — under concurrency the flush cost
+    (fsync, network RTT, snapshot write) is amortized across all of them,
+    while a lone caller pays exactly one flush with no added latency.
+
+    ``poison_on_error=True`` (write-ahead-log semantics): a flush failure is
+    fatal — dropping a batch while later batches commit would tear a hole in
+    the log's prefix, so every subsequent commit raises
+    :class:`JournalCrashed`.  ``poison_on_error=False`` (snapshot
+    semantics, used by :class:`~repro.core.queues.QueueService`
+    persistence): the failed batch's waiters see the error, later commits
+    retry fresh — safe because each flush rewrites the full snapshot.
+    """
+
+    def __init__(
+        self,
+        flush: Callable[[list[Any]], None],
+        poison_on_error: bool = True,
+    ):
+        self._flush = flush
+        self._poison_on_error = poison_on_error
+        self._cv = threading.Condition()
+        self._pending: list[Any] = []
+        self._next_ticket = 0
+        self._durable = -1  # highest ticket whose batch has been flushed
+        self._leader_active = False
+        self._poison: BaseException | None = None
+        # non-poisoning mode: tickets <= _failed_hi (and > _durable) failed
+        self._failed_hi = -1
+        self._failed_exc: BaseException | None = None
+        #: flush calls performed (vs tickets issued = amortization ratio)
+        self.flushes = 0
+
+    def submit(self, item: Any) -> int:
+        with self._cv:
+            if self._poison is not None:
+                raise JournalCrashed("committer is poisoned") from self._poison
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._pending.append(item)
+            return ticket
+
+    def commit(self, ticket: int) -> None:
+        """Block until the batch containing ``ticket`` is flushed."""
+        while True:
+            with self._cv:
+                if self._poison is not None:
+                    raise JournalCrashed(
+                        "committer is poisoned"
+                    ) from self._poison
+                if self._durable >= ticket:
+                    return
+                if ticket <= self._failed_hi:
+                    raise RuntimeError(
+                        "group commit flush failed for this batch"
+                    ) from self._failed_exc
+                if self._leader_active:
+                    # a leader is flushing (our ticket may be in its batch,
+                    # or we queue for the next); wait and re-check
+                    self._cv.wait()
+                    continue
+                self._leader_active = True
+                batch = self._pending
+                self._pending = []
+                hi = self._next_ticket - 1
+            try:
+                if batch:
+                    self._flush(batch)
+            except BaseException as exc:
+                with self._cv:
+                    if self._poison_on_error:
+                        self._poison = exc
+                    else:
+                        self._failed_hi = hi
+                        self._failed_exc = exc
+                    self._leader_active = False
+                    self._cv.notify_all()
+                raise
+            with self._cv:
+                self.flushes += 1
+                self._durable = hi
+                self._leader_active = False
+                self._cv.notify_all()
+
+    def append_and_commit(self, item: Any) -> None:
+        self.commit(self.submit(item))
+
+    def run_exclusive(self, fn: Callable[[list[Any]], None]) -> None:
+        """Run ``fn(pending_batch)`` with the leader slot held.
+
+        Used for maintenance that must not race a flush (checkpoint
+        compaction swaps the underlying file).  ``fn`` receives everything
+        submitted-but-unflushed and is responsible for making it durable;
+        when it returns, those tickets are marked durable.
+
+        Unlike a flush failure — which tears a hole in the log and poisons
+        the committer — a failed ``fn`` must leave the underlying log
+        intact (compaction guarantees this: a checkpoint that fails to
+        write never replaces the old segment), so the error propagates to
+        the drained batch's waiters (conservative: their records may in
+        fact be durable, which is replay-safe) and later commits proceed.
+        """
+        while True:
+            with self._cv:
+                if self._poison is not None:
+                    raise JournalCrashed(
+                        "committer is poisoned"
+                    ) from self._poison
+                if self._leader_active:
+                    self._cv.wait()
+                    continue
+                self._leader_active = True
+                batch = self._pending
+                self._pending = []
+                hi = self._next_ticket - 1
+            try:
+                fn(batch)
+            except BaseException as exc:
+                with self._cv:
+                    self._failed_hi = hi
+                    self._failed_exc = exc
+                    self._leader_active = False
+                    self._cv.notify_all()
+                raise
+            with self._cv:
+                self._durable = hi
+                self._leader_active = False
+                self._cv.notify_all()
+            return
+
+
 class Journal:
     """Append-only JSONL journal.  ``path=None`` keeps records in memory.
 
     ``latency_s`` simulates the durability round trip the paper's engine
     pays on every transition (Step Functions persists execution state and
-    SQS persists in-flight work across a network hop).  The sleep is taken
-    *while holding the journal lock*: write-ahead means a transition may not
-    proceed until its record is durable, and a single WAL stream admits one
-    outstanding write — which is exactly the serialization that per-shard
-    journal segments remove (see benchmarks/shard_scaling.py).
+    SQS persists in-flight work across a network hop).  Under group commit
+    the round trip is paid once per *batch*: concurrent appenders share one
+    flush, which is exactly the amortization ``benchmarks/shard_scaling.py``
+    measures on its group-commit axis.  ``group_commit=False`` restores the
+    old serialized write+flush+fsync per append under one lock (kept as the
+    benchmark baseline).
+
+    ``fault_hook(phase, batch)`` — when set, called at each kill point of a
+    batch commit (``"pre-write"``, ``"post-write"``, ``"post-flush"``,
+    ``"post-fsync"``); raising :class:`SimulatedCrash` from the hook
+    poisons the journal, simulating a crash at that boundary.
+
+    ``compact_every=N`` auto-compacts once more than ``N`` records have
+    accumulated since the last checkpoint (see :meth:`compact`).
     """
 
     def __init__(
@@ -56,48 +233,273 @@ class Journal:
         path: str | None = None,
         fsync: bool = False,
         latency_s: float = 0.0,
+        group_commit: bool = True,
+        fault_hook: Callable[[str, list[str]], None] | None = None,
+        compact_every: int | None = None,
     ):
         self.path = path
         self.fsync = fsync
         self.latency_s = latency_s
-        self._lock = threading.Lock()
+        self.group_commit = group_commit
+        self.fault_hook = fault_hook
+        self.compact_every = compact_every
+        self._lock = threading.RLock()  # serialized mode + fh lifecycle
         self._memory: list[dict] = []
         self._fh: io.TextIOBase | None = None
+        #: checkpoint generation of the current segment (0 = never compacted)
+        self.generation = 0
+        #: records appended since the last checkpoint (compaction trigger)
+        self._since_checkpoint = 0
+        #: one auto-compaction at a time (concurrent appenders all cross the
+        #: threshold together; only one should pay for the swap)
+        self._auto_compacting = False
+        #: last auto-compaction failure, if any (auto-compaction is
+        #: best-effort: it must never fail the append that triggered it)
+        self.last_compact_error: Exception | None = None
         if path is not None:
             os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+            if os.path.exists(path):
+                self._scan_existing(path)
             self._fh = open(path, "a", encoding="utf-8")
+        self._committer = GroupCommitter(self._flush_batch)
 
+    def _scan_existing(self, path: str) -> None:
+        """Open-time repair + bookkeeping for a pre-existing segment.
+
+        Recovers ``generation`` and the post-checkpoint tail length, and
+        **truncates a torn tail**: a crash between batch write and flush can
+        leave a partial final line, and appending after it would glue new
+        records onto the tear, making them unreadable.  Everything from the
+        first incomplete/undecodable line onward is untrusted (replay stops
+        there anyway), so the journal seals the segment back to its last
+        durable record before appending.
+        """
+        good_end = 0
+        with open(path, "rb") as fh:
+            for raw in fh:
+                if not raw.endswith(b"\n"):
+                    break  # torn tail: unterminated final line
+                stripped = raw.strip()
+                if stripped:
+                    try:
+                        rec = json.loads(stripped)
+                    except ValueError:
+                        break  # torn/corrupt: nothing past here is trusted
+                    if rec.get("type") == "checkpoint":
+                        self.generation = rec.get("generation", self.generation)
+                        self._since_checkpoint = 0
+                    else:
+                        self._since_checkpoint += 1
+                good_end += len(raw)
+        if good_end < os.path.getsize(path):
+            with open(path, "rb+") as fh:
+                fh.truncate(good_end)
+
+    # ------------------------------------------------------------------ append
     def append(self, record: dict) -> None:
+        """Write-ahead append: returns only once ``record`` is durable."""
         line = json.dumps(record, separators=(",", ":"), default=_jsonable)
-        with self._lock:
-            if self.latency_s:
-                time.sleep(self.latency_s)
-            if self._fh is not None:
-                self._fh.write(line + "\n")
-                self._fh.flush()
-                if self.fsync:
-                    os.fsync(self._fh.fileno())
-            else:
-                self._memory.append(json.loads(line))
+        if self.group_commit:
+            self._committer.append_and_commit(line)
+        else:
+            # serialized baseline: one durability round trip per record,
+            # taken while holding the journal lock
+            with self._lock:
+                self._flush_batch([line])
+        if (
+            self.compact_every is not None
+            and self._since_checkpoint > self.compact_every
+        ):
+            self._maybe_auto_compact()
 
-    def records(self) -> Iterator[dict]:
+    def _maybe_auto_compact(self) -> None:
         with self._lock:
-            if self._fh is None:
-                yield from list(self._memory)
+            if self._auto_compacting:
                 return
+            self._auto_compacting = True
+        try:
+            # recheck under the flag: a just-finished compaction may have
+            # already reset the tail counter
+            if self._since_checkpoint > self.compact_every:
+                self.compact()
+        except Exception as exc:
+            # best-effort: the append that triggered us already committed
+            # durably, and a failed compaction leaves the old segment
+            # intact — record the error and retry at the next threshold
+            # crossing instead of failing a successful append
+            self.last_compact_error = exc
+        finally:
+            with self._lock:
+                self._auto_compacting = False
+
+    def _hook(self, phase: str, batch: list[str]) -> None:
+        if self.fault_hook is not None:
+            self.fault_hook(phase, batch)
+
+    def _flush_batch(self, lines: list[str]) -> None:
+        """One durable commit for a whole batch (the group-commit payoff)."""
+        self._hook("pre-write", lines)
+        if self.latency_s:
+            time.sleep(self.latency_s)  # one simulated RTT per batch
+        if self._fh is not None:
+            self._fh.write("".join(line + "\n" for line in lines))
+            self._hook("post-write", lines)
             self._fh.flush()
+            self._hook("post-flush", lines)
+            if self.fsync:
+                os.fsync(self._fh.fileno())
+        else:
+            self._memory.extend(json.loads(line) for line in lines)
+            self._hook("post-write", lines)
+            self._hook("post-flush", lines)
+        self._hook("post-fsync", lines)
+        self._since_checkpoint += len(lines)
+
+    # ------------------------------------------------------------------ read
+    def records(self) -> Iterator[dict]:
+        """Committed records in append order (checkpoint first, if any).
+
+        Every record whose ``append()`` returned is visible: group commit
+        flushes each batch before releasing its waiters, so no reader-side
+        flush is needed.  A torn trailing line (crash between write and
+        flush/fsync) terminates the iteration — everything after the first
+        undecodable line is a suspect partial write, never silently skipped
+        past.
+        """
+        if self._fh is None and self.path is None:
+            with self._lock:
+                yield from list(self._memory)
+            return
         assert self.path is not None
-        with open(self.path, encoding="utf-8") as fh:
-            for line in fh:
-                line = line.strip()
-                if line:
-                    yield json.loads(line)
+        yield from _read_records(self.path)
 
     def close(self) -> None:
         with self._lock:
             if self._fh is not None:
                 self._fh.close()
                 self._fh = None
+
+    # ------------------------------------------------------------- compaction
+    def compact(self, counters: dict | None = None) -> dict:
+        """Collapse history into one checkpoint record (generation swap).
+
+        Replays the current segment into live images — unfinished
+        :class:`RunImage` s, every :class:`TriggerImage` with its
+        ack-progress — writes a single ``checkpoint`` record to a fresh
+        ``<path>.gen<N>.tmp``, fsyncs it, and atomically ``os.replace`` s it
+        over the segment.  Terminal runs are dropped: ``recover()`` never
+        resumes them, so they are dead weight the checkpoint sheds.
+
+        Because the checkpoint is *defined* as the replay of the history it
+        replaces, recovery after compaction is equivalent by construction to
+        recovery from the full history (tested in
+        tests/core/test_compaction.py).
+
+        ``counters`` snapshots service counters (e.g. ``FlowEngine.stats``)
+        into the checkpoint; when omitted, the previous checkpoint's
+        counters are carried forward.  Returns a summary dict.
+        """
+        summary: dict = {}
+
+        def do(batch: list[str]) -> None:
+            # flush anything queued behind us into the OLD segment first, so
+            # the replay below sees it (their waiters are released when
+            # run_exclusive marks them durable)
+            if batch:
+                self._flush_batch(batch)
+            view = replay_segment(self)  # one decode pass feeds everything
+            live_runs = [
+                image.to_state()
+                for image in view.runs.values()
+                if image.status == "ACTIVE"
+            ]
+            checkpoint = {
+                "type": "checkpoint",
+                "generation": self.generation + 1,
+                "runs": live_runs,
+                "triggers": [
+                    image.to_state() for image in view.triggers.values()
+                ],
+                "counters": counters if counters is not None else view.counters,
+                "t": time.time(),
+            }
+            line = json.dumps(
+                checkpoint, separators=(",", ":"), default=_jsonable
+            )
+            if self.path is not None:
+                # a failure anywhere before os.replace leaves the old
+                # segment untouched (the tmp file is scrap); the append
+                # handle is reopened even on a failed swap so the journal
+                # stays writable either way
+                tmp = f"{self.path}.gen{self.generation + 1}.tmp"
+                with open(tmp, "w", encoding="utf-8") as fh:
+                    fh.write(line + "\n")
+                    fh.flush()
+                    if self.fsync:
+                        os.fsync(fh.fileno())
+                with self._lock:
+                    if self._fh is not None:
+                        self._fh.close()
+                    try:
+                        os.replace(tmp, self.path)
+                    finally:
+                        self._fh = open(self.path, "a", encoding="utf-8")
+                    if self.fsync:
+                        _fsync_dir(os.path.dirname(os.path.abspath(self.path)))
+            else:
+                with self._lock:
+                    self._memory = [json.loads(line)]
+            self.generation += 1
+            self._since_checkpoint = 0
+            summary.update(
+                generation=self.generation,
+                records_before=view.record_count,
+                records_after=1,
+                live_runs=len(live_runs),
+                triggers=len(checkpoint["triggers"]),
+                path=self.path,
+            )
+
+        if self.group_commit:
+            self._committer.run_exclusive(do)
+        else:
+            # serialized mode: hold the append lock across the whole swap so
+            # no append can land on (and be lost with) the old file between
+            # the replay and the os.replace; _lock is reentrant for do()'s
+            # own acquisitions
+            with self._lock:
+                do([])
+        return summary
+
+
+def _fsync_dir(dirname: str) -> None:
+    """Make a rename durable (best-effort on platforms without dir fds)."""
+    try:
+        fd = os.open(dirname, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform-specific
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _read_records(path: str) -> Iterator[dict]:
+    try:
+        fh = open(path, encoding="utf-8")
+    except FileNotFoundError:
+        return
+    with fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                yield json.loads(line)
+            except json.JSONDecodeError:
+                # torn tail from a crash mid-write: stop here — later lines
+                # (if any) are past the tear and must not be trusted
+                return
 
 
 def _jsonable(obj: Any):
@@ -110,6 +512,13 @@ def _jsonable(obj: Any):
 
 class RunImage:
     """Reconstructed view of one run from journal records."""
+
+    #: scalar fields that round-trip through a checkpoint record
+    _STATE_FIELDS = (
+        "run_id", "flow_id", "input", "creator", "label", "status",
+        "context", "current_state", "attempt",
+        "action_id", "action_provider", "action_request_id",
+    )
 
     def __init__(self, run_id: str):
         self.run_id = run_id
@@ -126,6 +535,19 @@ class RunImage:
         self.action_provider: str | None = None
         self.action_request_id: str | None = None
         self.records: list[dict] = []
+
+    def to_state(self) -> dict:
+        """Checkpoint serialization (the raw record list is history, not
+        state — a checkpointed image carries none)."""
+        return {name: getattr(self, name) for name in self._STATE_FIELDS}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "RunImage":
+        image = cls(state["run_id"])
+        for name in cls._STATE_FIELDS:
+            if name in state:
+                setattr(image, name, state[name])
+        return image
 
     def apply(self, rec: dict) -> None:
         self.records.append(rec)
@@ -162,18 +584,77 @@ class RunImage:
             self.status = "CANCELLED"
 
 
+class SegmentView:
+    """Everything one pass over a segment can reconstruct.
+
+    ``replay`` / ``replay_triggers`` / ``replay_counters`` are narrowing
+    views over this; :meth:`Journal.compact` and
+    :meth:`~repro.core.engine.FlowEngine.recover` use it directly so a long
+    segment is decoded once, not once per view.
+    """
+
+    def __init__(self):
+        self.runs: dict[str, RunImage] = {}
+        self.triggers: dict[str, TriggerImage] = {}
+        self.counters: dict = {}
+        self.generation = 0
+        self.record_count = 0
+
+
+def replay_segment(journal: Journal) -> SegmentView:
+    """Replay a segment into run images, trigger images, and counters.
+
+    A ``checkpoint`` record *resets* every view to the checkpoint's
+    collapsed state — it is the replay of everything before it — and the
+    post-checkpoint tail applies on top, so replay cost after compaction is
+    O(live state + tail), independent of the collapsed history's length.
+    Run records carry ``run_id`` and trigger records carry ``trigger_id``;
+    the two views are independent over one shared record stream.
+    """
+    view = SegmentView()
+    for rec in journal.records():
+        view.record_count += 1
+        if rec.get("type") == "checkpoint":
+            view.runs = {
+                state["run_id"]: RunImage.from_state(state)
+                for state in rec.get("runs", ())
+            }
+            view.triggers = {
+                state["trigger_id"]: TriggerImage.from_state(state)
+                for state in rec.get("triggers", ())
+            }
+            view.counters = rec.get("counters", {}) or {}
+            view.generation = rec.get("generation", view.generation)
+            continue
+        run_id = rec.get("run_id")
+        if run_id is not None:
+            image = view.runs.get(run_id)
+            if image is None:
+                image = view.runs[run_id] = RunImage(run_id)
+            image.apply(rec)
+            continue
+        trigger_id = rec.get("trigger_id")
+        if trigger_id is not None:
+            trig = view.triggers.get(trigger_id)
+            if trig is None:
+                trig = view.triggers[trigger_id] = TriggerImage(trigger_id)
+            trig.apply(rec)
+    return view
+
+
 def replay(journal: Journal) -> dict[str, RunImage]:
     """Group journal records into per-run images (ordered by appearance)."""
-    images: dict[str, RunImage] = {}
-    for rec in journal.records():
-        run_id = rec.get("run_id")
-        if run_id is None:
-            continue
-        image = images.get(run_id)
-        if image is None:
-            image = images[run_id] = RunImage(run_id)
-        image.apply(rec)
-    return images
+    return replay_segment(journal).runs
+
+
+def replay_counters(journal: Journal) -> tuple[dict, int]:
+    """(service counters, generation) from the last checkpoint record.
+
+    Counters are an advisory snapshot taken at compaction time; activity in
+    the post-checkpoint tail is not folded in.
+    """
+    view = replay_segment(journal)
+    return view.counters, view.generation
 
 
 class TriggerImage:
@@ -185,6 +666,11 @@ class TriggerImage:
     has already successfully handled — so crash recovery redelivers *only*
     the events that had not yet produced an invocation.
     """
+
+    _STATE_FIELDS = (
+        "trigger_id", "queue_id", "predicate", "transform", "action_ref",
+        "owner", "enabled", "poll_min_s", "poll_max_s", "batch", "stats",
+    )
 
     def __init__(self, trigger_id: str):
         self.trigger_id = trigger_id
@@ -202,6 +688,22 @@ class TriggerImage:
         self.resolved_message_ids: set[str] = set()
         #: the subset of resolved messages whose disposition was "invoked"
         self.invoked_message_ids: set[str] = set()
+
+    def to_state(self) -> dict:
+        state = {name: getattr(self, name) for name in self._STATE_FIELDS}
+        state["resolved_message_ids"] = sorted(self.resolved_message_ids)
+        state["invoked_message_ids"] = sorted(self.invoked_message_ids)
+        return state
+
+    @classmethod
+    def from_state(cls, state: dict) -> "TriggerImage":
+        image = cls(state["trigger_id"])
+        for name in cls._STATE_FIELDS:
+            if name in state:
+                setattr(image, name, state[name])
+        image.resolved_message_ids = set(state.get("resolved_message_ids", ()))
+        image.invoked_message_ids = set(state.get("invoked_message_ids", ()))
+        return image
 
     def apply(self, rec: dict) -> None:
         kind = rec["type"]
@@ -232,15 +734,8 @@ def replay_triggers(journal: Journal) -> dict[str, TriggerImage]:
     """Group journal records into per-trigger images (ordered by appearance).
 
     Run records carry ``run_id`` and trigger records carry ``trigger_id``, so
-    the two replays are independent views over one shared segment.
+    the two replays are independent views over one shared segment.  Like
+    :func:`replay`, a ``checkpoint`` record resets the map to its collapsed
+    trigger images (lifecycle + ack-progress survive compaction).
     """
-    images: dict[str, TriggerImage] = {}
-    for rec in journal.records():
-        trigger_id = rec.get("trigger_id")
-        if trigger_id is None or "run_id" in rec:
-            continue
-        image = images.get(trigger_id)
-        if image is None:
-            image = images[trigger_id] = TriggerImage(trigger_id)
-        image.apply(rec)
-    return images
+    return replay_segment(journal).triggers

@@ -9,7 +9,10 @@ Reliable, secure delivery of messages from senders to receivers with:
 * **deferred delivery** — a send may specify a delay (SQS-style), which is
   how the paper's action queue implements polling backoff;
 * **role-based access** — Administrator / Sender / Receiver roles per queue;
-* optional JSONL **persistence** so queues survive restarts;
+* optional JSONL **persistence** so queues survive restarts — snapshot
+  writes ride the same :class:`~repro.core.journal.GroupCommitter` the
+  write-ahead journal uses, so concurrent send/receive/ack bursts coalesce
+  into one snapshot write instead of one per operation;
 * **push subscriptions** — a subscriber callback is notified on every
   ``send`` with the message's delivery time, so event-driven consumers
   (:class:`~repro.core.triggers.EventRouter`) wake immediately instead of
@@ -31,6 +34,7 @@ from typing import Any, Callable
 from .auth import Caller, principal_matches
 from .clock import Clock, RealClock
 from .errors import Forbidden, NotFound, QueueInvariantError
+from .journal import GroupCommitter
 
 DEFAULT_VISIBILITY_TIMEOUT = 30.0
 
@@ -92,6 +96,16 @@ class QueueService:
             "notifies": 0,
         }
         self.persist_path = persist_path
+        #: persistence rides the shared group-commit batcher: every mutation
+        #: requests a snapshot write, concurrent requests coalesce into one
+        #: leader-performed write (each snapshot covers every mutation made
+        #: before it was built, so a caller whose ticket is flushed knows its
+        #: change is on disk).  Non-poisoning: a failed snapshot write
+        #: surfaces to that batch's callers and the next mutation retries
+        #: with a fresh full snapshot.
+        self._persist_batcher = GroupCommitter(
+            lambda batch: self._write_snapshot(), poison_on_error=False
+        )
         if persist_path and os.path.exists(persist_path):
             self._load()
 
@@ -255,6 +269,7 @@ class QueueService:
         q = self._queue(queue_id)
         self._require_role(q, q.receivers, caller, "Receiver")
         now = self.clock.now()
+        acked = False
         with q.lock:
             for msg in q.messages:
                 if msg.receipt == receipt and not msg.acked:
@@ -264,11 +279,18 @@ class QueueService:
                         )
                     msg.acked = True
                     self._gc(q)
-                    self._persist()
-                    with self._stats_lock:
-                        self.stats["acks"] += 1
-                    return
-        raise QueueInvariantError(f"unknown or already-acked receipt {receipt!r}")
+                    acked = True
+                    break
+        if not acked:
+            raise QueueInvariantError(
+                f"unknown or already-acked receipt {receipt!r}"
+            )
+        # persist OUTSIDE q.lock: the snapshot batcher may make this caller
+        # wait on another thread's leader, and that leader needs q.lock to
+        # serialize this queue's messages
+        self._persist()
+        with self._stats_lock:
+            self.stats["acks"] += 1
 
     def depth(self, queue_id: str) -> int:
         q = self._queue(queue_id)
@@ -349,10 +371,35 @@ class QueueService:
             raise Forbidden(f"{who} lacks {role} role on queue {q.queue_id}")
 
     def _persist(self) -> None:
+        """Request a durable snapshot (coalesced through the group batcher)."""
         if not self.persist_path:
             return
+        self._persist_batcher.append_and_commit(None)
+
+    def _write_snapshot(self) -> None:
         with self._lock:
-            doc = [
+            queues = list(self._queues.values())
+        doc = []
+        for q in queues:
+            # per-queue lock: ack()'s _gc pops from q.messages concurrently;
+            # an unlocked iteration could skip a live message and persist a
+            # snapshot missing it.  No caller holds q.lock while waiting on
+            # the batcher (see ack), so the ordering is deadlock-free.
+            with q.lock:
+                messages = [
+                    {
+                        "message_id": m.message_id,
+                        "body": m.body,
+                        "attributes": m.attributes,
+                        "sent_at": m.sent_at,
+                        "deliver_after": m.deliver_after,
+                        "sender": m.sender,
+                        "receive_count": m.receive_count,
+                    }
+                    for m in q.messages
+                    if not m.acked
+                ]
+            doc.append(
                 {
                     "queue_id": q.queue_id,
                     "label": q.label,
@@ -360,22 +407,9 @@ class QueueService:
                     "senders": q.senders,
                     "receivers": q.receivers,
                     "visibility_timeout": q.visibility_timeout,
-                    "messages": [
-                        {
-                            "message_id": m.message_id,
-                            "body": m.body,
-                            "attributes": m.attributes,
-                            "sent_at": m.sent_at,
-                            "deliver_after": m.deliver_after,
-                            "sender": m.sender,
-                            "receive_count": m.receive_count,
-                        }
-                        for m in q.messages
-                        if not m.acked
-                    ],
+                    "messages": messages,
                 }
-                for q in self._queues.values()
-            ]
+            )
         tmp = self.persist_path + ".tmp"
         with open(tmp, "w") as fh:
             json.dump(doc, fh)

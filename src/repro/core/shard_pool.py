@@ -34,7 +34,12 @@ Durability contract
 -------------------
 Each shard journals to its own segment (``<base>.shard<i>-of<n>.jsonl``)
 *before* acting — the per-shard write-ahead rule is identical to the single
-engine's.  Recovery is per-shard: each shard replays only its own segment, so
+engine's.  Within a shard, concurrent appends group-commit (one
+flush+fsync per batch; ``group_commit=False`` restores the serialized
+baseline), and :meth:`EngineShardPool.compact` (or ``compact_every=N``)
+checkpoint-compacts each segment independently so per-shard recovery is
+O(live state), not O(history) — see docs/durability.md.
+Recovery is per-shard: each shard replays only its own segment, so
 a pool restarted with the same ``num_shards`` recovers every unfinished run
 on its original home shard.  Restarting with a *different* count opens fresh
 segments and recovers nothing (the count is embedded in the segment file
@@ -159,6 +164,8 @@ class EngineShardPool:
         journals: list[Journal] | None = None,
         fsync: bool = False,
         journal_latency_s: float = 0.0,
+        group_commit: bool = True,
+        compact_every: int | None = None,
         polling: PollingPolicy | None = None,
         max_workers: int = 8,
         start_threads: bool | None = None,
@@ -190,9 +197,15 @@ class EngineShardPool:
                     segment_path(journal_path, i, num_shards),
                     fsync=fsync,
                     latency_s=journal_latency_s,
+                    group_commit=group_commit,
+                    compact_every=compact_every,
                 )
             else:
-                seg = Journal(latency_s=journal_latency_s)
+                seg = Journal(
+                    latency_s=journal_latency_s,
+                    group_commit=group_commit,
+                    compact_every=compact_every,
+                )
             self.engines.append(
                 FlowEngine(
                     registry,
@@ -310,6 +323,19 @@ class EngineShardPool:
                 for key, value in engine.stats.items():
                     totals[key] = totals.get(key, 0) + value
         return totals
+
+    # ------------------------------------------------------- durability maint
+    def compact(self) -> list[dict]:
+        """Checkpoint-compact every shard's journal segment (one summary per
+        shard, in shard order).
+
+        Each shard's segment is compacted independently — the checkpoint
+        collapses that shard's own history into its live run images, its
+        triggers' lifecycle + ack-progress, and a snapshot of the shard
+        engine's counters — so per-shard recovery stays O(live state)
+        regardless of how long the pool has been running.
+        """
+        return [engine.compact() for engine in self.engines]
 
     # ------------------------------------------------------------- recovery
     def recover(

@@ -28,7 +28,11 @@ that with the :class:`EventRouter`, a single shared dispatcher:
   are journaled write-ahead (``trigger_created`` / ``trigger_enabled`` /
   ``trigger_disabled`` / ``trigger_resolved``), so
   :meth:`EventRouter.recover` restores enabled triggers — and skips events
-  that already produced an invocation — exactly like run recovery;
+  that already produced an invocation — exactly like run recovery.  The
+  journal's group commit batches concurrent trigger records with run
+  records in one fsync, and checkpoint compaction collapses a trigger's
+  record history into a single image (lifecycle + ack-progress + stats)
+  that :func:`~repro.core.journal.replay_triggers` seeds recovery from;
 * **at-least-once into the action** — a message is acknowledged only after
   *every* subscribed trigger has resolved it (invoked, discarded, or hit a
   permanent transform error).  If an invoker raises, the message stays
@@ -273,7 +277,10 @@ class EventRouter:
         re-enabled — with no caller wallet; re-enable with a caller to restore
         delegated tokens — and their ack-progress (already-resolved message
         ids) seeds the redelivery dedup, so a crash between an invocation and
-        its ack does not double-invoke.  ``enable_filter(image)`` can veto
+        its ack does not double-invoke.  Replay is checkpoint-aware: a
+        compacted segment yields each trigger's collapsed image (plus the
+        post-checkpoint tail) instead of its full record history, with
+        identical recovered state.  ``enable_filter(image)`` can veto
         re-enabling (journaled as disabled) — it runs *before* the trigger is
         live, so a vetoed trigger never dispatches, even with worker threads
         racing the recovery loop.  Returns the recovered triggers.

@@ -1,0 +1,348 @@
+"""Checkpoint compaction: bounded recovery + crash-equivalence.
+
+The compaction invariant (docs/ARCHITECTURE.md invariant 6): a checkpoint
+record is *defined* as the replay of the history it replaces, so recovery
+from a compacted segment must be indistinguishable from recovery from the
+full history — for runs, triggers (lifecycle + ack-progress), and service
+counters — and crash-point injection at every group-commit batch boundary
+must recover to the same terminal states as an uninterrupted run.
+"""
+
+import os
+
+import pytest
+
+from repro.core import asl
+from repro.core.actions import ActionRegistry
+from repro.core.clock import VirtualClock
+from repro.core.engine import RUN_ACTIVE, RUN_SUCCEEDED, FlowEngine
+from repro.core.flows_service import FlowsService
+from repro.core.journal import (
+    Journal,
+    JournalCrashed,
+    SimulatedCrash,
+    replay,
+    replay_counters,
+    replay_triggers,
+    segment_path,
+)
+from repro.core.providers import EchoProvider, SleepProvider
+from repro.core.queues import QueueService
+from repro.core.shard_pool import EngineShardPool
+
+CHAIN = {
+    "StartAt": "A",
+    "States": {
+        "A": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string.$": "$.msg"},
+              "ResultPath": "$.a", "Next": "Pause"},
+        "Pause": {"Type": "Action", "ActionUrl": "ap://sleep",
+                  "Parameters": {"seconds": 50.0},
+                  "ResultPath": "$.pause", "Next": "B"},
+        "B": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string.$": "$.a.details.echo_string"},
+              "ResultPath": "$.b", "End": True},
+    },
+}
+
+PASS_FLOW = {
+    "StartAt": "Noop",
+    "States": {"Noop": {"Type": "Pass", "End": True}},
+}
+
+
+def make_engine(journal: Journal):
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    registry.register(SleepProvider(clock=clock))
+    return FlowEngine(registry, clock=clock, journal=journal)
+
+
+def _grow_history(engine, completed: int, live: int):
+    """``completed`` finished pass-runs + ``live`` chains parked in Pause."""
+    pass_flow = asl.parse(PASS_FLOW)
+    chain = asl.parse(CHAIN)
+    for i in range(completed):
+        run = engine.start_run(pass_flow, {}, flow_id="p",
+                               run_id=f"run-done{i:04d}")
+        engine.run_to_completion(run.run_id)
+    for i in range(live):
+        engine.start_run(chain, {"msg": f"m{i}"}, flow_id="f",
+                         run_id=f"run-live{i:04d}")
+    engine.scheduler.drain(until=10.0)
+
+
+# ------------------------------------------------------------- equivalence
+
+def test_compacted_recovery_equals_full_history_recovery(tmp_path):
+    full = str(tmp_path / "full.jsonl")
+    compacted = str(tmp_path / "compacted.jsonl")
+    for path in (full, compacted):
+        engine = make_engine(Journal(path))
+        _grow_history(engine, completed=25, live=3)
+
+    summary = Journal(compacted).compact()
+    assert summary["records_after"] == 1 < summary["records_before"]
+    assert summary["live_runs"] == 3
+
+    outcomes = {}
+    for path in (full, compacted):
+        engine = make_engine(Journal(path))
+        resumed = engine.recover(
+            {"f": asl.parse(CHAIN), "p": asl.parse(PASS_FLOW)}
+        )
+        engine.scheduler.drain()
+        outcomes[path] = {
+            run.run_id: (run.status, run.context["b"]["details"])
+            for run in resumed
+        }
+    assert outcomes[full] == outcomes[compacted]
+    assert len(outcomes[full]) == 3
+    assert all(s == RUN_SUCCEEDED for s, _ in outcomes[full].values())
+
+
+def test_checkpoint_drops_terminal_runs_and_keeps_tail(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    engine = make_engine(Journal(path))
+    _grow_history(engine, completed=40, live=2)
+    engine.compact()
+    # tail records appended AFTER the checkpoint apply on top of it
+    engine.journal.append(
+        {"type": "run_cancelled", "run_id": "run-live0000", "t": 11.0}
+    )
+    images = replay(Journal(path))
+    assert set(images) == {"run-live0000", "run-live0001"}
+    assert images["run-live0000"].status == "CANCELLED"
+    assert images["run-live0001"].status == RUN_ACTIVE
+
+
+def test_checkpoint_counters_restore_into_stats(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    engine = make_engine(Journal(path))
+    _grow_history(engine, completed=10, live=1)
+    engine.compact()
+    counters, generation = replay_counters(Journal(path))
+    assert generation == 1
+    assert counters["runs_started"] == 11
+    assert counters["runs_succeeded"] == 10
+
+    engine2 = make_engine(Journal(path))
+    engine2.recover({"f": asl.parse(CHAIN), "p": asl.parse(PASS_FLOW)})
+    assert engine2.stats["runs_started"] == 11
+    assert engine2.stats["runs_succeeded"] == 10
+
+
+def test_repeated_compaction_bumps_generation(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    journal = Journal(path)
+    journal.append({"type": "run_created", "run_id": "r", "flow_id": "f"})
+    assert journal.compact()["generation"] == 1
+    journal.append({"type": "state_entered", "run_id": "r", "state": "A",
+                    "context": {}})
+    assert journal.compact()["generation"] == 2
+    # a fresh journal over the segment learns the generation from the file
+    assert Journal(path).generation == 2
+
+
+def test_auto_compaction_bounds_segment_length(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    engine = make_engine(Journal(path, compact_every=30))
+    _grow_history(engine, completed=50, live=2)  # ~200 records uncompacted
+    assert engine.journal.generation >= 1
+    tail = sum(1 for _ in engine.journal.records())
+    assert tail <= 31 + 1  # one checkpoint + a bounded tail
+    engine2 = make_engine(Journal(path))
+    resumed = engine2.recover({"f": asl.parse(CHAIN), "p": asl.parse(PASS_FLOW)})
+    engine2.scheduler.drain()
+    assert sorted(r.run_id for r in resumed) == ["run-live0000", "run-live0001"]
+    assert all(r.status == RUN_SUCCEEDED for r in resumed)
+
+
+def test_in_memory_journal_compacts_too():
+    journal = Journal()
+    engine = make_engine(journal)
+    _grow_history(engine, completed=15, live=1)
+    summary = engine.compact()
+    assert summary["records_after"] == 1
+    assert summary["live_runs"] == 1
+    assert len(replay(journal)) == 1
+
+
+# -------------------------------------------------- triggers survive compaction
+
+def test_trigger_state_survives_compaction(tmp_path):
+    """Trigger lifecycle + ack-progress collapse into the checkpoint and
+    recover identically through FlowsService.recover_triggers."""
+    path = str(tmp_path / "journal.jsonl")
+    # the Queues service survives the Flows "crash" (paper: separate service)
+    clock = VirtualClock()
+    queues = QueueService(clock=clock)
+
+    def build(shards=2):
+        registry = ActionRegistry()
+        registry.register(EchoProvider(clock=clock))
+        registry.register(SleepProvider(clock=clock))
+        return FlowsService(registry, clock=clock, shards=shards,
+                            journal_path=path, queues=queues)
+
+    flows = build()
+    flows.publish_flow(PASS_FLOW, title="sink", flow_id="sink")
+    q = queues.create_queue("events")
+    trig = flows.create_trigger(q.queue_id, "kind == 'go'", "sink",
+                                trigger_id="trig-compact")
+    flows.enable_trigger(trig.trigger_id)
+    for i in range(4):
+        queues.send(q.queue_id, {"kind": "go", "i": i})
+    flows.engine.drain()
+    assert flows.trigger_status("trig-compact")["stats"]["invocations"] == 4
+
+    summaries = flows.compact()
+    assert sum(s["triggers"] for s in summaries) == 1
+    assert all(s["records_after"] == 1 for s in summaries)
+
+    # restart the Flows side over the compacted segments
+    flows2 = build()
+    flows2.publish_flow(PASS_FLOW, title="sink", flow_id="sink")
+    recovered = flows2.recover_triggers()
+    assert [t.trigger_id for t in recovered] == ["trig-compact"]
+    assert recovered[0].enabled
+    assert recovered[0].stats["invocations"] == 4
+
+
+# ------------------------------------- crash injection at batch boundaries
+
+#: CI's durability job injects the shard count (ci.yml: REPRO_TEST_SHARDS=4)
+SHARDS = int(os.environ.get("REPRO_TEST_SHARDS", "4"))
+
+
+def _shard_journals(path, shards=None, fault_hook=None, **kwargs):
+    shards = SHARDS if shards is None else shards
+    return [
+        Journal(segment_path(path, i, shards), fault_hook=fault_hook, **kwargs)
+        for i in range(shards)
+    ]
+
+
+def make_pool(journals):
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    registry.register(SleepProvider(clock=clock))
+    pool = EngineShardPool(
+        registry, num_shards=len(journals), clock=clock, journals=journals
+    )
+    return pool, clock
+
+
+def _reference_outcomes():
+    pool, _ = make_pool([Journal() for _ in range(SHARDS)])
+    chain = asl.parse(CHAIN)
+    for i in range(12):
+        pool.start_run(chain, {"msg": f"m{i}"}, flow_id="flow",
+                       run_id=f"run-{i:04d}")
+    pool.drain()
+    return {
+        rid: (run.status, run.context["b"]["details"])
+        for rid, run in pool.runs.items()
+    }
+
+
+def _crash_points():
+    """Every (phase, batch ordinal) boundary the 12-run workload commits."""
+    for phase in ("pre-write", "post-write", "post-fsync"):
+        for crash_after in (0, 1, 3, 7, 15, 31, 63):
+            yield phase, crash_after
+
+
+@pytest.mark.parametrize("phase,crash_after", list(_crash_points()))
+def test_crash_at_batch_boundary_recovers_to_reference(
+    phase, crash_after, tmp_path
+):
+    """Kill a 4-shard pool at a group-commit batch boundary; recovery must
+    reach the reference terminal states for every journaled run."""
+    reference = _reference_outcomes()
+    path = str(tmp_path / "journal.jsonl")
+    state = {"batches": 0}
+
+    def hook(p: str, batch: list) -> None:
+        if p != phase:
+            return
+        state["batches"] += 1
+        if state["batches"] > crash_after:
+            raise SimulatedCrash(f"killed at {phase} #{state['batches']}")
+
+    pool1, _ = make_pool(_shard_journals(path, 4, fault_hook=hook))
+    chain = asl.parse(CHAIN)
+    journaled: list[str] = []
+    crashed = False
+    try:
+        for i in range(12):
+            pool1.start_run(chain, {"msg": f"m{i}"}, flow_id="flow",
+                            run_id=f"run-{i:04d}")
+            journaled.append(f"run-{i:04d}")
+        pool1.drain()
+    except (SimulatedCrash, JournalCrashed):
+        crashed = True
+
+    # the "restarted process": fresh pool + providers over the segments
+    journals = _shard_journals(path)
+    # snapshot what the crash left durable BEFORE recovery resumes anything
+    images = {}
+    for journal in journals:
+        images.update(replay(journal))
+    pool2, _ = make_pool(journals)
+    resumed = pool2.recover({"flow": chain})
+    pool2.drain()
+
+    # every run whose run_created reached the journal recovers to the
+    # reference terminal state; runs whose start_run crashed pre-journal
+    # were never admitted (the caller saw the crash) and may be absent
+    recovered = {r.run_id: r for r in pool2.runs.values()}
+    assert set(r.run_id for r in resumed) == {
+        rid for rid, image in images.items() if image.status == RUN_ACTIVE
+    }
+    for rid, image in images.items():
+        ref_status, ref_details = reference[rid]
+        if image.status == RUN_ACTIVE:
+            # unfinished at the crash: recovery must finish it
+            run = recovered[rid]
+            assert run.status == ref_status == RUN_SUCCEEDED, (
+                f"{rid} diverged after {phase} crash: {run.status}"
+            )
+            assert run.context["b"]["details"] == ref_details
+        else:
+            # journaled terminal before the crash: the durable context
+            # already matches the reference outcome
+            assert image.status == ref_status == RUN_SUCCEEDED
+            assert image.context["b"]["details"] == ref_details
+    if not crashed:
+        # crash point beyond the workload's batch count: everything ran
+        assert set(journaled) == set(images)
+
+
+def test_crash_then_compact_then_crash_again(tmp_path):
+    """Compaction between two crashes preserves the recovery contract."""
+    reference = _reference_outcomes()
+    path = str(tmp_path / "journal.jsonl")
+    chain = asl.parse(CHAIN)
+
+    pool1, _ = make_pool(_shard_journals(path))
+    for i in range(12):
+        pool1.start_run(chain, {"msg": f"m{i}"}, flow_id="flow",
+                        run_id=f"run-{i:04d}")
+    pool1.drain(until=10.0)  # crash no.1: all runs parked in Pause
+
+    pool2, _ = make_pool(_shard_journals(path))
+    pool2.recover({"flow": chain})
+    pool2.compact()
+    pool2.drain(until=20.0)  # crash no.2: still mid-flight, post-checkpoint
+
+    pool3, _ = make_pool(_shard_journals(path))
+    resumed = pool3.recover({"flow": chain})
+    pool3.drain()
+    assert sorted(r.run_id for r in resumed) == sorted(reference)
+    for run in resumed:
+        ref_status, ref_details = reference[run.run_id]
+        assert run.status == ref_status == RUN_SUCCEEDED
+        assert run.context["b"]["details"] == ref_details

@@ -14,7 +14,9 @@ from repro.core.engine import RUN_ACTIVE, FlowEngine
 from repro.core.providers import EchoProvider, SleepProvider
 
 DOCS = os.path.join(os.path.dirname(__file__), "..", "..", "docs")
-DOC_FILES = ["ARCHITECTURE.md", "providers.md", "asl.md", "events.md"]
+DOC_FILES = [
+    "ARCHITECTURE.md", "providers.md", "asl.md", "events.md", "durability.md",
+]
 
 # dotted references like `repro.core.engine.FlowEngine` (module or symbol)
 _REF = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
@@ -67,16 +69,28 @@ def test_asl_examples_are_valid_json_and_parse():
         asl.parse(definition)  # raises FlowValidationError if stale
 
 
-def test_events_examples_execute():
-    """Every ```python block in events.md runs (self-contained examples)."""
-    blocks = re.findall(r"```python\n(.*?)```", _read("events.md"), flags=re.S)
-    assert len(blocks) >= 5  # queues, router, recovery, flows, timers
+def _exec_python_blocks(doc: str, min_blocks: int) -> None:
+    blocks = re.findall(r"```python\n(.*?)```", _read(doc), flags=re.S)
+    assert len(blocks) >= min_blocks
     for i, block in enumerate(blocks):
         namespace: dict = {}
         try:
-            exec(compile(block, f"events.md[block {i}]", "exec"), namespace)
+            exec(compile(block, f"{doc}[block {i}]", "exec"), namespace)
         except Exception as e:  # pragma: no cover - failure formatting
-            pytest.fail(f"events.md python block {i} failed: {e!r}")
+            pytest.fail(f"{doc} python block {i} failed: {e!r}")
+
+
+def test_events_examples_execute():
+    """Every ```python block in events.md runs (self-contained examples)."""
+    # queues, router, recovery, flows, timers
+    _exec_python_blocks("events.md", min_blocks=5)
+
+
+def test_durability_examples_execute():
+    """Every ```python block in durability.md runs (the durability contract
+    — record format, group commit, crash points, compaction, queue
+    snapshots — stays true as the journal evolves)."""
+    _exec_python_blocks("durability.md", min_blocks=5)
 
 
 def test_asl_examples_run_to_completion():

@@ -114,14 +114,18 @@ def test_engine_crash_recovery_resumes_training_flow(fabric, tmp_path):
     engine1 = FlowEngine(registry, clock=clock,
                          journal=Journal(journal_path), polling=FAST_POLL)
     run1 = engine1.start_run(flow, {}, flow_id="train-flow")
-    # let it progress into the flow, then "crash" the orchestrator
+    # let it progress into the flow, then "crash" the orchestrator while the
+    # (long) Train action is still in flight — crashing on ActionCompleted
+    # is a race: the remaining states can finish inside the poll gap and
+    # leave nothing to recover
     import time
 
     for _ in range(200):
-        if any(e["code"] == "ActionCompleted" for e in run1.events):
+        if any(e["code"] == "ActionStarted" for e in run1.events):
             break
         time.sleep(0.05)
     engine1.shutdown()
+    assert run1.status == "ACTIVE"  # crashed mid-flight, not after the end
 
     engine2 = FlowEngine(registry, clock=clock,
                          journal=Journal(journal_path), polling=FAST_POLL)
