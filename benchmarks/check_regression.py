@@ -79,6 +79,26 @@ def collect_metrics() -> dict[str, dict]:
         metrics["fig_recovery/compaction_speedup"] = {
             "value": longest["speedup"], "higher_is_better": True,
         }
+
+    # per-transition overhead: gate the delta-journal throughput win and
+    # the journal write-amplification reduction at the 32 KB context point
+    # (the headline cell of benchmarks/fig_transition_overhead.py)
+    overhead = _load("fig_transition_overhead") or []
+    for row in overhead:
+        if row.get("mode") != "delta":
+            continue
+        size = row["context_bytes"]
+        metrics[f"fig_transition_overhead/ctx={size}/transitions_per_s"] = {
+            "value": row["transitions_per_s"], "higher_is_better": True,
+        }
+        if size == 32 * 1024:
+            metrics["fig_transition_overhead/speedup_vs_full_32k"] = {
+                "value": row["speedup_vs_full"], "higher_is_better": True,
+            }
+            metrics["fig_transition_overhead/bytes_reduction_32k"] = {
+                "value": row["bytes_reduction_vs_full"],
+                "higher_is_better": True,
+            }
     return metrics
 
 

@@ -1,0 +1,155 @@
+"""Per-transition overhead: delta-encoded journaling vs full context snapshots.
+
+The paper's Fig 8 microbenchmark treats per-flow overhead as the headline
+cost of cloud-hosted automation, and fleet-steering / continuous-research
+workloads are exactly the many-small-transitions, *large-context* regime:
+every state transition used to journal the **entire run context**
+(`state_entered` + `state_exited` each carried a full copy), so a no-op
+state over a 256 KB context paid ~512 KB of serialization + write — an
+O(context) write amplification per step.
+
+Delta journaling (`FlowEngine(delta_journal=True)`, the default) records
+only the paths a state wrote (`context_patch`, empty for a no-op state)
+plus a periodic full `run_snapshot`; `delta_journal=False` reproduces the
+pre-delta full-snapshot baseline.  Method: drive a chain of no-op Pass
+states over contexts of {1 KB, 32 KB, 256 KB} through both modes on a
+VirtualClock, measuring **transitions/s** and **journal bytes per
+transition** (total segment bytes / state transitions, `run_created`
+included — the input must be journaled once either way).
+
+    PYTHONPATH=src:. python benchmarks/fig_transition_overhead.py [--quick]
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+from benchmarks.common import csv_line, save_results
+from repro.core import asl
+from repro.core.actions import ActionRegistry
+from repro.core.clock import VirtualClock
+from repro.core.engine import FlowEngine
+from repro.core.journal import Journal, replay
+
+CHAIN_LEN = 25
+
+#: context sizes (bytes) — the paper's "large context" regime sweep
+SIZES = (1024, 32 * 1024, 256 * 1024)
+#: runs per (size, mode) cell; fewer at bigger contexts (full mode writes
+#: ~2 * size * CHAIN_LEN bytes per run)
+RUNS = {1024: 40, 32 * 1024: 16, 256 * 1024: 6}
+
+
+def noop_chain(n: int) -> dict:
+    """A chain of n no-op Pass states (no ResultPath: zero context writes)."""
+    states = {}
+    for i in range(n):
+        name = f"S{i}"
+        states[name] = {"Type": "Pass"}
+        if i + 1 < n:
+            states[name]["Next"] = f"S{i + 1}"
+        else:
+            states[name]["End"] = True
+    return {"StartAt": "S0", "States": states}
+
+
+def make_context(size: int) -> dict:
+    """~``size`` bytes of realistic metadata: many modest string fields."""
+    field = "v" * 56
+    n = max(1, size // (len(field) + 16))
+    return {f"meta_{i:05d}": field for i in range(n)}
+
+
+def bench_cell(flow: asl.Flow, size: int, runs: int, delta: bool) -> dict:
+    workdir = tempfile.mkdtemp(prefix="fig_transition_")
+    path = os.path.join(workdir, "journal.jsonl")
+    context = make_context(size)
+    try:
+        engine = FlowEngine(
+            ActionRegistry(),
+            clock=VirtualClock(),
+            journal=Journal(path),
+            delta_journal=delta,
+        )
+        t0 = time.perf_counter()
+        for i in range(runs):
+            engine.start_run(flow, context, flow_id="noop",
+                             run_id=f"run-{i:04d}")
+        engine.scheduler.drain()
+        elapsed = time.perf_counter() - t0
+        engine.journal.close()
+        # sanity: the journal must replay every run to SUCCEEDED with the
+        # exact context it started with (delta replay ≡ full replay)
+        images = replay(Journal(path))
+        assert len(images) == runs
+        for image in images.values():
+            assert image.status == "SUCCEEDED", image.status
+            assert image.context == context
+        journal_bytes = os.path.getsize(path)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+    transitions = runs * CHAIN_LEN
+    return {
+        "mode": "delta" if delta else "full",
+        "context_bytes": size,
+        "runs": runs,
+        "transitions": transitions,
+        "elapsed_s": elapsed,
+        "transitions_per_s": transitions / elapsed,
+        "journal_bytes": journal_bytes,
+        "journal_bytes_per_transition": journal_bytes / transitions,
+    }
+
+
+def run(quick: bool = False) -> list[dict]:
+    sizes = SIZES[:-1] if quick else SIZES
+    flow = asl.parse(noop_chain(CHAIN_LEN))
+    rows = []
+    for size in sizes:
+        runs = max(2, RUNS[size] // (2 if quick else 1))
+        full = bench_cell(flow, size, runs, delta=False)
+        delta = bench_cell(flow, size, runs, delta=True)
+        delta["speedup_vs_full"] = (
+            delta["transitions_per_s"] / full["transitions_per_s"]
+        )
+        delta["bytes_reduction_vs_full"] = (
+            full["journal_bytes_per_transition"]
+            / delta["journal_bytes_per_transition"]
+        )
+        rows.extend([full, delta])
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick=quick)
+    save_results("fig_transition_overhead", rows)
+    lines = []
+    for row in rows:
+        derived = (
+            f"mode={row['mode']};"
+            f"tps={row['transitions_per_s']:.0f};"
+            f"bytes_per_transition={row['journal_bytes_per_transition']:.0f}"
+        )
+        if "speedup_vs_full" in row:
+            derived += (
+                f";speedup={row['speedup_vs_full']:.1f}x"
+                f";bytes_reduction={row['bytes_reduction_vs_full']:.1f}x"
+            )
+        lines.append(csv_line(
+            f"fig_transition_overhead/ctx={row['context_bytes']}/{row['mode']}",
+            1e6 / row["transitions_per_s"],
+            derived,
+        ))
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true")
+    args = parser.parse_args()
+    print("\n".join(main(quick=args.quick)))

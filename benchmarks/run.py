@@ -14,7 +14,7 @@ import time
 import traceback
 
 BENCHES = ["fig7", "fig8", "fig9", "table1", "fig10", "shards", "fanout",
-           "recovery", "soak", "roofline"]
+           "recovery", "overhead", "soak", "roofline"]
 
 
 def _run_roofline() -> list[str]:
@@ -71,6 +71,9 @@ def main() -> int:
     if "recovery" in selected:
         from benchmarks import fig_recovery
         runners["recovery"] = fig_recovery.main
+    if "overhead" in selected:
+        from benchmarks import fig_transition_overhead
+        runners["overhead"] = fig_transition_overhead.main
     if "soak" in selected:
         from benchmarks import soak
         runners["soak"] = soak.main

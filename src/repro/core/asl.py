@@ -18,8 +18,9 @@ from __future__ import annotations
 
 import fnmatch
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Callable
 
+from . import context as ctx
 from . import jsonpath
 from .errors import FlowValidationError
 
@@ -57,9 +58,17 @@ def _is_num(v: Any) -> bool:
     return isinstance(v, _NUMERIC) and not isinstance(v, bool)
 
 
+_ABSENT = object()
+
+
 @dataclass
 class ChoiceRule:
-    """One rule in a Choice state; either a data test or a combinator."""
+    """One rule in a Choice state; either a data test or a combinator.
+
+    ``asl.parse`` compiles every rule once into a reusable evaluator
+    closure (selectors pre-parsed, test function pre-resolved); a rule
+    built by hand compiles itself lazily on first :meth:`evaluate`.
+    """
 
     next: str | None = None  # only on top-level rules
     variable: str | None = None
@@ -67,27 +76,55 @@ class ChoiceRule:
     expected: Any = None
     combinator: str | None = None  # "And" | "Or" | "Not"
     children: list["ChoiceRule"] = field(default_factory=list)
+    #: compiled evaluator (built by :meth:`compiled`; excluded from eq/repr)
+    _eval: Callable[[Any], bool] | None = field(
+        default=None, repr=False, compare=False
+    )
+
+    def compiled(self) -> Callable[[Any], bool]:
+        fn = self._eval
+        if fn is None:
+            fn = self._eval = self._compile()
+        return fn
+
+    def _compile(self) -> Callable[[Any], bool]:
+        if self.combinator == "And":
+            parts = [c.compiled() for c in self.children]
+            return lambda context: all(fn(context) for fn in parts)
+        if self.combinator == "Or":
+            parts = [c.compiled() for c in self.children]
+            return lambda context: any(fn(context) for fn in parts)
+        if self.combinator == "Not":
+            child = self.children[0].compiled()
+            return lambda context: not child(context)
+        sel = jsonpath.compile_path(self.variable)
+        expected = self.expected
+        if self.test == "IsPresent":
+            return lambda context: sel.exists(context) == expected
+        if self.test.endswith("Path"):
+            # "...Path" variants compare against another context location
+            exp_sel = jsonpath.compile_path(expected)
+            fn = _DATA_TESTS[self.test[:-4]]
+
+            def eval_path(context: Any) -> bool:
+                value = sel.get(context, default=_ABSENT)
+                if value is _ABSENT:
+                    return False
+                return bool(fn(value, exp_sel.get(context)))
+
+            return eval_path
+        fn = _DATA_TESTS[self.test]
+
+        def eval_data(context: Any) -> bool:
+            value = sel.get(context, default=_ABSENT)
+            if value is _ABSENT:
+                return False
+            return bool(fn(value, expected))
+
+        return eval_data
 
     def evaluate(self, context: Any) -> bool:
-        if self.combinator == "And":
-            return all(c.evaluate(context) for c in self.children)
-        if self.combinator == "Or":
-            return any(c.evaluate(context) for c in self.children)
-        if self.combinator == "Not":
-            return not self.children[0].evaluate(context)
-        if self.test == "IsPresent":
-            return jsonpath.exists(context, self.variable) == self.expected
-        if not jsonpath.exists(context, self.variable):
-            return False
-        value = jsonpath.get(context, self.variable)
-        expected = self.expected
-        # "...Path" variants compare against another context location
-        if self.test.endswith("Path"):
-            expected = jsonpath.get(context, expected)
-            fn = _DATA_TESTS[self.test[:-4]]
-        else:
-            fn = _DATA_TESTS[self.test]
-        return bool(fn(value, expected))
+        return self.compiled()(context)
 
 
 def _parse_choice_rule(doc: dict, where: str, top: bool) -> ChoiceRule:
@@ -146,6 +183,16 @@ class CatchRule:
     error_equals: list[str]
     next: str
     result_path: str | None = None
+    #: compiled ResultPath writer (lazy; excluded from eq/repr)
+    _writer: Callable[[dict, Any], dict] | None = field(
+        default=None, repr=False, compare=False
+    )
+
+    def write_result(self, context: dict, error_doc: Any) -> dict:
+        fn = self._writer
+        if fn is None:
+            fn = self._writer = ctx.compile_result_writer(self.result_path)
+        return fn(context, error_doc)
 
 
 @dataclass
@@ -177,6 +224,58 @@ class State:
     cause: str = ""
     # Parallel
     branches: list["Flow"] = field(default_factory=list)
+
+    # -- compiled execution plan (built once by asl.parse; lazily rebuilt
+    # -- for hand-constructed states; excluded from eq/repr) ----------------
+    _input_fn: Callable[[Any], Any] | None = field(
+        default=None, repr=False, compare=False
+    )
+    _result_fn: Callable[[dict, Any], dict] | None = field(
+        default=None, repr=False, compare=False
+    )
+    _seconds_sel: jsonpath.Selector | None = field(
+        default=None, repr=False, compare=False
+    )
+
+    def compile_plan(self) -> None:
+        """Pre-compile every JSONPath/template this state touches.
+
+        Called by ``asl.parse`` so the engine's per-transition hot path
+        resolves selectors and closures instead of re-parsing strings.
+        """
+        self._input_fn = ctx.compile_state_input(self.input_path, self.parameters)
+        self._result_fn = ctx.compile_result_writer(self.result_path)
+        if self.seconds_path is not None:
+            self._seconds_sel = jsonpath.compile_path(self.seconds_path)
+        for rule in self.choices:
+            rule.compiled()
+        for rule in self.catch:
+            if rule._writer is None:
+                rule._writer = ctx.compile_result_writer(rule.result_path)
+
+    def input_for(self, context: Any) -> Any:
+        """Effective state input (compiled InputPath + Parameters plan)."""
+        fn = self._input_fn
+        if fn is None:
+            fn = self._input_fn = ctx.compile_state_input(
+                self.input_path, self.parameters
+            )
+        return fn(context)
+
+    def write_result(self, context: dict, result: Any) -> dict:
+        """Apply this state's ResultPath to the Context (compiled writer)."""
+        fn = self._result_fn
+        if fn is None:
+            fn = self._result_fn = ctx.compile_result_writer(self.result_path)
+        return fn(context, result)
+
+    def wait_seconds(self, context: Any) -> float:
+        if self.seconds is not None:
+            return self.seconds
+        sel = self._seconds_sel
+        if sel is None:
+            sel = self._seconds_sel = jsonpath.compile_path(self.seconds_path)
+        return float(sel.get(context))
 
 
 @dataclass
@@ -295,6 +394,12 @@ def _parse_state(name: str, doc: dict, where: str) -> State:
                     result_path=c.get("ResultPath"),
                 )
             )
+    try:
+        st.compile_plan()
+    except jsonpath.JSONPathError as e:
+        # a malformed path is a publish-time validation error, not a
+        # run-time States.ParameterPathFailure
+        raise FlowValidationError(f"{where}: {e}") from None
     return st
 
 

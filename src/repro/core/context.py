@@ -13,48 +13,117 @@ Parameter templates follow both conventions found in the paper's examples:
   as JSONPath references ("The prefix ``$.`` on these values signals that
   they should be treated as JSONPath references into the run Context").
   A value may opt out with a ``\\$`` escape.
+
+Everything here comes in two tiers, like :mod:`repro.core.jsonpath`:
+
+* :func:`compile_parameters` / :func:`compile_state_input` /
+  :func:`compile_result_writer` walk a template **once** at flow-publish
+  time and return closures the engine calls per transition — no per-event
+  template walking, key-suffix checking, or path parsing on the hot path;
+* :func:`evaluate_parameters` / :func:`state_input` / :func:`apply_result`
+  keep the original document-at-a-time API (now thin wrappers that compile
+  through the jsonpath LRU cache).
 """
 
 from __future__ import annotations
 
 import copy
-from typing import Any
+from typing import Any, Callable
 
 from . import jsonpath
 
 
-def evaluate_parameters(template: Any, context: Any) -> Any:
-    """Recursively instantiate a Parameters template against the Context."""
+# --------------------------------------------------------------------------
+# compiled tier: template -> closure, built once per flow definition
+# --------------------------------------------------------------------------
+
+def compile_parameters(template: Any) -> Callable[[Any], Any]:
+    """Compile a Parameters template into ``fn(context) -> document``.
+
+    The template structure (dict shapes, ``.$`` suffixes, reference
+    detection, escapes) is resolved at compile time; the returned closure
+    only resolves selectors and deep-copies referenced values.
+    """
     if isinstance(template, dict):
-        out = {}
+        fields: list[tuple[str, Callable[[Any], Any]]] = []
         for key, value in template.items():
             if isinstance(key, str) and key.endswith(".$"):
                 if not jsonpath.is_reference(value):
                     raise jsonpath.JSONPathError(
                         f"parameter {key!r}: value must be a JSONPath, got {value!r}"
                     )
-                out[key[:-2]] = copy.deepcopy(jsonpath.get(context, value))
+                sel = jsonpath.compile_path(value)
+                fields.append(
+                    (key[:-2], lambda ctx, s=sel: copy.deepcopy(s.get(ctx)))
+                )
             else:
-                out[key] = evaluate_parameters(value, context)
-        return out
+                fields.append((key, compile_parameters(value)))
+        return lambda ctx: {name: fn(ctx) for name, fn in fields}
     if isinstance(template, list):
-        return [evaluate_parameters(v, context) for v in template]
+        parts = [compile_parameters(v) for v in template]
+        return lambda ctx: [fn(ctx) for fn in parts]
     if isinstance(template, str):
         if template.startswith("\\$"):
-            return template[1:]
+            literal = template[1:]
+            return lambda ctx: literal
         if jsonpath.is_reference(template):
-            return copy.deepcopy(jsonpath.get(context, template))
-    return template
+            sel = jsonpath.compile_path(template)
+            return lambda ctx: copy.deepcopy(sel.get(ctx))
+    return lambda ctx: template
+
+
+def compile_state_input(
+    input_path: str | None, parameters: Any
+) -> Callable[[Any], Any]:
+    """Compile a state's (InputPath, Parameters) pair into ``fn(context)``.
+
+    Mirrors :func:`state_input`: ``InputPath`` narrows the document,
+    ``Parameters`` templates over it, and the effective input is always a
+    deep copy so state execution cannot alias the run Context.
+    """
+    in_sel = jsonpath.compile_path(input_path) if input_path else None
+    if parameters is not None:
+        params = compile_parameters(parameters)
+        if in_sel is None:
+            return params
+        return lambda ctx: params(in_sel.get(ctx))
+    if in_sel is not None:
+        return lambda ctx: copy.deepcopy(in_sel.get(ctx))
+    return copy.deepcopy
+
+
+def compile_result_writer(
+    result_path: str | None,
+) -> Callable[[dict, Any], dict]:
+    """Compile a ``ResultPath`` into ``fn(context, result) -> context``.
+
+    Same semantics as :func:`apply_result`; the path (if any) is parsed
+    once here instead of on every state completion.
+    """
+    if result_path is None:
+        return lambda context, result: context
+    if result_path == "$":
+        return lambda context, result: (
+            result if isinstance(result, dict) else {"result": result}
+        )
+    sel = jsonpath.compile_path(result_path)
+    return lambda context, result: sel.put(context, result)
+
+
+# --------------------------------------------------------------------------
+# document-at-a-time tier: thin wrappers over the compiled tier, so there
+# is exactly ONE implementation of the semantics (external callers pay a
+# per-call template walk; JSONPath strings still hit the LRU cache)
+# --------------------------------------------------------------------------
+
+def evaluate_parameters(template: Any, context: Any) -> Any:
+    """Instantiate a Parameters template against the Context."""
+    return compile_parameters(template)(context)
 
 
 def state_input(context: Any, input_path: str | None, parameters: Any) -> Any:
     """Compute a state's effective input document."""
-    doc = context
-    if input_path:
-        doc = jsonpath.get(context, input_path)
-    if parameters is not None:
-        doc = evaluate_parameters(parameters, context if input_path is None else doc)
-    return copy.deepcopy(doc)
+    return compile_state_input(input_path, parameters)(context)
 
 
 def apply_result(context: dict, result_path: str | None, result: Any) -> dict:
@@ -68,10 +137,4 @@ def apply_result(context: dict, result_path: str | None, result: Any) -> dict:
     * ``"$"``   — result becomes the Context.
     * ``"$.x"`` — result is inserted at that path.
     """
-    if result_path is None:
-        return context
-    if result_path == "$":
-        if not isinstance(result, dict):
-            result = {"result": result}
-        return result
-    return jsonpath.put(context, result_path, result)
+    return compile_result_writer(result_path)(context, result)

@@ -23,14 +23,17 @@ EXPERIMENTS.md §Perf.
 
 from __future__ import annotations
 
+import copy
 import heapq
 import secrets
 import threading
+import traceback
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
 from . import actions as ap
-from . import asl, context as ctx
+from . import asl
 from .auth import Caller
 from .clock import Clock, MonotonicId, RealClock
 from .errors import (
@@ -50,6 +53,11 @@ RUN_FAILED = "FAILED"
 RUN_CANCELLED = "CANCELLED"
 #: stalled runs (paper §7: e.g. expired credentials) — kept, not terminal
 RUN_INACTIVE = "INACTIVE"
+
+#: ring-buffer cap on a run's in-memory event log (web-app Events tab).
+#: Long-lived runs (paper: "seconds to weeks") otherwise accumulate events
+#: without bound; beyond the cap the oldest events are dropped and counted.
+MAX_RUN_EVENTS = 256
 
 
 @dataclass
@@ -101,19 +109,37 @@ class Run:
     branch_index: int = 0
     parent_state: str | None = None
     children: "list[Run]" = field(default_factory=list)
+    #: one join per fan-out: concurrently completing children must not both
+    #: consume the Parallel join (double-transition); reset by _exec_parallel
+    join_claimed: bool = False
 
     # global submission order, stamped by EngineShardPool (0 = shard-internal)
     seq: int = 0
 
-    # events log (web-app Events tab, Fig 2c)
-    events: list[dict] = field(default_factory=list)
+    # events log (web-app Events tab, Fig 2c) — a bounded ring buffer:
+    # beyond MAX_RUN_EVENTS the oldest entries are dropped and counted
+    events: "deque[dict]" = field(
+        default_factory=lambda: deque(maxlen=MAX_RUN_EVENTS)
+    )
+    events_dropped: int = 0
     # invoked on terminal status (flow-as-action composition, watchers)
     completion_callbacks: list[Callable[["Run"], None]] = field(default_factory=list)
+
+    # -- delta journaling (engine-internal bookkeeping) ---------------------
+    #: context-patch ops applied since the last journaled transition record
+    pending_patch: list[dict] = field(default_factory=list)
+    #: False until a record carrying the full context has been journaled
+    #: (parallel branch children have no run_created record of their own)
+    context_journaled: bool = False
+    #: delta records since the last full-context record (snapshot cadence)
+    patch_records: int = 0
 
     lock: threading.RLock = field(default_factory=threading.RLock)
     done: threading.Event = field(default_factory=threading.Event)
 
     def log_event(self, t: float, code: str, **details: Any) -> None:
+        if len(self.events) == self.events.maxlen:
+            self.events_dropped += 1
         self.events.append({"time": t, "code": code, "details": details})
 
     def as_status(self) -> dict:
@@ -126,6 +152,7 @@ class Run:
             "creator": self.creator,
             "start_time": self.start_time,
             "completion_time": self.completion_time,
+            "events_dropped": self.events_dropped,
             "details": (
                 {"output": self.context}
                 if self.status == RUN_SUCCEEDED
@@ -245,11 +272,20 @@ class FlowEngine:
         polling: PollingPolicy | None = None,
         max_workers: int = 8,
         start_threads: bool | None = None,
+        delta_journal: bool = True,
+        snapshot_every: int = 64,
     ):
         self.registry = registry
         self.clock = clock or RealClock()
         self.journal = journal or Journal()
         self.polling = polling or PollingPolicy()
+        #: delta-encode transition records: journal the paths a state wrote
+        #: (``context_patch``) instead of the full run context, with a full
+        #: ``run_snapshot`` record every ``snapshot_every`` delta records.
+        #: ``delta_journal=False`` restores the full-context-per-record
+        #: baseline (measured by benchmarks/fig_transition_overhead.py).
+        self.delta_journal = delta_journal
+        self.snapshot_every = max(1, snapshot_every)
         self.scheduler = Scheduler(self.clock)
         self.runs: dict[str, Run] = {}
         self._lock = threading.RLock()
@@ -288,8 +324,6 @@ class FlowEngine:
         try:
             fn()
         except Exception:  # never kill the pool on a bug; runs fail instead
-            import traceback
-
             traceback.print_exc()
 
     def shutdown(self) -> None:
@@ -330,6 +364,7 @@ class FlowEngine:
             manage_by=set(manage_by or ()),
             context=dict(flow_input),
             start_time=self.clock.now(),
+            context_journaled=True,  # run_created carries the full input
         )
         with self._lock:
             self.runs[run.run_id] = run
@@ -403,6 +438,78 @@ class FlowEngine:
         )
         return run
 
+    # ------------------------------------------------- delta journaling
+    def _record_patch(self, run: Run, op: dict) -> None:
+        """Queue one context-patch op for the next transition record.
+
+        Callers hold ``run.lock`` and have already applied the op to
+        ``run.context``; in full-context mode the record itself carries the
+        whole context, so nothing is queued.
+        """
+        if self.delta_journal:
+            run.pending_patch.append(op)
+
+    def _apply_result(
+        self,
+        run: Run,
+        writer: Callable[[dict, Any], dict],
+        result_path: str | None,
+        result: Any,
+    ) -> None:
+        """Apply a compiled ResultPath writer and queue the matching patch op.
+
+        Callers hold ``run.lock``.  ``result_path is None`` discards the
+        result (no context change, no patch).
+        """
+        run.context = writer(run.context, result)
+        if result_path is None or not self.delta_journal:
+            return
+        if result_path == "$":
+            # the writer may have wrapped a non-dict result
+            run.pending_patch.append({"op": "replace", "value": run.context})
+        else:
+            run.pending_patch.append(
+                {"op": "put", "path": result_path, "value": result}
+            )
+
+    def _journal_transition(self, run: Run, record: dict) -> None:
+        """Append a transition record with its context payload.
+
+        Full-context mode (``delta_journal=False``, the pre-delta baseline)
+        embeds the entire run context in every record.  Delta mode embeds
+        only ``context_patch`` — the ops applied since the previous record —
+        and emits a full ``run_snapshot`` record every ``snapshot_every``
+        delta records so replay never chases an unboundedly long patch
+        chain between checkpoints.  A run whose context has never been
+        journaled (a Parallel branch child, which has no ``run_created``
+        record) gets a full context on its first record so replay has a
+        baseline to patch.
+        """
+        snapshot = False
+        with run.lock:
+            if not self.delta_journal or not run.context_journaled:
+                record["context"] = run.context
+                run.context_journaled = True
+                run.pending_patch = []
+                run.patch_records = 0
+            else:
+                record["context_patch"] = run.pending_patch
+                run.pending_patch = []
+                run.patch_records += 1
+                if run.patch_records >= self.snapshot_every:
+                    run.patch_records = 0
+                    snapshot = True
+        self.journal.append(record)
+        if snapshot:
+            self.journal.append(
+                {
+                    "type": "run_snapshot",
+                    "run_id": run.run_id,
+                    "context": run.context,
+                    "t": record["t"],
+                }
+            )
+
     # ----------------------------------------------------------- state machine
     def _enter_state(self, run: Run, state_name: str, attempt: int = 0) -> None:
         with run.lock:
@@ -419,15 +526,15 @@ class FlowEngine:
             self._run_failed(run, StateMachineError(f"unknown state {state_name}"))
             return
         now = self.clock.now()
-        self.journal.append(
+        self._journal_transition(
+            run,
             {
                 "type": "state_entered",
                 "run_id": run.run_id,
                 "state": state_name,
                 "attempt": attempt,
-                "context": run.context,
                 "t": now,
-            }
+            },
         )
         run.log_event(now, "StateEntered", state=state_name, kind=state.kind)
         try:
@@ -457,25 +564,29 @@ class FlowEngine:
         if state.result is not None:
             result = state.result
         elif state.parameters is not None or state.input_path:
-            result = ctx.state_input(run.context, state.input_path, state.parameters)
+            result = state.input_for(run.context)
         else:
             result = None
         if result is not None:
             with run.lock:
                 if state.result_path:
-                    run.context = ctx.apply_result(
-                        run.context, state.result_path, result
+                    self._apply_result(
+                        run, state.write_result, state.result_path, result
                     )
                 elif isinstance(result, dict):
                     # no ResultPath: merge into the long-lived run Context
                     run.context = {**run.context, **result}
+                    self._record_patch(run, {"op": "merge", "value": result})
                 else:
-                    run.context = ctx.apply_result(run.context, "$", result)
+                    run.context = {"result": result}
+                    self._record_patch(
+                        run, {"op": "replace", "value": run.context}
+                    )
         self._transition(run, state)
 
     def _exec_choice(self, run: Run, state: asl.State) -> None:
         for rule in state.choices:
-            if rule.evaluate(run.context):
+            if rule.compiled()(run.context):
                 self._goto(run, rule.next)
                 return
         if state.default:
@@ -484,13 +595,7 @@ class FlowEngine:
         raise StateMachineError(f"Choice {state.name}: no rule matched, no Default")
 
     def _exec_wait(self, run: Run, state: asl.State) -> None:
-        from . import jsonpath
-
-        seconds = (
-            state.seconds
-            if state.seconds is not None
-            else float(jsonpath.get(run.context, state.seconds_path))
-        )
+        seconds = state.wait_seconds(run.context)
         self.scheduler.call_later(seconds, lambda: self._transition(run, state))
 
     # -- Action states ----------------------------------------------------------
@@ -500,7 +605,7 @@ class FlowEngine:
             # lazy-attach: lets time-based providers fire completion
             # callbacks through this engine's scheduler (callback mode)
             provider.scheduler = self.scheduler
-        body = ctx.state_input(run.context, state.input_path, state.parameters)
+        body = state.input_for(run.context)
         caller = self._caller_for(run, state.run_as)
         request_id = f"{run.run_id}:{state.name}:{run.attempt}"
         now = self.clock.now()
@@ -680,12 +785,12 @@ class FlowEngine:
             "details": status.details,
         }
         with run.lock:
-            run.context = ctx.apply_result(run.context, state.result_path, result)
+            self._apply_result(run, state.write_result, state.result_path, result)
         self._transition(run, state)
 
     # -- Parallel ------------------------------------------------------------------
     def _exec_parallel(self, run: Run, state: asl.State) -> None:
-        branch_input = ctx.state_input(run.context, None, state.parameters)
+        branch_input = state.input_for(run.context)
         children: list[Run] = []
         for i, branch in enumerate(state.branches):
             child = Run(
@@ -705,6 +810,7 @@ class FlowEngine:
             children.append(child)
         with run.lock:
             run.children = children
+            run.join_claimed = False
         with self._lock:
             for child in children:
                 self.runs[child.run_id] = child
@@ -721,6 +827,14 @@ class FlowEngine:
             if parent.status != RUN_ACTIVE:
                 return
             statuses = [c.status for c in parent.children]
+            # claim the join atomically: two children completing on
+            # concurrent workers must not both transition the parent
+            if any(s == RUN_FAILED for s in statuses) or all(
+                s == RUN_SUCCEEDED for s in statuses
+            ):
+                if parent.join_claimed:
+                    return
+                parent.join_claimed = True
         if any(s == RUN_FAILED for s in statuses):
             for c in parent.children:
                 if c.status == RUN_ACTIVE:
@@ -737,8 +851,8 @@ class FlowEngine:
         if all(s == RUN_SUCCEEDED for s in statuses):
             results = [c.context for c in parent.children]
             with parent.lock:
-                parent.context = ctx.apply_result(
-                    parent.context, state.result_path, results
+                self._apply_result(
+                    parent, state.write_result, state.result_path, results
                 )
             self._transition(parent, state)
 
@@ -780,8 +894,8 @@ class FlowEngine:
                 if details is not None:
                     error_doc["Details"] = details
                 with run.lock:
-                    run.context = ctx.apply_result(
-                        run.context, rule.result_path, error_doc
+                    self._apply_result(
+                        run, rule.write_result, rule.result_path, error_doc
                     )
                 self._goto(run, rule.next)
                 return
@@ -799,15 +913,15 @@ class FlowEngine:
     # -- transitions -----------------------------------------------------------
     def _transition(self, run: Run, state: asl.State) -> None:
         now = self.clock.now()
-        self.journal.append(
+        self._journal_transition(
+            run,
             {
                 "type": "state_exited",
                 "run_id": run.run_id,
                 "state": state.name,
                 "next": state.next,
-                "context": run.context,
                 "t": now,
-            }
+            },
         )
         run.log_event(now, "StateExited", state=state.name, next=state.next)
         if state.end or state.next is None:
@@ -825,15 +939,15 @@ class FlowEngine:
             run.status = status
             run.completion_time = self.clock.now()
             run.current_state = None
-        self.journal.append(
+        self._journal_transition(
+            run,
             {
                 "type": "run_completed" if status != RUN_CANCELLED else "run_cancelled",
                 "run_id": run.run_id,
                 "status": status,
-                "context": run.context,
                 "error": run.error,
                 "t": run.completion_time,
-            }
+            },
         )
         run.log_event(run.completion_time, "FlowCompleted", status=status)
         with self._lock:
@@ -916,9 +1030,15 @@ class FlowEngine:
                 flow_id=image.flow_id,
                 creator=image.creator,
                 caller=None,
+                # deep copy: the image's context may alias a journal record
+                # (in-memory journals hand out the same dicts on every
+                # replay), and the resumed run patches its context in place
                 label=image.label,
-                context=image.context,
+                context=copy.deepcopy(image.context),
                 start_time=self.clock.now(),
+                # the replayed history already established a context
+                # baseline for this run; new records may patch against it
+                context_journaled=True,
             )
             with self._lock:
                 self.runs[run.run_id] = run

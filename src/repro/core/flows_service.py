@@ -30,6 +30,8 @@ from dataclasses import dataclass, field
 from . import asl, schema as jsonschema
 from .actions import (
     ACTIVE as AP_ACTIVE,
+    FAILED as AP_FAILED,
+    SUCCEEDED as AP_SUCCEEDED,
     ActionProvider,
     ActionRegistry,
     ActionStatus,
@@ -90,6 +92,8 @@ class FlowsService:
         group_commit: bool = True,
         compact_every: int | None = None,
         queues: QueueService | None = None,
+        delta_journal: bool = True,
+        snapshot_every: int = 64,
     ):
         self.clock = clock or RealClock()
         self.auth = auth
@@ -107,6 +111,8 @@ class FlowsService:
             compact_every=compact_every,
             polling=polling,
             max_workers=max_workers,
+            delta_journal=delta_journal,
+            snapshot_every=snapshot_every,
         )
         self._flows: dict[str, FlowRecord] = {}
         self._lock = threading.RLock()
@@ -539,8 +545,6 @@ class FlowActionProvider(ActionProvider):
         run = self.service.engine.get_run(run_id)
         if run.status == RUN_ACTIVE:
             return
-        from .actions import FAILED as AP_FAILED, SUCCEEDED as AP_SUCCEEDED
-
         if run.status == RUN_SUCCEEDED:
             self._complete(
                 action, AP_SUCCEEDED, details={"run_id": run_id, "output": run.context}

@@ -32,12 +32,15 @@ Two mechanisms keep durability cheap as flows age (see docs/durability.md):
 
 from __future__ import annotations
 
+import copy
 import io
 import json
 import os
 import threading
 import time
 from typing import Any, Callable, Iterator
+
+from . import jsonpath
 
 
 def segment_path(base_path: str, index: int, num_shards: int) -> str:
@@ -535,6 +538,10 @@ class RunImage:
         self.action_provider: str | None = None
         self.action_request_id: str | None = None
         self.records: list[dict] = []
+        #: False while ``context`` aliases a journal record (copy-on-write:
+        #: the first patch deep-copies, so patching never mutates a record
+        #: an in-memory journal still holds)
+        self._ctx_owned = True
 
     def to_state(self) -> dict:
         """Checkpoint serialization (the raw record list is history, not
@@ -547,7 +554,46 @@ class RunImage:
         for name in cls._STATE_FIELDS:
             if name in state:
                 setattr(image, name, state[name])
+        image._ctx_owned = False
         return image
+
+    def _set_context(self, value: Any) -> None:
+        """Adopt a full context from a record (the record keeps ownership)."""
+        self.context = value
+        self._ctx_owned = False
+
+    def _apply_patch(self, ops: list[dict]) -> None:
+        """Apply delta-encoded context ops (see docs/durability.md).
+
+        ``put`` writes a value at a JSONPath, ``replace`` swaps the whole
+        context, ``merge`` is the Pass-state root merge.  Values are
+        deep-copied on application so replayed state never aliases journal
+        records (an in-memory journal hands out the same dicts on every
+        ``records()`` pass).
+        """
+        for op in ops:
+            kind = op.get("op")
+            if kind == "replace":
+                self._set_context(op.get("value"))
+                continue
+            if not self._ctx_owned:
+                self.context = copy.deepcopy(self.context)
+                self._ctx_owned = True
+            if not isinstance(self.context, dict):
+                self.context = {}
+            if kind == "put":
+                jsonpath.put(
+                    self.context, op["path"], copy.deepcopy(op.get("value"))
+                )
+            elif kind == "merge":
+                self.context.update(copy.deepcopy(op.get("value") or {}))
+
+    def _context_from(self, rec: dict) -> None:
+        """Update ``context`` from a transition record (full or delta)."""
+        if "context" in rec:
+            self._set_context(rec["context"])
+        elif "context_patch" in rec:
+            self._apply_patch(rec["context_patch"])
 
     def apply(self, rec: dict) -> None:
         self.records.append(rec)
@@ -557,15 +603,16 @@ class RunImage:
             self.input = rec.get("input")
             self.creator = rec.get("creator", "anonymous")
             self.label = rec.get("label", "")
-            self.context = rec.get("input")
+            self._set_context(rec.get("input"))
         elif kind == "state_entered":
             self.current_state = rec["state"]
             self.attempt = rec.get("attempt", 0)
             self.action_id = None
             self.action_provider = None
             self.action_request_id = None
-            if "context" in rec:
-                self.context = rec["context"]
+            self._context_from(rec)
+        elif kind == "run_snapshot":
+            self._context_from(rec)
         elif kind == "action_started":
             self.action_id = rec.get("action_id")
             self.action_provider = rec.get("provider_url")
@@ -575,13 +622,14 @@ class RunImage:
             self.action_provider = None
             self.action_request_id = None
         elif kind == "state_exited":
-            self.context = rec.get("context", self.context)
+            self._context_from(rec)
             self.current_state = None
         elif kind == "run_completed":
             self.status = rec.get("status", "SUCCEEDED")
-            self.context = rec.get("context", self.context)
+            self._context_from(rec)
         elif kind == "run_cancelled":
             self.status = "CANCELLED"
+            self._context_from(rec)
 
 
 class SegmentView:

@@ -11,10 +11,23 @@ subset that the Flows service actually uses:
 
 plus *writes* (used by ``ResultPath``): intermediate objects are created as
 needed, mirroring ASL semantics.
+
+Two API tiers share one parser:
+
+* :func:`compile_path` returns a reusable :class:`Selector` — the accessor
+  list is parsed **once** and ``get``/``put``/``exists`` run straight off
+  it.  ``asl.parse`` pre-compiles every path a flow mentions into selectors
+  at publish time, so the engine's per-transition hot path never touches
+  the string parser.
+* the string functions (:func:`get`, :func:`put`, :func:`exists`) remain
+  for external callers as thin wrappers over an LRU-cached
+  :func:`compile_path`, so even ad-hoc string use re-parses a given path
+  at most once per process.
 """
 
 from __future__ import annotations
 
+from functools import lru_cache
 from typing import Any
 
 from .errors import StateMachineError
@@ -67,69 +80,115 @@ def parse(path: str) -> list[Any]:
     return out
 
 
-def get(doc: Any, path: str, default: Any = ...) -> Any:
-    """Resolve ``path`` against ``doc``.  Raises unless a default is given."""
-    cur = doc
-    for acc in parse(path):
-        try:
+_MISSING = ...
+
+
+class Selector:
+    """A compiled JSONPath: parse once, resolve many times.
+
+    Immutable and thread-safe (resolution only reads the accessor tuple),
+    so one selector compiled at flow-publish time serves every run of the
+    flow concurrently.
+    """
+
+    __slots__ = ("path", "accessors")
+
+    def __init__(self, path: str):
+        self.path = path
+        self.accessors: tuple[Any, ...] = tuple(parse(path))
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Selector({self.path!r})"
+
+    def get(self, doc: Any, default: Any = _MISSING) -> Any:
+        """Resolve this path against ``doc``.  Raises unless a default is given."""
+        cur = doc
+        for acc in self.accessors:
+            try:
+                if isinstance(acc, int):
+                    if not isinstance(cur, list):
+                        raise JSONPathError(f"{self.path}: indexing a non-list")
+                    cur = cur[acc]
+                else:
+                    if not isinstance(cur, dict):
+                        raise JSONPathError(
+                            f"{self.path}: member access on non-object"
+                        )
+                    cur = cur[acc]
+            except (KeyError, IndexError):
+                if default is not _MISSING:
+                    return default
+                raise JSONPathError(
+                    f"{self.path}: not present in context"
+                ) from None
+        return cur
+
+    def exists(self, doc: Any) -> bool:
+        return self.get(doc, default=_SENTINEL) is not _SENTINEL
+
+    def put(self, doc: Any, value: Any) -> Any:
+        """Write ``value`` at this path; returns the (possibly new) root.
+
+        ``$`` replaces the whole document (ASL ``ResultPath: "$"``
+        semantics).  Intermediate dicts are created; lists are extended
+        only by one element.
+        """
+        accs = self.accessors
+        if not accs:
+            return value
+        if not isinstance(doc, dict):
+            raise JSONPathError("context root must be an object")
+        cur = doc
+        for k in range(len(accs) - 1):
+            acc = accs[k]
+            nxt = accs[k + 1]
             if isinstance(acc, int):
-                if not isinstance(cur, list):
-                    raise JSONPathError(f"{path}: indexing a non-list")
+                if not isinstance(cur, list) or not -len(cur) <= acc < len(cur):
+                    raise JSONPathError(f"{self.path}: cannot traverse index {acc}")
+                if not isinstance(cur[acc], (dict, list)):
+                    cur[acc] = {} if isinstance(nxt, str) else []
                 cur = cur[acc]
             else:
                 if not isinstance(cur, dict):
-                    raise JSONPathError(f"{path}: member access on non-object")
+                    raise JSONPathError(f"{self.path}: member access on non-object")
+                if acc not in cur or not isinstance(cur[acc], (dict, list)):
+                    cur[acc] = {} if isinstance(nxt, str) else []
                 cur = cur[acc]
-        except (KeyError, IndexError):
-            if default is not ...:
-                return default
-            raise JSONPathError(f"{path}: not present in context") from None
-    return cur
+        last = accs[-1]
+        if isinstance(last, int):
+            if not isinstance(cur, list):
+                raise JSONPathError(f"{self.path}: indexing a non-list")
+            if last == len(cur):
+                cur.append(value)
+            elif -len(cur) <= last < len(cur):
+                cur[last] = value
+            else:
+                raise JSONPathError(f"{self.path}: index {last} out of range")
+        else:
+            if not isinstance(cur, dict):
+                raise JSONPathError(f"{self.path}: member access on non-object")
+            cur[last] = value
+        return doc
+
+
+_SENTINEL = object()
+
+
+@lru_cache(maxsize=4096)
+def compile_path(path: str) -> Selector:
+    """Compile (and memoize) a JSONPath string into a :class:`Selector`."""
+    return Selector(path)
+
+
+def get(doc: Any, path: str, default: Any = ...) -> Any:
+    """Resolve ``path`` against ``doc``.  Raises unless a default is given."""
+    return compile_path(path).get(doc, default)
 
 
 def exists(doc: Any, path: str) -> bool:
-    sentinel = object()
-    return get(doc, path, default=sentinel) is not sentinel
+    return compile_path(path).exists(doc)
 
 
 def put(doc: Any, path: str, value: Any) -> Any:
-    """Write ``value`` at ``path``; returns the (possibly new) root.
-
-    ``$`` replaces the whole document (ASL ``ResultPath: "$"`` semantics).
-    Intermediate dicts are created; lists are extended only by one element.
-    """
-    accs = parse(path)
-    if not accs:
-        return value
-    if not isinstance(doc, dict):
-        raise JSONPathError("context root must be an object")
-    cur = doc
-    for k, acc in enumerate(accs[:-1]):
-        nxt = accs[k + 1]
-        if isinstance(acc, int):
-            if not isinstance(cur, list) or not -len(cur) <= acc < len(cur):
-                raise JSONPathError(f"{path}: cannot traverse index {acc}")
-            if not isinstance(cur[acc], (dict, list)):
-                cur[acc] = {} if isinstance(nxt, str) else []
-            cur = cur[acc]
-        else:
-            if not isinstance(cur, dict):
-                raise JSONPathError(f"{path}: member access on non-object")
-            if acc not in cur or not isinstance(cur[acc], (dict, list)):
-                cur[acc] = {} if isinstance(nxt, str) else []
-            cur = cur[acc]
-    last = accs[-1]
-    if isinstance(last, int):
-        if not isinstance(cur, list):
-            raise JSONPathError(f"{path}: indexing a non-list")
-        if last == len(cur):
-            cur.append(value)
-        elif -len(cur) <= last < len(cur):
-            cur[last] = value
-        else:
-            raise JSONPathError(f"{path}: index {last} out of range")
-    else:
-        if not isinstance(cur, dict):
-            raise JSONPathError(f"{path}: member access on non-object")
-        cur[last] = value
-    return doc
+    """Write ``value`` at ``path``; returns the (possibly new) root."""
+    return compile_path(path).put(doc, value)

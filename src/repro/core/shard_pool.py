@@ -169,6 +169,8 @@ class EngineShardPool:
         polling: PollingPolicy | None = None,
         max_workers: int = 8,
         start_threads: bool | None = None,
+        delta_journal: bool = True,
+        snapshot_every: int = 64,
     ):
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
@@ -214,6 +216,8 @@ class EngineShardPool:
                     polling=polling,
                     max_workers=max_workers,
                     start_threads=start_threads,
+                    delta_journal=delta_journal,
+                    snapshot_every=snapshot_every,
                 )
             )
         self.scheduler = PoolScheduler([e.scheduler for e in self.engines], self.clock)

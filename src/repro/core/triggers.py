@@ -45,6 +45,7 @@ router for existing callers.
 
 from __future__ import annotations
 
+import ast
 import secrets
 import threading
 from dataclasses import dataclass, field
@@ -94,7 +95,13 @@ class Trigger:
         }
     )
     recent_results: list[Any] = field(default_factory=list)
+    #: predicate compiled once (closure tree; no per-event ast walk)
     _compiled: Any = None
+    #: transform compiled once; None when any expression fails to compile
+    #: (then _handle falls back to per-message transform() so the bad
+    #: expression surfaces as a per-event permanent-error disposition,
+    #: exactly like before — recovery must not die on a bad transform)
+    _transform: Any = None
 
 
 class _QueueSub:
@@ -177,7 +184,23 @@ class EventRouter:
             owner=owner,
             interval=config.poll_min_s,
         )
-        trig._compiled = predlang.compile_expr(config.predicate)
+        try:
+            trig._compiled = predlang.compile_expr(config.predicate)
+        except predlang.PredicateError as exc:
+            try:
+                ast.parse(config.predicate, mode="eval")
+            except (SyntaxError, TypeError):
+                # unparseable predicates fail at create, as always
+                raise exc from None
+            # parseable but whitelist-violating: the parse-only compiler
+            # accepted (and journaled) these, discarding every event at
+            # match time — keep that per-event behaviour so recover() of
+            # an old journal never dies on one bad trigger
+            trig._compiled = config.predicate
+        try:
+            trig._transform = predlang.compile_transform(config.transform)
+        except predlang.PredicateError:
+            trig._transform = None  # surface per-message, not at create
         with self._lock:
             if trig.trigger_id in self._triggers:
                 raise ValueError(f"duplicate trigger id {trig.trigger_id!r}")
@@ -567,7 +590,10 @@ class EventRouter:
             return "discarded"
         trig.stats["matched"] += 1
         try:
-            action_input = predlang.transform(trig.config.transform, props)
+            if trig._transform is not None:
+                action_input = trig._transform(props)
+            else:
+                action_input = predlang.transform(trig.config.transform, props)
         except predlang.PredicateError as e:
             # permanent: the same message can never transform differently
             trig.stats["errors"] += 1

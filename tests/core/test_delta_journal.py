@@ -1,0 +1,470 @@
+"""Delta-encoded journaling: patch-replay ≡ snapshot-replay (invariant 7).
+
+The delta journal's contract (docs/ARCHITECTURE.md invariant 7): a
+transition record carrying ``context_patch`` ops is *defined* to replay to
+exactly the context a full-context record would have carried, so a
+delta-encoded segment and a full-snapshot segment of the same execution
+must reconstruct identical :class:`~repro.core.journal.RunImage`s — across
+random flows, crash injection at group-commit batch boundaries, and
+compact → crash → recover cycles.
+"""
+
+import json
+import random
+
+import pytest
+
+from repro.core import asl
+from repro.core.actions import ActionRegistry
+from repro.core.clock import VirtualClock
+from repro.core.engine import RUN_ACTIVE, RUN_SUCCEEDED, FlowEngine
+from repro.core.journal import (
+    Journal,
+    JournalCrashed,
+    SimulatedCrash,
+    replay,
+)
+from repro.core.providers import EchoProvider, SleepProvider
+from repro.testing import hypothesis_shim
+
+given, settings, st = hypothesis_shim()
+
+
+def make_engine(journal: Journal, delta: bool = True, **kwargs) -> FlowEngine:
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    registry.register(SleepProvider(clock=clock))
+    return FlowEngine(
+        registry, clock=clock, journal=journal, delta_journal=delta, **kwargs
+    )
+
+
+# ------------------------------------------------------------ flow generator
+
+def random_flow(rng: random.Random, min_states: int = 3, max_states: int = 9):
+    """A random linear flow exercising every context-write shape.
+
+    States may *fail* (e.g. a Parameters reference into a context a
+    previous state replaced) — that is part of the property: a delta and a
+    full engine must agree on failures exactly as on successes.
+    """
+    n = rng.randint(min_states, max_states)
+    states = {}
+    for i in range(n):
+        name = f"S{i}"
+        nxt = f"S{i + 1}" if i + 1 < n else None
+        kind = rng.choice(
+            ["put", "nested_put", "merge", "scalar", "params", "choice",
+             "wait", "action", "noop"]
+        )
+        if kind == "put":
+            doc = {"Type": "Pass", "Result": {"v": rng.randint(0, 99)},
+                   "ResultPath": f"$.w{rng.randint(0, 3)}"}
+        elif kind == "nested_put":
+            doc = {"Type": "Pass", "Result": rng.randint(0, 99),
+                   "ResultPath": f"$.nest.n{rng.randint(0, 2)}.leaf"}
+        elif kind == "merge":
+            doc = {"Type": "Pass",
+                   "Result": {f"m{rng.randint(0, 3)}": rng.randint(0, 99)}}
+        elif kind == "scalar":
+            # no ResultPath + non-dict Result: replaces the whole context
+            doc = {"Type": "Pass", "Result": rng.randint(0, 99),
+                   "ResultPath": "$" if rng.random() < 0.5 else None}
+            if doc["ResultPath"] is None:
+                del doc["ResultPath"]
+        elif kind == "params":
+            doc = {"Type": "Pass",
+                   "Parameters": {"copied.$": "$.seed",
+                                  "lit": f"x{rng.randint(0, 9)}"},
+                   "ResultPath": f"$.p{i}"}
+        elif kind == "choice":
+            doc = {"Type": "Choice",
+                   "Choices": [{"Variable": "$.seed",
+                                "NumericGreaterThan": rng.randint(0, 9),
+                                "Next": nxt or name}],
+                   "Default": nxt or name}
+            if nxt is None:  # a Choice cannot End; append a sink state
+                nxt = f"S{n}"
+                states[nxt] = {"Type": "Pass", "End": True}
+                doc["Choices"][0]["Next"] = nxt
+                doc["Default"] = nxt
+            states[name] = doc
+            continue
+        elif kind == "wait":
+            doc = {"Type": "Wait", "Seconds": round(rng.random(), 3)}
+        elif kind == "action":
+            doc = {"Type": "Action", "ActionUrl": "ap://echo",
+                   "Parameters": {"echo_string": f"e{i}"},
+                   "ResultPath": f"$.a{i}"}
+        else:
+            doc = {"Type": "Pass"}
+        if nxt is None:
+            doc["End"] = True
+        else:
+            doc["Next"] = nxt
+        states[name] = doc
+    return asl.parse({"StartAt": "S0", "States": states})
+
+
+def run_workload(engine: FlowEngine, flow, runs: int, seed: int):
+    for i in range(runs):
+        engine.start_run(
+            flow,
+            {"seed": seed % 10, "data": {"k": [1, 2, 3]}},
+            flow_id="f",
+            run_id=f"run-{i:03d}",
+        )
+    engine.scheduler.drain(until=100.0)
+
+
+def canon(doc):
+    """Normalize random per-process action ids for cross-engine equality."""
+    if isinstance(doc, dict):
+        return {
+            k: ("<action>" if k == "action_id" else canon(v))
+            for k, v in doc.items()
+        }
+    if isinstance(doc, list):
+        return [canon(v) for v in doc]
+    return doc
+
+
+def image_view(journal: Journal) -> dict:
+    return {
+        rid: (image.status, image.current_state, canon(image.context))
+        for rid, image in replay(journal).items()
+    }
+
+
+# ----------------------------------------------------- property: equivalence
+
+@settings(max_examples=30)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_delta_replay_equals_full_replay(seed):
+    """Random flows: a delta segment and a full segment of the same
+    execution replay to identical images, and the live engines agree on
+    every outcome (success, failure, and final context)."""
+    rng = random.Random(seed)
+    flow = random_flow(rng)
+    runs = rng.randint(1, 4)
+
+    full_journal, delta_journal = Journal(), Journal()
+    full = make_engine(full_journal, delta=False)
+    delta = make_engine(delta_journal, delta=True, snapshot_every=5)
+    run_workload(full, flow, runs, seed)
+    run_workload(delta, flow, runs, seed)
+
+    for i in range(runs):
+        a = full.get_run(f"run-{i:03d}")
+        b = delta.get_run(f"run-{i:03d}")
+        assert a.status == b.status
+        assert canon(a.context) == canon(b.context)
+        assert canon(a.error) == canon(b.error)
+
+    assert image_view(full_journal) == image_view(delta_journal)
+
+
+@settings(max_examples=10)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_recovery_from_delta_segment_matches_full(seed):
+    """A crash mid-flight recovers identically from either encoding.
+
+    Both engines execute the same deterministic event sequence, so cutting
+    both drains after the same number of events crashes them at the same
+    logical point; recovery from the delta segment must then agree with
+    recovery from the full segment run for run.
+    """
+    import os
+    import shutil
+    import tempfile
+
+    rng = random.Random(seed)
+    flow = random_flow(rng)
+    cut = rng.randint(1, 40)
+    base = tempfile.mkdtemp(prefix="delta_vs_full_")
+    try:
+        outcomes = {}
+        for mode, delta in (("full", False), ("delta", True)):
+            path = os.path.join(base, f"{mode}.jsonl")
+            engine = make_engine(Journal(path), delta=delta, snapshot_every=4)
+            for i in range(3):
+                engine.start_run(
+                    flow,
+                    {"seed": seed % 10, "data": {"k": [1, 2, 3]}},
+                    flow_id="f",
+                    run_id=f"run-{i:03d}",
+                )
+            engine.scheduler.drain(until=100.0, max_events=cut)  # "crash"
+            engine.journal.close()
+            # the restarted process
+            engine2 = make_engine(Journal(path), delta=delta)
+            resumed = engine2.recover({"f": flow})
+            engine2.scheduler.drain(until=200.0)
+            outcomes[mode] = (
+                sorted(r.run_id for r in resumed),
+                {r.run_id: (r.status, canon(r.context), canon(r.error))
+                 for r in engine2.runs.values()},
+            )
+        assert outcomes["full"] == outcomes["delta"]
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+# ------------------------------------------------------- snapshot cadence
+
+def test_run_snapshot_cadence_bounds_patch_chains(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    engine = make_engine(Journal(path), delta=True, snapshot_every=6)
+    chain = {
+        "StartAt": "S0",
+        "States": {
+            f"S{i}": {
+                "Type": "Pass", "Result": {"v": i}, "ResultPath": f"$.w{i}",
+                **({"Next": f"S{i + 1}"} if i < 19 else {"End": True}),
+            }
+            for i in range(20)
+        },
+    }
+    flow = asl.parse(chain)
+    run = engine.start_run(flow, {"seed": 1}, flow_id="f", run_id="r")
+    engine.run_to_completion(run.run_id)
+
+    kinds = [r["type"] for r in Journal(path).records()]
+    # 20 states x (entered + exited) + run_created + run_completed,
+    # snapshotted every 6 delta records
+    assert kinds.count("run_snapshot") >= 5
+    # no delta record chain exceeds the cadence between full contexts
+    gap = 0
+    for rec in Journal(path).records():
+        if "context" in rec:
+            gap = 0
+        elif "context_patch" in rec:
+            gap += 1
+            assert gap <= 6
+    image = replay(Journal(path))["r"]
+    assert image.status == RUN_SUCCEEDED
+    assert image.context == run.context
+
+
+def test_delta_segment_is_smaller_for_large_contexts(tmp_path):
+    blob = {"blob": "x" * 20000, "seed": 1}
+    chain = asl.parse({
+        "StartAt": "A",
+        "States": {
+            "A": {"Type": "Pass", "Result": {"v": 1}, "ResultPath": "$.a",
+                  "Next": "B"},
+            "B": {"Type": "Pass", "End": True},
+        },
+    })
+    sizes = {}
+    for mode, delta in (("full", False), ("delta", True)):
+        path = str(tmp_path / f"{mode}.jsonl")
+        engine = make_engine(Journal(path), delta=delta)
+        run = engine.start_run(chain, dict(blob), flow_id="f", run_id="r")
+        engine.run_to_completion(run.run_id)
+        engine.journal.close()
+        sizes[mode] = sum(len(line) for line in open(path, "rb"))
+    # run_created carries the 20KB input either way; the 4 transition
+    # records carry it only in full mode
+    assert sizes["delta"] * 3 < sizes["full"]
+
+
+# --------------------------------------------- parallel children (no baseline)
+
+def test_parallel_branch_children_get_full_context_baseline(tmp_path):
+    """Branch children have no run_created record; their first transition
+    record must carry a full context so replay has a patch baseline."""
+    path = str(tmp_path / "j.jsonl")
+    flow = asl.parse({
+        "StartAt": "Fan",
+        "States": {
+            "Fan": {
+                "Type": "Parallel",
+                "Parameters": {"n.$": "$.seed"},
+                "ResultPath": "$.branches",
+                "Branches": [
+                    {"StartAt": "L", "States": {
+                        "L": {"Type": "Pass", "Result": {"left": 1},
+                              "ResultPath": "$.out", "End": True}}},
+                    {"StartAt": "R", "States": {
+                        "R": {"Type": "Pass", "Result": {"right": 2},
+                              "ResultPath": "$.out", "End": True}}},
+                ],
+                "End": True,
+            }
+        },
+    })
+    engine = make_engine(Journal(path), delta=True)
+    run = engine.start_run(flow, {"seed": 7}, flow_id="f", run_id="r")
+    engine.run_to_completion(run.run_id)
+    assert run.status == RUN_SUCCEEDED
+
+    images = replay(Journal(path))
+    assert images["r.b0"].context == {"n": 7, "out": {"left": 1}}
+    assert images["r.b1"].context == {"n": 7, "out": {"right": 2}}
+    assert images["r"].context["branches"] == [
+        {"n": 7, "out": {"left": 1}}, {"n": 7, "out": {"right": 2}},
+    ]
+
+
+# ------------------------------------- crash injection at batch boundaries
+
+CHAIN = {
+    "StartAt": "A",
+    "States": {
+        "A": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string.$": "$.msg"},
+              "ResultPath": "$.a", "Next": "Mark"},
+        "Mark": {"Type": "Pass", "Result": {"marked": True},
+                 "ResultPath": "$.mark", "Next": "B"},
+        "B": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string.$": "$.a.details.echo_string"},
+              "ResultPath": "$.b", "End": True},
+    },
+}
+
+
+def _reference_outcomes():
+    engine = make_engine(Journal(), delta=True)
+    chain = asl.parse(CHAIN)
+    for i in range(8):
+        engine.start_run(chain, {"msg": f"m{i}"}, flow_id="flow",
+                         run_id=f"run-{i:04d}")
+    engine.scheduler.drain()
+    return {
+        rid: (run.status, canon(run.context))
+        for rid, run in engine.runs.items()
+    }
+
+
+@pytest.mark.parametrize("phase", ["pre-write", "post-write", "post-fsync"])
+@pytest.mark.parametrize("crash_after", [0, 2, 5, 11, 23])
+def test_delta_crash_at_batch_boundary_recovers_to_reference(
+    phase, crash_after, tmp_path
+):
+    """Kill a delta-journaling engine at a group-commit batch boundary:
+    every journaled run must recover — patches replayed over its baseline —
+    to the uninterrupted reference outcome."""
+    reference = _reference_outcomes()
+    path = str(tmp_path / "j.jsonl")
+    state = {"batches": 0}
+
+    def hook(p: str, batch: list) -> None:
+        if p != phase:
+            return
+        state["batches"] += 1
+        if state["batches"] > crash_after:
+            raise SimulatedCrash(f"killed at {phase} #{state['batches']}")
+
+    engine1 = make_engine(
+        Journal(path, fault_hook=hook), delta=True, snapshot_every=3
+    )
+    chain = asl.parse(CHAIN)
+    try:
+        for i in range(8):
+            engine1.start_run(chain, {"msg": f"m{i}"}, flow_id="flow",
+                              run_id=f"run-{i:04d}")
+        engine1.scheduler.drain()
+    except (SimulatedCrash, JournalCrashed):
+        pass
+
+    images = replay(Journal(path))
+    engine2 = make_engine(Journal(path), delta=True)
+    resumed = engine2.recover({"flow": chain})
+    engine2.scheduler.drain()
+
+    assert {r.run_id for r in resumed} == {
+        rid for rid, image in images.items() if image.status == RUN_ACTIVE
+    }
+    for rid, image in images.items():
+        ref_status, ref_context = reference[rid]
+        assert ref_status == RUN_SUCCEEDED
+        if image.status == RUN_ACTIVE:
+            run = engine2.get_run(rid)
+            assert run.status == ref_status, (
+                f"{rid} diverged after {phase} crash: {run.status}"
+            )
+            assert canon(run.context) == ref_context
+        else:
+            assert image.status == ref_status
+            assert canon(image.context) == ref_context
+
+
+# --------------------------------------------- compact -> crash -> recover
+
+def test_compact_crash_recover_cycle_with_patches(tmp_path):
+    """Patches straddling a checkpoint: compaction collapses the patched
+    history into full images, a post-compaction crash keeps the tail, and
+    recovery agrees with the uninterrupted reference."""
+    reference = _reference_outcomes()
+    path = str(tmp_path / "j.jsonl")
+
+    engine = make_engine(Journal(path), delta=True, snapshot_every=3)
+    chain = asl.parse(CHAIN)
+    for i in range(4):  # first half completes, then is compacted away
+        engine.start_run(chain, {"msg": f"m{i}"}, flow_id="flow",
+                         run_id=f"run-{i:04d}")
+    engine.scheduler.drain()
+    engine.compact()
+    # checkpoint contexts must already equal the reference (patch replay
+    # happened inside compact())
+    for rec in Journal(path).records():
+        assert rec["type"] == "checkpoint"
+
+    # second half: parks mid-flight when the journal "crashes"
+    state = {"appends": 0}
+
+    def hook(p: str, batch: list) -> None:
+        if p == "post-fsync":
+            state["appends"] += 1
+            if state["appends"] > 12:
+                raise SimulatedCrash("post-compaction crash")
+
+    engine2 = make_engine(
+        Journal(path, fault_hook=hook), delta=True, snapshot_every=3
+    )
+    try:
+        for i in range(4, 8):
+            engine2.start_run(chain, {"msg": f"m{i}"}, flow_id="flow",
+                              run_id=f"run-{i:04d}")
+        engine2.scheduler.drain()
+    except (SimulatedCrash, JournalCrashed):
+        pass
+
+    images = replay(Journal(path))
+    engine3 = make_engine(Journal(path), delta=True)
+    engine3.recover({"flow": chain})
+    engine3.scheduler.drain()
+    for rid, image in images.items():
+        ref_status, ref_context = reference[rid]
+        if image.status == RUN_ACTIVE:
+            run = engine3.get_run(rid)
+            assert (run.status, canon(run.context)) == (ref_status, ref_context)
+        else:
+            assert (image.status, canon(image.context)) == (
+                ref_status, ref_context
+            )
+
+
+# ------------------------------------------------- record-shape assertions
+
+def test_noop_transition_records_carry_empty_patches(tmp_path):
+    """The hot-path payoff: a no-op state journals bytes independent of
+    context size (an empty patch, not a context copy)."""
+    path = str(tmp_path / "j.jsonl")
+    engine = make_engine(Journal(path), delta=True)
+    flow = asl.parse({"StartAt": "N",
+                      "States": {"N": {"Type": "Pass", "End": True}}})
+    run = engine.start_run(flow, {"blob": "x" * 10000}, flow_id="f",
+                           run_id="r")
+    engine.run_to_completion(run.run_id)
+    with open(path) as fh:
+        records = [json.loads(line) for line in fh]
+    by_type = {r["type"]: r for r in records}
+    assert by_type["state_entered"]["context_patch"] == []
+    assert by_type["state_exited"]["context_patch"] == []
+    assert by_type["run_completed"]["context_patch"] == []
+    assert "context" not in by_type["state_entered"]
+    # only run_created carries the input
+    assert by_type["run_created"]["input"]["blob"] == "x" * 10000

@@ -393,6 +393,51 @@ def test_recovery_survives_vanished_queue(tmp_path):
     assert invoked == [9]  # the surviving trigger still flows
 
 
+def test_recovery_survives_whitelist_violating_predicate(tmp_path):
+    """The parse-only compiler journaled triggers whose predicates violate
+    the whitelist (they just discarded every event at match time); recovery
+    of such a journal must restore them — still discarding — and must not
+    abort before the valid triggers behind them."""
+    journal_path = str(tmp_path / "journal.jsonl")
+    clock = VirtualClock()
+    queues = QueueService(clock=clock)
+    q = queues.create_queue("events")
+    # hand-write the journal an old (parse-only) process would have left:
+    # a parseable but whitelist-violating predicate, then a valid trigger
+    journal = Journal(journal_path)
+    for tid, pred in (("trig-bad", "[f for f in files]"),
+                      ("trig-good", "n > 1")):
+        journal.append({"type": "trigger_created", "trigger_id": tid,
+                        "queue_id": q.queue_id, "predicate": pred,
+                        "transform": {"n": "n"}, "action_ref": "",
+                        "owner": "o", "t": 0.0})
+        journal.append({"type": "trigger_enabled", "trigger_id": tid,
+                        "t": 0.0})
+    journal.close()
+
+    scheduler = Scheduler(clock)
+    router = EventRouter(queues, clock=clock, scheduler=scheduler,
+                         journal=Journal(journal_path))
+    invoked = []
+    recovered = router.recover(
+        lambda image: (lambda b, c: invoked.append((image.trigger_id,
+                                                    b.get("n"))) or "r")
+    )
+    assert {t.trigger_id for t in recovered} == {"trig-bad", "trig-good"}
+    queues.send(q.queue_id, {"n": 9, "files": ["a"]})
+    scheduler.drain(until=100.0)
+    # the valid trigger fires; the bad predicate discards, as it always did
+    assert invoked == [("trig-good", 9)]
+    assert router.get("trig-bad").stats["discarded"] == 1
+
+    # genuinely unparseable predicates still fail at create time
+    with pytest.raises(Exception):
+        router.create_trigger(TriggerConfig(
+            queue_id=q.queue_id, predicate="n >",
+            action_invoker=lambda b, c: "r",
+        ))
+
+
 def test_recovery_dedups_inflight_invocations(tmp_path):
     """Crash after an invocation but before the ack: the journaled
     ack-progress prevents a duplicate invocation on redelivery."""
