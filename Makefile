@@ -11,7 +11,7 @@ export REPRO_PYTHONPATH := src:.
 ARGS ?=
 
 .PHONY: check bench bench-quick bench-nightly shards fanout recovery \
-        overhead durability xfail-guard regression-gate baseline
+        overhead map durability xfail-guard regression-gate baseline
 
 check:
 	./scripts/check.sh
@@ -26,7 +26,7 @@ bench-quick:
 # benchmarks/results/, gated against the checked-in baseline
 bench-nightly:
 	PYTHONPATH=$(REPRO_PYTHONPATH) python -m benchmarks.run --quick \
-	  --only shards,fanout,recovery,overhead $(ARGS)
+	  --only shards,fanout,recovery,overhead,map $(ARGS)
 
 shards:
 	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/shard_scaling.py $(ARGS)
@@ -40,12 +40,15 @@ recovery:
 overhead:
 	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/fig_transition_overhead.py $(ARGS)
 
+map:
+	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/fig_map_fanout.py $(ARGS)
+
 # crash-point / fault-injection durability suite (CI runs it as its own
 # job with REPRO_TEST_SHARDS=4 and a dedicated timeout)
 durability:
 	PYTHONPATH=$(REPRO_PYTHONPATH) python -m pytest -q \
 	  tests/core/test_group_commit.py tests/core/test_compaction.py \
-	  tests/core/test_delta_journal.py \
+	  tests/core/test_delta_journal.py tests/core/test_map.py \
 	  tests/core/test_recovery.py tests/core/test_shard_pool.py \
 	  tests/core/test_queue_properties.py tests/core/test_event_router.py
 

@@ -80,6 +80,25 @@ def collect_metrics() -> dict[str, dict]:
             "value": longest["speedup"], "higher_is_better": True,
         }
 
+    # Map fan-out: gate throughput and the bounded-vs-unbounded live-state
+    # reduction at the acceptance-criteria cell (10k items, window 16);
+    # window_ok is a hard invariant (1.0 or the benchmark itself asserts)
+    mapfan = _load("fig_map_fanout") or []
+    for row in mapfan:
+        if row["items"] == 10_000 and row["max_concurrency"] == 16:
+            metrics["fig_map_fanout/items=10000,window=16/items_per_s"] = {
+                "value": row["items_per_s"], "higher_is_better": True,
+            }
+            if "table_reduction_vs_unbounded" in row:
+                metrics["fig_map_fanout/table_reduction_vs_unbounded"] = {
+                    "value": row["table_reduction_vs_unbounded"],
+                    "higher_is_better": True,
+                }
+            metrics["fig_map_fanout/window_ok"] = {
+                "value": 1.0 if row.get("window_ok") else 0.0,
+                "higher_is_better": True,
+            }
+
     # per-transition overhead: gate the delta-journal throughput win and
     # the journal write-amplification reduction at the 32 KB context point
     # (the headline cell of benchmarks/fig_transition_overhead.py)

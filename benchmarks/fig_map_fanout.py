@@ -1,0 +1,168 @@
+"""Map fan-out: throughput vs item count × MaxConcurrency, flat live memory.
+
+The paper's flagship flows are per-item fan-outs over run-time-sized
+collections ("for each new detector frame: transfer, analyze, catalog").
+The ``Map`` state executes them with a **sliding admission window**
+(docs/ARCHITECTURE.md invariant 8): at most ``MaxConcurrency`` child runs
+exist at once, each completion admits the next item, and completed
+children are dropped from the run table — so live engine state is
+O(window) while only the ordered results list is O(items).
+
+Method: one Map run per cell over ``items`` echo-action iterations on a
+VirtualClock, sweeping item count × ``MaxConcurrency`` (0 = unbounded, the
+"materialize everything" baseline).  Each cell records items/s, the exact
+peak live-child count (must never exceed the window — asserted here and
+property-tested in tests/core/test_map.py), the peak run-table size, and
+tracemalloc peak memory.  The headline contrast: a 10,000-item Map at
+window 16 vs unbounded — same result, bounded table, a fraction of the
+peak memory.
+
+    PYTHONPATH=src:. python benchmarks/fig_map_fanout.py [--quick]
+"""
+
+from __future__ import annotations
+
+import time
+import tracemalloc
+
+from benchmarks.common import csv_line, save_results
+from repro.core import asl
+from repro.core.actions import ActionRegistry
+from repro.core.clock import VirtualClock
+from repro.core.engine import FlowEngine
+from repro.core.providers import EchoProvider
+
+#: (items, [max_concurrency ...]); 0 = unbounded.  The 10k x {16, 0} pair
+#: is the acceptance-criteria cell and its memory baseline — kept in quick
+#: mode too (the nightly gate reads it).
+SWEEP_FULL = [
+    (500, [1, 4, 16, 64, 0]),
+    (2000, [4, 16, 64, 0]),
+    (10_000, [4, 16, 64, 0]),
+]
+SWEEP_QUICK = [
+    (500, [1, 4, 16]),
+    (10_000, [16, 0]),
+]
+
+
+def map_flow(window: int) -> asl.Flow:
+    return asl.parse({
+        "StartAt": "Fan",
+        "States": {
+            "Fan": {
+                "Type": "Map",
+                "ItemsPath": "$.items",
+                "MaxConcurrency": window,
+                "Iterator": {
+                    "StartAt": "Work",
+                    "States": {
+                        "Work": {"Type": "Action", "ActionUrl": "ap://echo",
+                                 "Parameters": {"echo_string.$": "$.index"},
+                                 "ResultPath": "$.out", "End": True},
+                    },
+                },
+                "ResultPath": "$.results",
+                "End": True,
+            },
+        },
+    })
+
+
+def bench_cell(items: int, window: int) -> dict:
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    engine = FlowEngine(registry, clock=clock)
+    flow = map_flow(window)
+
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    run = engine.start_run(flow, {"items": list(range(items))},
+                           flow_id="map", run_id="run-map")
+    # drain in slices, sampling the run-table high-water mark between events
+    peak_table = 0
+    while run.status == "ACTIVE":
+        stepped = engine.scheduler.drain(
+            max_events=509, stop=lambda: run.status != "ACTIVE"
+        )
+        peak_table = max(peak_table, len(engine.runs))
+        if stepped == 0:
+            break
+    elapsed = time.perf_counter() - t0
+    _, mem_peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+
+    assert run.status == "SUCCEEDED", run.error
+    assert len(run.context["results"]) == items
+    window_ok = window == 0 or run.map_peak_live <= window
+    assert window_ok, (
+        f"admission window violated: peak {run.map_peak_live} > {window}"
+    )
+    return {
+        "items": items,
+        "max_concurrency": window,
+        "elapsed_s": elapsed,
+        "items_per_s": items / elapsed,
+        "peak_live_children": run.map_peak_live,
+        "peak_run_table": peak_table,
+        "tracemalloc_peak_kb": mem_peak / 1024.0,
+        "window_ok": window_ok,
+    }
+
+
+def run(quick: bool = False) -> list[dict]:
+    sweep = SWEEP_QUICK if quick else SWEEP_FULL
+    rows = []
+    for items, windows in sweep:
+        by_window = {}
+        for window in windows:
+            row = bench_cell(items, window)
+            by_window[window] = row
+            rows.append(row)
+        # the flat-memory headline: bounded window vs unbounded baseline
+        if 16 in by_window and 0 in by_window:
+            bounded, unbounded = by_window[16], by_window[0]
+            bounded["mem_reduction_vs_unbounded"] = (
+                unbounded["tracemalloc_peak_kb"]
+                / bounded["tracemalloc_peak_kb"]
+            )
+            bounded["table_reduction_vs_unbounded"] = (
+                unbounded["peak_run_table"] / bounded["peak_run_table"]
+            )
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick=quick)
+    save_results("fig_map_fanout", rows)
+    lines = []
+    for row in rows:
+        derived = (
+            f"window={row['max_concurrency']};"
+            f"items_per_s={row['items_per_s']:.0f};"
+            f"peak_live={row['peak_live_children']};"
+            f"peak_table={row['peak_run_table']};"
+            f"mem_kb={row['tracemalloc_peak_kb']:.0f}"
+        )
+        if "mem_reduction_vs_unbounded" in row:
+            derived += (
+                f";mem_reduction={row['mem_reduction_vs_unbounded']:.1f}x"
+                f";table_reduction={row['table_reduction_vs_unbounded']:.1f}x"
+            )
+        lines.append(csv_line(
+            f"fig_map_fanout/items={row['items']}"
+            f"/window={row['max_concurrency']}",
+            1e6 / row["items_per_s"],
+            derived,
+        ))
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true")
+    args = parser.parse_args()
+    print("\n".join(main(quick=args.quick)))

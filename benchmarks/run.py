@@ -14,7 +14,7 @@ import time
 import traceback
 
 BENCHES = ["fig7", "fig8", "fig9", "table1", "fig10", "shards", "fanout",
-           "recovery", "overhead", "soak", "roofline"]
+           "recovery", "overhead", "map", "soak", "roofline"]
 
 
 def _run_roofline() -> list[str]:
@@ -74,6 +74,9 @@ def main() -> int:
     if "overhead" in selected:
         from benchmarks import fig_transition_overhead
         runners["overhead"] = fig_transition_overhead.main
+    if "map" in selected:
+        from benchmarks import fig_map_fanout
+        runners["map"] = fig_map_fanout.main
     if "soak" in selected:
         from benchmarks import soak
         runners["soak"] = soak.main

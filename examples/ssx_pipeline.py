@@ -5,8 +5,11 @@ Two flows, exactly as the paper describes:
 * **per-image flow** (7 steps): transfer image -> DIALS stills processing ->
   extract hit metadata -> generate visualization -> transfer for publication
   -> ingest to the SSX catalog -> return results to the beamline;
-* **structure flow** (2 steps): PRIME post-refinement over accumulated hits
-  -> copy the structure back to the beamline.
+* **structure flow**: PRIME post-refinement over accumulated hits -> a
+  ``Map`` state archiving every hit image to the portal (the hit count is
+  only known at run time — dynamic data-parallel fan-out with
+  ``MaxConcurrency: 4``, per docs/asl.md) -> copy the structure back to
+  the beamline.
 
 A Trigger watches the instrument queue and starts the per-image flow per
 detector frame; a second Trigger fires the structure flow once enough hits
@@ -148,11 +151,36 @@ def main():
     }, title="SSX per-image")
 
     structure_flow = flows.publish_flow({
-        "Comment": "SSX structure flow (PRIME)",
+        "Comment": "SSX structure flow (PRIME + per-hit archive fan-out)",
         "StartAt": "PRIME",
         "States": {
             "PRIME": {**compute_state(f_prime, {}),
-                       "ResultPath": "$.structure", "Next": "CopyBack"},
+                       "ResultPath": "$.structure", "Next": "ArchiveHits"},
+            # dynamic fan-out: one archive transfer per accumulated hit.
+            # The hit list's size is only known when the flow starts — a
+            # static Parallel could not express this (it was previously N
+            # separate per-image publications); MaxConcurrency caps the
+            # load on the portal endpoint.
+            "ArchiveHits": {
+                "Type": "Map",
+                "ItemsPath": "$.hits",
+                "MaxConcurrency": 4,
+                "ItemSelector": {"image.$": "$.item"},
+                "Iterator": {
+                    "StartAt": "Archive",
+                    "States": {
+                        "Archive": {
+                            "Type": "Action", "ActionUrl": "ap://transfer",
+                            "Parameters": {
+                                "operation": "transfer",
+                                "source_endpoint": "hpc",
+                                "destination_endpoint": "portal",
+                                "source_path.$": "$.image",
+                                "destination_path.$": "$.image"},
+                            "ResultPath": "$.archived", "End": True},
+                    },
+                },
+                "ResultPath": "$.archived_hits", "Next": "CopyBack"},
             "CopyBack": {
                 "Type": "Action", "ActionUrl": "ap://transfer",
                 "Parameters": {
@@ -185,7 +213,12 @@ def main():
     def run_structure(body, caller):
         if structure_runs:          # solve once per accumulation window
             return structure_runs[0]
-        r = flows.run_flow(structure_flow.flow_id, body, label="solve")
+        # the run-time-sized hit list feeds the structure flow's Map state
+        r = flows.run_flow(
+            structure_flow.flow_id,
+            {**body, "hits": [h["image"] for h in hits_accumulator]},
+            label="solve",
+        )
         structure_runs.append(r.run_id)
         return r.run_id
 
@@ -221,6 +254,14 @@ def main():
         r = flows.engine.get_run(rid)
         print(f"structure run {rid}: {r.status} -> "
               f"{r.context.get('structure', {}).get('details')}")
+        archived = r.context.get("archived_hits", [])
+        print(f"hits archived to portal via Map fan-out: {len(archived)} "
+              f"(peak concurrent transfers {r.map_peak_live})")
+        assert r.status == "SUCCEEDED"
+        assert len(archived) == len(r.context["hits"])
+        assert r.map_peak_live <= 4  # the Map admission window held
+        for slot in archived:
+            assert slot["archived"]["status"] == "SUCCEEDED"
     assert done == len(image_runs) == args.images
     assert structure_runs, "structure flow should have been triggered"
     print("SSX pipeline complete.")

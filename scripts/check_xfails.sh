@@ -1,25 +1,26 @@
 #!/usr/bin/env sh
-# ROADMAP open-item guard: the two strict xfails pinning the seed xLSTM
-# non-finite-grad bug must still be exactly XFAIL — not XPASS (the future
-# numerics PR flips them *deliberately*) and not ERROR (collection rot
-# would retire the pin silently).  CI asserts the exact count here so the
-# flip can only happen on purpose.
+# ROADMAP open-item guard, post-fix edition: the seed xLSTM numerics bug is
+# FIXED (exp(-m) denominator-floor overflow; see repro.models.xlstm._denom),
+# so the suite must carry ZERO xfails — the former pins now run as plain
+# passes.  CI asserts the exact outcome here so a regression (or a sneaky
+# new xfail pin) cannot land silently.
 set -eu
 cd "$(dirname "$0")/.."
 
 out=$(PYTHONPATH="${REPRO_PYTHONPATH:-src:.}${PYTHONPATH:+:$PYTHONPATH}" \
   python -m pytest -q --tb=no -p no:cacheprovider \
   "tests/models/test_smoke_archs.py::test_train_step_decreases_loss[xlstm-1.3b]" \
-  "tests/models/test_xlstm_regression.py::test_mlstm_block_grads_finite_minimal_repro" \
+  "tests/models/test_xlstm_regression.py" \
   2>&1) || true
 echo "$out"
 
-if ! echo "$out" | grep -q "2 xfailed"; then
-  echo "xfail-guard: FAIL — expected exactly '2 xfailed' (ROADMAP xlstm pins)"
+if echo "$out" | grep -Eq "[0-9]+ (xfailed|xpassed|failed|errors?)"; then
+  echo "xfail-guard: FAIL — expected only plain passes (0 xfails) for the"
+  echo "  fixed xlstm numerics tests; something regressed or re-pinned"
   exit 1
 fi
-if echo "$out" | grep -Eq "[0-9]+ (passed|failed|errors?)"; then
-  echo "xfail-guard: FAIL — unexpected pass/fail/error among the pinned xfails"
+if ! echo "$out" | grep -Eq "[0-9]+ passed"; then
+  echo "xfail-guard: FAIL — the xlstm numerics tests did not run/pass"
   exit 1
 fi
-echo "xfail-guard: OK (both xlstm numerics pins are still strict xfails)"
+echo "xfail-guard: OK (xlstm numerics fix locked in: 0 xfails, all passing)"

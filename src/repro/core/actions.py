@@ -30,6 +30,7 @@ Reliability details matching the paper's platform behaviour:
 
 from __future__ import annotations
 
+import heapq
 import secrets
 import threading
 from dataclasses import dataclass, field
@@ -91,6 +92,7 @@ class _Action:
     monitor_by: set[str] = field(default_factory=set)
     manage_by: set[str] = field(default_factory=set)
     callbacks: list[Callable[[ActionStatus], None]] = field(default_factory=list)
+    request_id: str | None = None  # idempotency key, dropped with the action
 
 
 class ActionProvider:
@@ -116,6 +118,7 @@ class ActionProvider:
         clock: Clock | None = None,
         auth: AuthService | None = None,
         scope: str | None = None,
+        retention_seconds: float = RETENTION_SECONDS,
     ):
         self.clock = clock or RealClock()
         self.auth = auth
@@ -125,12 +128,21 @@ class ActionProvider:
         self._lock = threading.RLock()
         self._actions: dict[str, _Action] = {}
         self._requests: dict[str, str] = {}  # request_id -> action_id
+        #: completed-action retention window (paper §5.2: 30 days).  State
+        #: past retention is garbage-collected on access — without this a
+        #: long-lived provider's ``_actions``/``_requests`` maps grow
+        #: without bound (every completed action held forever).
+        self.retention_seconds = retention_seconds
+        self._expiry: list[tuple[float, str]] = []  # (expires_at, action_id)
         self.scope = scope or f"urn:repro:scopes:{self.scope_suffix}:run"
         if auth is not None:
             auth.register_resource_server(self.url)
             auth.register_scope(self.url, self.scope)
         # run counters (service statistics, cf. paper §7)
-        self.stats = {"run": 0, "poll": 0, "cancel": 0, "release": 0, "failed": 0}
+        self.stats = {
+            "run": 0, "poll": 0, "cancel": 0, "release": 0, "failed": 0,
+            "expired": 0,
+        }
 
     # ------------------------------------------------------------------ API
     def introspect(self) -> dict:
@@ -156,6 +168,7 @@ class ActionProvider:
     ) -> ActionStatus:
         """POST <action_url>/run."""
         identity = self._authenticate(caller)
+        self._expire_completed()
         with self._lock:
             if request_id is not None and request_id in self._requests:
                 return self._status_of(self._actions[self._requests[request_id]])
@@ -168,6 +181,7 @@ class ActionProvider:
             start_time=self.clock.now(),
             monitor_by=set(monitor_by or ()),
             manage_by=set(manage_by or ()),
+            request_id=request_id,
         )
         with self._lock:
             self._actions[action.action_id] = action
@@ -251,6 +265,27 @@ class ActionProvider:
         self._complete(action, FAILED, details={"error": "cancelled"})
 
     # ---------------------------------------------------------------- misc
+    def _expire_completed(self) -> None:
+        """GC completed actions past retention (swept on every access).
+
+        The expiry heap makes each sweep O(actually-expired); entries whose
+        action was already ``release``d are skipped.  Expired actions also
+        drop their idempotency mapping — a re-submitted ``request_id`` after
+        retention starts a *new* action, exactly like the paper's providers
+        forgetting state after 30 days.
+        """
+        now = self.clock.now()
+        with self._lock:
+            while self._expiry and self._expiry[0][0] <= now:
+                _, action_id = heapq.heappop(self._expiry)
+                action = self._actions.get(action_id)
+                if action is None or action.status == ACTIVE:
+                    continue  # released already (or id reused; never ACTIVE)
+                del self._actions[action_id]
+                if action.request_id is not None:
+                    self._requests.pop(action.request_id, None)
+                self.stats["expired"] += 1
+
     def _complete(self, action: _Action, status: str, details: Any = None) -> None:
         with self._lock:
             if action.status != ACTIVE:
@@ -258,6 +293,11 @@ class ActionProvider:
             action.status = status
             action.details = details if details is not None else action.details
             action.completion_time = self.clock.now()
+            heapq.heappush(
+                self._expiry,
+                (action.completion_time + self.retention_seconds,
+                 action.action_id),
+            )
             callbacks = list(action.callbacks)
             action.callbacks.clear()
             if status == FAILED:
@@ -270,6 +310,15 @@ class ActionProvider:
                 pass
 
     def _status_of(self, action: _Action) -> ActionStatus:
+        # release_after reports the retention *remaining* for completed
+        # actions (how long the id stays dereferenceable), not the constant
+        remaining = self.retention_seconds
+        if action.completion_time is not None:
+            remaining = max(
+                0.0,
+                action.completion_time + self.retention_seconds
+                - self.clock.now(),
+            )
         return ActionStatus(
             action_id=action.action_id,
             status=action.status,
@@ -278,9 +327,11 @@ class ActionProvider:
             display_status=action.display_status,
             start_time=action.start_time,
             completion_time=action.completion_time,
+            release_after=remaining,
         )
 
     def _get(self, action_id: str) -> _Action:
+        self._expire_completed()
         with self._lock:
             action = self._actions.get(action_id)
         if action is None:

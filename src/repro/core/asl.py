@@ -9,6 +9,15 @@ support ``Succeed`` (explicit normal termination), ``Retry`` clauses, and a
 extensions beyond the paper, used by the training flows for concurrent data
 staging; they are validated and executed with ASL semantics.
 
+A ``Map`` state provides *dynamic* data-parallel fan-out — the paper's
+flagship flows (SSX, XPCS, §4) are all "for each new file: transfer,
+analyze, catalog" over collections whose size is only known at run time,
+which static ``Parallel`` branches cannot express.  ``ItemsPath`` selects
+the item list from the Context, ``Iterator`` is the sub-flow applied to
+each item, ``ItemSelector`` shapes each item's input, and
+``MaxConcurrency`` bounds how many items run at once (a sliding admission
+window — see docs/ARCHITECTURE.md invariant 8).
+
 This module validates definitions at publish time (the paper's Flows service
 "validates the flow definition and input schema" before deployment) and
 compiles them to typed state objects the engine executes.
@@ -24,7 +33,9 @@ from . import context as ctx
 from . import jsonpath
 from .errors import FlowValidationError
 
-STATE_TYPES = ("Action", "Pass", "Choice", "Wait", "Fail", "Succeed", "Parallel")
+STATE_TYPES = (
+    "Action", "Pass", "Choice", "Wait", "Fail", "Succeed", "Parallel", "Map"
+)
 
 _NUMERIC = (int, float)
 
@@ -224,6 +235,12 @@ class State:
     cause: str = ""
     # Parallel
     branches: list["Flow"] = field(default_factory=list)
+    # Map
+    iterator: "Flow | None" = None
+    items_path: str | None = None
+    item_selector: Any = None
+    max_concurrency: int = 0  # 0 = unbounded
+    tolerated_failures: int = 0  # fail-fast by default
 
     # -- compiled execution plan (built once by asl.parse; lazily rebuilt
     # -- for hand-constructed states; excluded from eq/repr) ----------------
@@ -234,6 +251,12 @@ class State:
         default=None, repr=False, compare=False
     )
     _seconds_sel: jsonpath.Selector | None = field(
+        default=None, repr=False, compare=False
+    )
+    _items_sel: jsonpath.Selector | None = field(
+        default=None, repr=False, compare=False
+    )
+    _item_fn: Callable[[Any, Any, int], dict] | None = field(
         default=None, repr=False, compare=False
     )
 
@@ -247,6 +270,9 @@ class State:
         self._result_fn = ctx.compile_result_writer(self.result_path)
         if self.seconds_path is not None:
             self._seconds_sel = jsonpath.compile_path(self.seconds_path)
+        if self.kind == "Map":
+            self._items_sel = jsonpath.compile_path(self.items_path or "$")
+            self._item_fn = ctx.compile_item_selector(self.item_selector)
         for rule in self.choices:
             rule.compiled()
         for rule in self.catch:
@@ -277,6 +303,21 @@ class State:
             sel = self._seconds_sel = jsonpath.compile_path(self.seconds_path)
         return float(sel.get(context))
 
+    # -- Map helpers (compiled ItemsPath / ItemSelector plans) ---------------
+    def items_for(self, doc: Any) -> Any:
+        """Resolve ``ItemsPath`` against the state's effective input."""
+        sel = self._items_sel
+        if sel is None:
+            sel = self._items_sel = jsonpath.compile_path(self.items_path or "$")
+        return sel.get(doc, default=None)
+
+    def item_input(self, doc: Any, item: Any, index: int) -> dict:
+        """Build one item's child-run input (compiled ItemSelector plan)."""
+        fn = self._item_fn
+        if fn is None:
+            fn = self._item_fn = ctx.compile_item_selector(self.item_selector)
+        return fn(doc, item, index)
+
 
 @dataclass
 class Flow:
@@ -294,6 +335,41 @@ def _opt(doc: dict, key: str, types, where: str, default=None):
     if value is not None and not isinstance(value, types):
         raise FlowValidationError(f"{where}: {key} must be {types}")
     return value
+
+
+def _parse_catch(doc: dict, where: str) -> list[CatchRule]:
+    """Shared Catch-clause parsing (Action / Parallel / Map states)."""
+    rules: list[CatchRule] = []
+    for i, c in enumerate(doc.get("Catch", []) or []):
+        if not isinstance(c, dict) or "ErrorEquals" not in c or "Next" not in c:
+            raise FlowValidationError(
+                f"{where}/Catch[{i}]: needs ErrorEquals and Next"
+            )
+        rules.append(
+            CatchRule(
+                error_equals=list(c["ErrorEquals"]),
+                next=c["Next"],
+                result_path=c.get("ResultPath"),
+            )
+        )
+    return rules
+
+
+def _parse_retry(doc: dict, where: str) -> list[RetryRule]:
+    """Shared Retry-clause parsing (Action / Map states)."""
+    rules: list[RetryRule] = []
+    for i, r in enumerate(doc.get("Retry", []) or []):
+        if not isinstance(r, dict):
+            raise FlowValidationError(f"{where}/Retry[{i}]: must be an object")
+        rules.append(
+            RetryRule(
+                error_equals=list(r.get("ErrorEquals", ["States.ALL"])),
+                interval_seconds=float(r.get("IntervalSeconds", 1.0)),
+                max_attempts=int(r.get("MaxAttempts", 3)),
+                backoff_rate=float(r.get("BackoffRate", 2.0)),
+            )
+        )
+    return rules
 
 
 def _parse_state(name: str, doc: dict, where: str) -> State:
@@ -330,27 +406,8 @@ def _parse_state(name: str, doc: dict, where: str) -> State:
         st.exception_on_action_failure = bool(
             doc.get("ExceptionOnActionFailure", True)
         )
-        for i, r in enumerate(doc.get("Retry", []) or []):
-            st.retry.append(
-                RetryRule(
-                    error_equals=list(r.get("ErrorEquals", ["States.ALL"])),
-                    interval_seconds=float(r.get("IntervalSeconds", 1.0)),
-                    max_attempts=int(r.get("MaxAttempts", 3)),
-                    backoff_rate=float(r.get("BackoffRate", 2.0)),
-                )
-            )
-        for i, c in enumerate(doc.get("Catch", []) or []):
-            if "ErrorEquals" not in c or "Next" not in c:
-                raise FlowValidationError(
-                    f"{where}/Catch[{i}]: needs ErrorEquals and Next"
-                )
-            st.catch.append(
-                CatchRule(
-                    error_equals=list(c["ErrorEquals"]),
-                    next=c["Next"],
-                    result_path=c.get("ResultPath"),
-                )
-            )
+        st.retry = _parse_retry(doc, where)
+        st.catch = _parse_catch(doc, where)
     elif kind == "Pass":
         st.parameters = doc.get("Parameters")
         st.result = doc.get("Result")
@@ -386,14 +443,34 @@ def _parse_state(name: str, doc: dict, where: str) -> State:
         ]
         st.result_path = _opt(doc, "ResultPath", str, where)
         st.parameters = doc.get("Parameters")
-        for i, c in enumerate(doc.get("Catch", []) or []):
-            st.catch.append(
-                CatchRule(
-                    error_equals=list(c["ErrorEquals"]),
-                    next=c["Next"],
-                    result_path=c.get("ResultPath"),
-                )
+        st.catch = _parse_catch(doc, where)
+    elif kind == "Map":
+        iterator = doc.get("Iterator", doc.get("ItemProcessor"))
+        if not isinstance(iterator, dict):
+            raise FlowValidationError(f"{where}: Map requires an Iterator flow")
+        st.iterator = parse(iterator, where=f"{where}/Iterator")
+        st.items_path = _opt(doc, "ItemsPath", str, where, "$") or "$"
+        if not st.items_path.startswith("$"):
+            raise FlowValidationError(f"{where}: ItemsPath must be a JSONPath")
+        st.input_path = _opt(doc, "InputPath", str, where)
+        st.result_path = _opt(doc, "ResultPath", str, where)
+        # ItemSelector shapes each item's input; "Parameters" is accepted as
+        # the legacy ASL alias (it is NOT the Action-style state Parameters)
+        st.item_selector = doc.get("ItemSelector", doc.get("Parameters"))
+        mc = doc.get("MaxConcurrency", 0)
+        if not isinstance(mc, int) or isinstance(mc, bool) or mc < 0:
+            raise FlowValidationError(
+                f"{where}: MaxConcurrency must be an integer >= 0 (0 = unbounded)"
             )
+        st.max_concurrency = mc
+        tol = doc.get("ToleratedFailureCount", 0)
+        if not isinstance(tol, int) or isinstance(tol, bool) or tol < 0:
+            raise FlowValidationError(
+                f"{where}: ToleratedFailureCount must be an integer >= 0"
+            )
+        st.tolerated_failures = tol
+        st.retry = _parse_retry(doc, where)
+        st.catch = _parse_catch(doc, where)
     try:
         st.compile_plan()
     except jsonpath.JSONPathError as e:
@@ -478,6 +555,8 @@ def action_urls(flow: Flow) -> list[str]:
                 urls.append(st.action_url)
             for b in st.branches:
                 walk(b)
+            if st.iterator is not None:
+                walk(st.iterator)
 
     walk(flow)
     return urls
@@ -493,6 +572,8 @@ def run_as_roles(flow: Flow) -> list[str]:
                 roles.append(st.run_as)
             for b in st.branches:
                 walk(b)
+            if st.iterator is not None:
+                walk(st.iterator)
 
     walk(flow)
     return roles

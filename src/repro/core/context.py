@@ -92,6 +92,38 @@ def compile_state_input(
     return copy.deepcopy
 
 
+def compile_item_selector(
+    template: Any,
+) -> Callable[[Any, Any, int], dict]:
+    """Compile a Map state's ``ItemSelector`` into ``fn(doc, item, index)``.
+
+    The template is evaluated against an *item scope* document::
+
+        {"item": <the current item>, "index": <its position>,
+         "context": <the Map state's effective input>}
+
+    so templates reference ``$.item``, ``$.index``, and ``$.context.…``
+    (the offline analogue of ASL's ``$$.Map.Item.Value`` context object,
+    expressed in this repo's JSONPath subset).  Without a template the
+    child input defaults to ``{"item": ..., "index": ...}`` — always a
+    dict, because a run Context must be a JSON object.  A template result
+    that is not a dict is wrapped the same way at evaluation time.
+    """
+    if template is None:
+        return lambda doc, item, index: {
+            "item": copy.deepcopy(item), "index": index
+        }
+    params = compile_parameters(template)
+
+    def build(doc: Any, item: Any, index: int) -> dict:
+        out = params({"item": item, "index": index, "context": doc})
+        if not isinstance(out, dict):
+            out = {"item": out, "index": index}
+        return out
+
+    return build
+
+
 def compile_result_writer(
     result_path: str | None,
 ) -> Callable[[dict, Any], dict]:

@@ -41,6 +41,7 @@ from .errors import (
     ActionTimeout,
     AutomationError,
     BranchFailed,
+    MapItemFailed,
     NotFound,
     StateMachineError,
     error_matches,
@@ -77,6 +78,32 @@ class PollingPolicy:
 
 
 @dataclass
+class MapJoin:
+    """Bookkeeping for one Map state's dynamic fan-out (engine-internal).
+
+    Lives on the *parent* run while its Map state executes.  The items list
+    and the (pre-sized) results list are the only O(items) structures; live
+    child :class:`Run` objects are bounded by the admission window
+    (``MaxConcurrency``) — a 10k-item Map with ``MaxConcurrency=16`` never
+    materializes more than 16 children at once (ARCHITECTURE invariant 8).
+    All fields are guarded by the parent's ``run.lock``.
+    """
+
+    items: list
+    results: list          # slot per item, filled in completion order
+    #: the Map state's effective input (InputPath-narrowed) — the document
+    #: ItemSelector's ``$.context`` references resolve against
+    scope_doc: Any = None
+    next_index: int = 0    # first unadmitted item
+    live: int = 0          # admitted children not yet terminal
+    done: int = 0          # terminal children (any status)
+    failed: int = 0        # children that ended RUN_FAILED
+    peak_live: int = 0     # high-water mark (window-bound assertions)
+    window: int = 0        # effective MaxConcurrency (0 -> len(items))
+    failing: bool = False  # tolerance exceeded; stop admitting, fail at join
+
+
+@dataclass
 class Run:
     run_id: str
     flow: asl.Flow
@@ -104,7 +131,7 @@ class Run:
     action_deadline: float | None = None
     poll_generation: int = 0  # invalidates stale scheduled polls
 
-    # Parallel support
+    # Parallel / Map fan-out support
     parent: "Run | None" = None
     branch_index: int = 0
     parent_state: str | None = None
@@ -112,6 +139,16 @@ class Run:
     #: one join per fan-out: concurrently completing children must not both
     #: consume the Parallel join (double-transition); reset by _exec_parallel
     join_claimed: bool = False
+    #: live Map fan-out bookkeeping (parent side; None outside a Map state)
+    map_join: MapJoin | None = None
+    #: high-water mark of simultaneously-live Map children across this run's
+    #: Map states — survives the join so tests/benchmarks can assert the
+    #: admission-window bound (ARCHITECTURE invariant 8) after completion
+    map_peak_live: int = 0
+    #: the join this child was admitted under (child side) — a Retry that
+    #: re-enters the Map state builds a NEW join with the same child ids, so
+    #: stale children from the superseded attempt must not touch it
+    of_join: MapJoin | None = None
 
     # global submission order, stamped by EngineShardPool (0 = shard-internal)
     seq: int = 0
@@ -143,7 +180,7 @@ class Run:
         self.events.append({"time": t, "code": code, "details": details})
 
     def as_status(self) -> dict:
-        return {
+        doc = {
             "run_id": self.run_id,
             "flow_id": self.flow_id,
             "label": self.label,
@@ -161,6 +198,18 @@ class Run:
                 else {}
             ),
         }
+        with self.lock:
+            join = self.map_join
+            if join is not None:
+                # progress rollup for a run inside a Map state (web-app view)
+                doc["map"] = {
+                    "items": len(join.items),
+                    "completed": join.done,
+                    "failed": join.failed,
+                    "live": join.live,
+                    "max_concurrency": join.window,
+                }
+        return doc
 
 
 class Scheduler:
@@ -297,6 +346,8 @@ class FlowEngine:
             "actions_dispatched": 0,
             "polls": 0,
             "retries": 0,
+            "map_items_admitted": 0,
+            "map_items_completed": 0,
         }
         # real-time execution machinery (not used under a virtual clock)
         self._threads: list[threading.Thread] = []
@@ -552,6 +603,8 @@ class FlowEngine:
                 self._complete_run(run, RUN_SUCCEEDED)
             elif state.kind == "Parallel":
                 self._exec_parallel(run, state)
+            elif state.kind == "Map":
+                self._exec_map(run, state)
             else:  # pragma: no cover
                 raise StateMachineError(f"unhandled state kind {state.kind}")
         except AutomationError as e:
@@ -856,6 +909,193 @@ class FlowEngine:
                 )
             self._transition(parent, state)
 
+    # -- Map -----------------------------------------------------------------------
+    def _exec_map(self, run: Run, state: asl.State) -> None:
+        """Dynamic data-parallel fan-out with a sliding admission window.
+
+        ``ItemsPath`` selects the item list from the state's effective
+        input; each item becomes a child run of the ``Iterator`` sub-flow,
+        but at most ``MaxConcurrency`` children exist at once — completed
+        children are dropped and the next item admitted, so a 10k-item Map
+        holds O(window) live runs, not O(items) (ARCHITECTURE invariant 8).
+        Re-entering the state (Retry clause, crash recovery) rebuilds the
+        join from scratch: child run ids are deterministic
+        (``<parent>.m<i>``), so re-dispatched actions deduplicate on their
+        journaled ``request_id`` exactly like Parallel branches.
+        """
+        doc = state.input_for(run.context)
+        items = state.items_for(doc)
+        if not isinstance(items, list):
+            raise StateMachineError(
+                f"Map {state.name}: ItemsPath "
+                f"{state.items_path or '$'!r} must select a list, "
+                f"got {type(items).__name__}"
+            )
+        window = state.max_concurrency or len(items)
+        join = MapJoin(
+            items=items, results=[None] * len(items), window=window,
+            scope_doc=doc,
+        )
+        run.log_event(
+            self.clock.now(), "MapStarted", state=state.name,
+            items=len(items), max_concurrency=state.max_concurrency,
+        )
+        if not items:
+            with run.lock:
+                run.map_join = None
+                self._apply_result(run, state.write_result, state.result_path, [])
+            self._transition(run, state)
+            return
+        with run.lock:
+            run.map_join = join
+            run.children = []
+            run.join_claimed = False
+        self._map_admit(run, state)
+
+    def _map_admit(self, run: Run, state: asl.State) -> None:
+        """Admit items while the window has room (callers do NOT hold locks)."""
+        admitted: list[Run] = []
+        with run.lock:
+            join = run.map_join
+            if join is None or run.status != RUN_ACTIVE:
+                return
+            while (
+                join.live < join.window
+                and join.next_index < len(join.items)
+                and not join.failing
+                and not run.cancel_requested
+            ):
+                i = join.next_index
+                join.next_index += 1
+                join.live += 1
+                join.peak_live = max(join.peak_live, join.live)
+                run.map_peak_live = max(run.map_peak_live, join.live)
+                child = Run(
+                    run_id=f"{run.run_id}.m{i}",
+                    flow=state.iterator,
+                    flow_id=f"{run.flow_id}#map:{state.name}[{i}]",
+                    creator=run.creator,
+                    caller=run.caller,
+                    run_as=run.run_as,
+                    label=f"{run.label} / item {i}",
+                    context=state.item_input(join.scope_doc, join.items[i], i),
+                    start_time=self.clock.now(),
+                    parent=run,
+                    branch_index=i,
+                    parent_state=state.name,
+                    of_join=join,
+                )
+                run.children.append(child)
+                admitted.append(child)
+        if not admitted:
+            return
+        with self._lock:
+            self.stats["map_items_admitted"] += len(admitted)
+            for child in admitted:
+                self.runs[child.run_id] = child
+        for child in admitted:
+            self.scheduler.submit(
+                lambda c=child: self._enter_state(c, c.flow.start_at)
+            )
+
+    def _map_child_done(self, child: Run) -> None:
+        """One Map item reached a terminal state: record, refill, maybe join.
+
+        The child's slot result is its final context (success) or its error
+        document (tolerated failure).  The child Run object is dropped from
+        the parent and the engine's run table — live state stays bounded by
+        the window regardless of item count.
+        """
+        parent = child.parent
+        assert parent is not None
+        state = parent.flow.states[child.parent_state]
+        with self._lock:
+            # identity-checked: a Retry attempt re-registers the same child
+            # ids, and a stale completion must not evict the live successor
+            if self.runs.get(child.run_id) is child:
+                del self.runs[child.run_id]
+            self.stats["map_items_completed"] += 1
+        finish = None   # claimed terminal decision, applied outside the lock
+        fail_fast: list[str] = []  # siblings to cancel when tolerance trips
+        with parent.lock:
+            join = parent.map_join
+            if join is None or child.of_join is not join:
+                return  # stale child from a superseded attempt
+            if parent.status != RUN_ACTIVE:
+                return
+            if child in parent.children:
+                parent.children.remove(child)
+            join.live -= 1
+            join.done += 1
+            # a child cancelled while the join is healthy (someone cancelled
+            # the item directly) counts as a failed item — its partial
+            # context must not masquerade as a successful result; cancelled
+            # siblings of an already-failing join are the fail-fast sweep
+            # and their (discarded) slots need no marker
+            failed_like = child.status == RUN_FAILED or (
+                child.status == RUN_CANCELLED and not join.failing
+            )
+            if failed_like:
+                join.failed += 1
+                join.results[child.branch_index] = {
+                    "MapItemFailed": child.error or {
+                        "Error": "States.MapItemCancelled",
+                        "Cause": f"item {child.branch_index} was cancelled",
+                    }
+                }
+                if join.failed > state.tolerated_failures and not join.failing:
+                    # fail fast: stop admitting and cancel in-flight items
+                    join.failing = True
+                    fail_fast = [c.run_id for c in parent.children]
+            else:
+                # a successful child contributes its final context
+                join.results[child.branch_index] = child.context
+            parent.log_event(
+                self.clock.now(), "MapItemCompleted",
+                state=state.name, index=child.branch_index,
+                status=child.status, completed=join.done,
+                total=len(join.items),
+            )
+            drained = join.live == 0 and (
+                join.failing or join.next_index >= len(join.items)
+            )
+            if drained and not parent.join_claimed:
+                # claim the join atomically: concurrently completing items
+                # must not both transition the parent (cf. Parallel)
+                parent.join_claimed = True
+                finish = "fail" if join.failing else "ok"
+        for run_id in fail_fast:
+            try:
+                self.cancel_run(run_id)
+            except AutomationError:
+                pass
+        if finish is None:
+            self._map_admit(parent, state)
+            return
+        with parent.lock:
+            parent.map_join = None
+            parent.children = []
+        if finish == "fail":
+            first = next(
+                (r for r in join.results
+                 if isinstance(r, dict) and "MapItemFailed" in r),
+                None,
+            )
+            self._state_failed(
+                parent,
+                state,
+                MapItemFailed.error_name,
+                f"{join.failed}/{len(join.items)} Map items failed "
+                f"(tolerated {state.tolerated_failures})",
+                details=(first or {}).get("MapItemFailed"),
+            )
+            return
+        with parent.lock:
+            self._apply_result(
+                parent, state.write_result, state.result_path, join.results
+            )
+        self._transition(parent, state)
+
     # -- failure handling -------------------------------------------------------
     def _state_failed(
         self,
@@ -959,13 +1199,35 @@ class FlowEngine:
             if key:
                 self.stats[key] += 1
         run.done.set()
+        # a parent leaving ACTIVE mid-Map abandons its fan-out: cancel the
+        # in-flight children so they don't run on (advisory, like Parallel)
+        with run.lock:
+            abandoned = (
+                [c.run_id for c in run.children]
+                if run.map_join is not None and status != RUN_SUCCEEDED
+                else []
+            )
+        for child_id in abandoned:
+            try:
+                self.cancel_run(child_id)
+            except AutomationError:
+                pass
         for cb in list(run.completion_callbacks):
             try:
                 cb(run)
             except Exception:
                 pass
         if run.parent is not None:
-            self.scheduler.submit(lambda: self._parallel_child_done(run))
+            self.scheduler.submit(lambda: self._fanout_child_done(run))
+
+    def _fanout_child_done(self, child: Run) -> None:
+        """Route a completed fan-out child to its join (Parallel vs Map)."""
+        parent = child.parent
+        state = parent.flow.states.get(child.parent_state) if parent else None
+        if state is not None and state.kind == "Map":
+            self._map_child_done(child)
+        else:
+            self._parallel_child_done(child)
 
     # -- auth ---------------------------------------------------------------------
     def _caller_for(self, run: Run, run_as: str | None) -> Caller | None:

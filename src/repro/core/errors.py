@@ -68,6 +68,12 @@ class BranchFailed(AutomationError):
     error_name = "States.BranchFailed"
 
 
+class MapItemFailed(AutomationError):
+    """More Map iterations failed than ``ToleratedFailureCount`` allows."""
+
+    error_name = "States.MapItemFailed"
+
+
 class AuthError(AutomationError):
     """Authentication / authorization failure (missing or bad token/scope)."""
 

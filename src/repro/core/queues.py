@@ -225,7 +225,13 @@ class QueueService:
         q = self._queue(queue_id)
         self._require_role(q, q.receivers, caller, "Receiver")
         now = self.clock.now()
-        timeout = visibility_timeout or q.visibility_timeout
+        # `is None`, not falsy: an explicit visibility_timeout=0 means "no
+        # invisibility window" (the message is immediately redeliverable),
+        # and sub-second overrides must not be coerced to the queue default
+        timeout = (
+            q.visibility_timeout if visibility_timeout is None
+            else visibility_timeout
+        )
         out: list[dict] = []
         with q.lock:
             for msg in q.messages:

@@ -13,9 +13,11 @@ Partitioning contract
   run to its home shard with a stable (process-independent) CRC32 hash, so
   routing is stateless and a restarted pool recovers the same placement from
   its journal segments.
-* ``Parallel`` branch children get ids of the form ``<parent>.bN``; the hash
-  covers only the root id, so children **co-locate with their parent** (the
-  branch join never crosses a shard boundary).
+* ``Parallel`` branch children get ids of the form ``<parent>.bN`` and
+  ``Map`` item children ``<parent>.mN``; the hash covers only the root id,
+  so children **co-locate with their parent** (neither the branch join nor
+  the Map admission window ever crosses a shard boundary, and the window's
+  bookkeeping needs only the owning shard's locks).
 * Cross-shard traffic exists only at the facade: ``list_runs`` aggregates all
   shards, and flow-as-action composition may place a child flow's run on a
   different shard than its parent (each side only touches its own shard's
@@ -66,8 +68,9 @@ from .journal import Journal, segment_path
 def shard_index(run_id: str, num_shards: int) -> int:
     """Stable hash partition of a run id onto ``num_shards`` shards.
 
-    Only the root id (before the first ``.``) is hashed so ``Parallel``
-    branch children (``<parent>.bN``) land on their parent's shard.
+    Only the root id (before the first ``.``) is hashed so fan-out children
+    (``<parent>.bN`` Parallel branches, ``<parent>.mN`` Map items) land on
+    their parent's shard.
     """
     root = run_id.split(".", 1)[0]
     return zlib.crc32(root.encode("utf-8")) % num_shards

@@ -33,6 +33,23 @@ from repro.parallel.sharding import shard
 # ---------------------------------------------------------------------------
 
 
+def _denom(den: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """Stabilized output denominator ``max(|q̃·n|, e^{-m})`` (eq. 17/26).
+
+    ``e^{-m}`` overflows float32 to ``+inf`` once the running stabilizer
+    drops below ``m < -88.7`` — which real flows hit when the learned gate
+    pre-activations are strongly negative (the embed output drives f̃ to
+    ~-90 on xlstm-1.3b).  The *forward* value stays clean (``num/inf = 0``)
+    but the backward of ``maximum(|den|, inf)`` routes the cotangent into
+    ``d e^{-m}/dm = -inf`` against a zero upstream gradient: ``0 * inf =
+    NaN``.  Clamping the exponent keeps the floor finite while still being
+    astronomically larger than any attainable ``|den|`` (whose summands all
+    carry ``e^{·-m}`` factors bounded by 1 per step), so the selected
+    branch — and hence the computed ``h`` — is unchanged up to f32 underflow.
+    """
+    return jnp.maximum(jnp.abs(den), jnp.exp(jnp.minimum(-m, 80.0)))
+
+
 def mlstm_chunkwise(
     q: jnp.ndarray,       # [B, H, S, K]
     k: jnp.ndarray,       # [B, H, S, K]
@@ -90,7 +107,7 @@ def mlstm_chunkwise(
         w = jnp.exp(m_inter - m)                    # [B,H,Q]
         num = num + w[..., None] * jnp.einsum("bhtk,bhkv->bhtv", qq, C0)
         den = den + w * jnp.einsum("bhtk,bhk->bht", qq, n0)
-        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        h = num / _denom(den, m)[..., None]
         # chunk-final state
         b_last = bb[..., -1]
         m_new = jnp.maximum(
@@ -140,8 +157,8 @@ def mlstm_step(q, k, v, i_gate, f_gate, state):
     )
     n1 = fw[..., None] * n0 + iw[..., None] * k.astype(f32)
     num = jnp.einsum("bhk,bhkv->bhv", qf, C1)
-    den = jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n1))
-    h = num / jnp.maximum(den, jnp.exp(-m))[..., None]
+    den = jnp.einsum("bhk,bhk->bh", qf, n1)
+    h = num / _denom(den, m)[..., None]
     return h.astype(v.dtype), (C1, n1, m)
 
 

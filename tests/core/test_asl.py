@@ -174,3 +174,57 @@ def test_parallel_branches_parse():
     }
     flow = asl.parse(doc)
     assert len(flow.states["P"].branches) == 2
+
+
+def test_parallel_catch_missing_keys_is_validation_error():
+    """Regression (latent-bug sweep): a Parallel Catch entry without
+    ErrorEquals/Next used to raise a bare KeyError at publish time instead
+    of a FlowValidationError like Action states."""
+    import pytest
+
+    from repro.core.errors import FlowValidationError
+
+    doc = {
+        "StartAt": "P",
+        "States": {
+            "P": {
+                "Type": "Parallel",
+                "Branches": [
+                    {"StartAt": "A",
+                     "States": {"A": {"Type": "Pass", "End": True}}},
+                ],
+                "Catch": [{"Next": "Done"}],  # missing ErrorEquals
+                "Next": "Done",
+            },
+            "Done": {"Type": "Succeed"},
+        },
+    }
+    with pytest.raises(FlowValidationError):
+        asl.parse(doc)
+
+
+def test_map_state_parses_and_compiles():
+    doc = {
+        "StartAt": "M",
+        "States": {
+            "M": {
+                "Type": "Map",
+                "ItemsPath": "$.xs",
+                "MaxConcurrency": 8,
+                "ToleratedFailureCount": 1,
+                "ItemSelector": {"v.$": "$.item"},
+                "Iterator": {"StartAt": "A",
+                             "States": {"A": {"Type": "Pass", "End": True}}},
+                "ResultPath": "$.out",
+                "End": True,
+            },
+        },
+    }
+    flow = asl.parse(doc)
+    st = flow.states["M"]
+    assert st.kind == "Map"
+    assert st.max_concurrency == 8
+    assert st.tolerated_failures == 1
+    assert st.iterator is not None and "A" in st.iterator.states
+    assert st.items_for({"xs": [1, 2]}) == [1, 2]
+    assert st.item_input({}, 5, 0) == {"v": 5}

@@ -1,0 +1,575 @@
+"""Map state: dynamic data-parallel fan-out with bounded concurrency.
+
+Properties (see docs/ARCHITECTURE.md invariant 8 and docs/asl.md):
+
+* a Map over N items equals an equivalent *static* Parallel with one branch
+  per item — same ordered results, same terminal context — for random item
+  lists and MaxConcurrency values;
+* with injected per-item failures and full tolerance, each slot equals the
+  outcome of running the Iterator standalone on that item; with the
+  fail-fast default, any item failure fails the state with
+  ``States.MapItemFailed``;
+* the admission window holds: live children never exceed MaxConcurrency
+  (asserted at 10k items x window 16, the acceptance-criteria point), and
+  completed children are dropped, so live state is O(window) not O(items);
+* a crash mid-Map on a 4-shard pool (some items done, some in flight, some
+  unadmitted) recovers to the same terminal state and aggregated result as
+  an uninterrupted run;
+* delta-journal replay ≡ snapshot replay for Map runs (invariant 7).
+"""
+
+import os
+import random
+
+from repro.core import asl
+from repro.core.actions import ActionRegistry
+from repro.core.clock import VirtualClock
+from repro.core.engine import (
+    RUN_FAILED,
+    RUN_SUCCEEDED,
+    FlowEngine,
+)
+from repro.core.journal import Journal, replay
+from repro.core.providers import EchoProvider, SleepProvider
+from repro.core.shard_pool import EngineShardPool
+from repro.testing import hypothesis_shim
+
+given, settings, st = hypothesis_shim()
+
+
+def make_engine(journal: Journal | None = None, **kwargs) -> FlowEngine:
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    registry.register(SleepProvider(clock=clock))
+    return FlowEngine(registry, clock=clock, journal=journal or Journal(),
+                      **kwargs)
+
+
+def make_pool(path: str, shards: int = 4) -> EngineShardPool:
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    registry.register(SleepProvider(clock=clock))
+    return EngineShardPool(registry, num_shards=shards, clock=clock,
+                           journal_path=path)
+
+
+def canon(doc):
+    """Normalize per-process action ids and start timestamps.
+
+    Action ids are random; ``started`` is the virtual time an item's sleep
+    began, which legitimately differs between a window-limited Map and an
+    unbounded reference (admission is *delayed*, not changed).
+    """
+    if isinstance(doc, dict):
+        return {
+            k: ("<nondet>" if k in ("action_id", "started") else canon(v))
+            for k, v in doc.items()
+        }
+    if isinstance(doc, list):
+        return [canon(v) for v in doc]
+    return doc
+
+
+# The iterator used by the property sweeps: sleep proportional to the item
+# value, echo the index, and fail (catchably, with one retry-able shape)
+# when the item is negative.
+ITERATOR = {
+    "StartAt": "Gate",
+    "States": {
+        "Gate": {
+            "Type": "Choice",
+            "Choices": [{"Variable": "$.item", "NumericLessThan": 0,
+                         "Next": "Bad"}],
+            "Default": "Work",
+        },
+        "Work": {"Type": "Action", "ActionUrl": "ap://sleep",
+                 "Parameters": {"seconds.$": "$.item"},
+                 "ResultPath": "$.slept", "Next": "Echo"},
+        "Echo": {"Type": "Action", "ActionUrl": "ap://echo",
+                 "Parameters": {"echo_string.$": "$.index"},
+                 "ResultPath": "$.echoed", "End": True},
+        "Bad": {"Type": "Fail", "Error": "ItemBad", "Cause": "negative item"},
+    },
+}
+
+
+def map_definition(max_concurrency: int, tolerated: int = 0,
+                   items_path: str = "$.xs") -> dict:
+    return {
+        "StartAt": "Fan",
+        "States": {
+            "Fan": {
+                "Type": "Map",
+                "ItemsPath": items_path,
+                "MaxConcurrency": max_concurrency,
+                "ToleratedFailureCount": tolerated,
+                "Iterator": ITERATOR,
+                "ResultPath": "$.results",
+                "End": True,
+            },
+        },
+    }
+
+
+def static_parallel_definition(items: list) -> dict:
+    """The static-enumeration equivalent: one branch per item, each branch
+    first injecting the item scope a Map child would have received."""
+    branches = []
+    for i, item in enumerate(items):
+        branches.append({
+            "StartAt": "Inject",
+            "States": {
+                "Inject": {"Type": "Pass",
+                           "Result": {"item": item, "index": i},
+                           "ResultPath": "$", "Next": "Gate"},
+                **ITERATOR["States"],
+            },
+        })
+        branches[-1]["States"] = {
+            "Inject": branches[-1]["States"]["Inject"],
+            **{k: dict(v) for k, v in ITERATOR["States"].items()},
+        }
+    return {
+        "StartAt": "Fan",
+        "States": {
+            "Fan": {"Type": "Parallel", "Branches": branches,
+                    "ResultPath": "$.results", "End": True},
+        },
+    }
+
+
+# --------------------------------------------- property: Map ≡ static Parallel
+
+@settings(max_examples=12)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_map_equals_static_parallel_reference(seed):
+    rng = random.Random(seed)
+    items = [round(rng.uniform(0.0, 5.0), 3) for _ in range(rng.randint(1, 12))]
+    window = rng.choice([0, 1, 2, 3, 16])
+
+    eng_map = make_engine()
+    map_flow = asl.parse(map_definition(window))
+    run_map = eng_map.start_run(map_flow, {"xs": items}, flow_id="m",
+                                run_id="run-map")
+    eng_map.run_to_completion(run_map.run_id)
+
+    eng_par = make_engine()
+    par_flow = asl.parse(static_parallel_definition(items))
+    run_par = eng_par.start_run(par_flow, {"xs": items}, flow_id="p",
+                                run_id="run-par")
+    eng_par.run_to_completion(run_par.run_id)
+
+    assert run_map.status == run_par.status == RUN_SUCCEEDED
+    assert canon(run_map.context["results"]) == canon(
+        run_par.context["results"]
+    )
+    if window:
+        assert run_map.map_peak_live <= window
+
+
+# ------------------------------- property: injected failures, tolerance, order
+
+@settings(max_examples=12)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_map_with_failures_matches_per_item_standalone_runs(seed):
+    """Full tolerance: slot i equals the Iterator run standalone on item i
+    (error document for failed items, final context for successes)."""
+    rng = random.Random(seed)
+    items = [
+        round(rng.uniform(0.0, 3.0), 3) if rng.random() < 0.7 else -1.0
+        for _ in range(rng.randint(1, 10))
+    ]
+    window = rng.choice([1, 2, 4])
+
+    engine = make_engine()
+    flow = asl.parse(map_definition(window, tolerated=len(items)))
+    run = engine.start_run(flow, {"xs": items}, flow_id="m", run_id="run-map")
+    engine.run_to_completion(run.run_id)
+    assert run.status == RUN_SUCCEEDED
+    results = run.context["results"]
+    assert len(results) == len(items)
+
+    iterator = asl.parse(ITERATOR)
+    for i, item in enumerate(items):
+        ref_engine = make_engine()
+        ref = ref_engine.start_run(iterator, {"item": item, "index": i},
+                                   flow_id="it", run_id=f"ref-{i}")
+        ref_engine.run_to_completion(ref.run_id)
+        if item < 0:
+            assert ref.status == RUN_FAILED
+            assert results[i]["MapItemFailed"]["Error"] == ref.error["Error"]
+            assert results[i]["MapItemFailed"]["Cause"] == ref.error["Cause"]
+        else:
+            assert ref.status == RUN_SUCCEEDED
+            assert canon(results[i]) == canon(ref.context)
+
+
+@settings(max_examples=8)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_map_fail_fast_by_default(seed):
+    rng = random.Random(seed)
+    items = [round(rng.uniform(0.0, 2.0), 3) for _ in range(rng.randint(1, 8))]
+    items[rng.randrange(len(items))] = -1.0  # at least one failing item
+
+    engine = make_engine()
+    flow = asl.parse(map_definition(rng.choice([0, 1, 2])))
+    run = engine.start_run(flow, {"xs": items}, flow_id="m", run_id="run-map")
+    engine.run_to_completion(run.run_id)
+    assert run.status == RUN_FAILED
+    assert run.error["Error"] == "States.MapItemFailed"
+    # fail-fast left no live children behind
+    assert all(".m" not in rid for rid in engine.runs)
+
+
+def test_map_tolerance_boundary():
+    """Exactly ToleratedFailureCount failures still succeed; one more fails."""
+    items = [-1.0, 1.0, -1.0, 0.5]
+    ok = make_engine()
+    flow = asl.parse(map_definition(2, tolerated=2))
+    run = ok.start_run(flow, {"xs": items}, flow_id="m", run_id="r")
+    ok.run_to_completion(run.run_id)
+    assert run.status == RUN_SUCCEEDED
+    assert [("MapItemFailed" in r) for r in run.context["results"]] == [
+        True, False, True, False,
+    ]
+
+    bad = make_engine()
+    flow2 = asl.parse(map_definition(2, tolerated=1))
+    run2 = bad.start_run(flow2, {"xs": items}, flow_id="m", run_id="r")
+    bad.run_to_completion(run2.run_id)
+    assert run2.status == RUN_FAILED
+    assert run2.error["Error"] == "States.MapItemFailed"
+
+
+# ------------------------------------------------ the admission-window bound
+
+def test_10k_items_window_16_never_exceeds_window():
+    """Acceptance criterion: a 10,000-item Map with MaxConcurrency=16
+    completes with the live child-run count never exceeding 16, and the
+    engine's run table stays O(window), not O(items)."""
+    definition = {
+        "StartAt": "Fan",
+        "States": {
+            "Fan": {
+                "Type": "Map",
+                "ItemsPath": "$.xs",
+                "MaxConcurrency": 16,
+                # a pure-Pass iterator keeps the 10k sweep fast
+                "Iterator": {
+                    "StartAt": "P",
+                    "States": {"P": {"Type": "Pass",
+                                     "Result": {"ok": True},
+                                     "ResultPath": "$.out", "End": True}},
+                },
+                "ResultPath": "$.results",
+                "End": True,
+            },
+        },
+    }
+    engine = make_engine()
+    flow = asl.parse(definition)
+    n = 10_000
+    run = engine.start_run(flow, {"xs": list(range(n))}, flow_id="m",
+                           run_id="run-10k")
+    # drain in slices, sampling the live-child population between events
+    max_table = 0
+    while run.status == "ACTIVE":
+        stepped = engine.scheduler.drain(
+            max_events=997, stop=lambda: run.status != "ACTIVE"
+        )
+        with run.lock:
+            join = run.map_join
+            if join is not None:
+                assert join.live <= 16
+        max_table = max(max_table, len(engine.runs))
+        if stepped == 0:
+            break
+    assert run.status == RUN_SUCCEEDED
+    assert run.map_peak_live <= 16
+    assert len(run.context["results"]) == n
+    assert run.context["results"][1234] == {"item": 1234, "index": 1234,
+                                            "out": {"ok": True}}
+    # live state stayed bounded: parent + at most the window of children
+    assert max_table <= 1 + 16
+    assert list(engine.runs) == ["run-10k"]
+    assert engine.stats["map_items_completed"] == n
+
+
+# ------------------------------------------- crash mid-Map on a 4-shard pool
+
+@settings(max_examples=6)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_crash_mid_map_recovers_to_reference(seed, tmp_path_factory=None):
+    """Kill a 4-shard pool mid-Map — some items done, some in flight, some
+    unadmitted — and recover: terminal state and aggregated result must
+    match an uninterrupted run."""
+    import tempfile
+
+    rng = random.Random(seed)
+    items = [float(rng.randint(0, 6)) for _ in range(rng.randint(6, 24))]
+    window = rng.choice([2, 3, 5])
+    cut = rng.uniform(0.5, 8.0)
+    flow = asl.parse(map_definition(window))
+
+    with tempfile.TemporaryDirectory(prefix="mapcrash-") as base:
+        ref_pool = make_pool(os.path.join(base, "ref.jsonl"))
+        ref = ref_pool.start_run(flow, {"xs": items}, flow_id="f1",
+                                 run_id="run-x")
+        ref_pool.run_to_completion(ref.run_id)
+        assert ref.status == RUN_SUCCEEDED
+
+        crash_pool = make_pool(os.path.join(base, "crash.jsonl"))
+        victim = crash_pool.start_run(flow, {"xs": items}, flow_id="f1",
+                                      run_id="run-x")
+        crash_pool.scheduler.drain(until=cut)  # "crash": abandon the pool
+
+        recovered_pool = make_pool(os.path.join(base, "crash.jsonl"))
+        resumed = recovered_pool.recover({"f1": flow})
+        assert [r.run_id for r in resumed] == ["run-x"]
+        after = recovered_pool.run_to_completion("run-x")
+        assert after.status == ref.status
+        assert canon(after.context) == canon(ref.context)
+        assert after.map_peak_live <= window
+        # no orphaned children in the recovered pool
+        assert all(".m" not in rid for rid in recovered_pool.runs)
+
+
+# --------------------------- invariant 7: delta replay ≡ snapshot replay
+
+@settings(max_examples=8)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_map_delta_replay_equals_full_replay(seed):
+    """Map runs journal through the same delta/full encodings as linear
+    flows; both must replay to identical images (invariant 7) and the live
+    engines must agree on every outcome."""
+    rng = random.Random(seed)
+    items = [
+        float(rng.randint(0, 4)) if rng.random() < 0.8 else -1.0
+        for _ in range(rng.randint(1, 8))
+    ]
+    tolerated = rng.choice([0, len(items)])
+    flow = asl.parse(map_definition(rng.choice([1, 2, 0]), tolerated))
+
+    views = {}
+    for mode, delta in (("full", False), ("delta", True)):
+        journal = Journal()
+        engine = make_engine(journal, delta_journal=delta, snapshot_every=4)
+        run = engine.start_run(flow, {"xs": items}, flow_id="m",
+                               run_id="run-map")
+        engine.run_to_completion(run.run_id)
+        views[mode] = (
+            run.status,
+            canon(run.context),
+            canon(run.error),
+            {
+                rid: (im.status, canon(im.context))
+                for rid, im in replay(journal).items()
+            },
+        )
+    assert views["full"] == views["delta"]
+
+
+# --------------------------------------------------------- smaller semantics
+
+def test_item_selector_shapes_child_input():
+    definition = {
+        "StartAt": "Fan",
+        "States": {
+            "Fan": {
+                "Type": "Map",
+                "ItemsPath": "$.files",
+                "ItemSelector": {"path.$": "$.item", "rank.$": "$.index",
+                                 "dest.$": "$.context.dest", "mode": "copy"},
+                "Iterator": {
+                    "StartAt": "P",
+                    "States": {"P": {"Type": "Pass", "End": True}},
+                },
+                "ResultPath": "$.out",
+                "End": True,
+            },
+        },
+    }
+    engine = make_engine()
+    run = engine.start_run(asl.parse(definition),
+                           {"files": ["a.h5", "b.h5"], "dest": "/data"},
+                           flow_id="m", run_id="r")
+    engine.run_to_completion(run.run_id)
+    assert run.status == RUN_SUCCEEDED
+    assert run.context["out"] == [
+        {"path": "a.h5", "rank": 0, "dest": "/data", "mode": "copy"},
+        {"path": "b.h5", "rank": 1, "dest": "/data", "mode": "copy"},
+    ]
+
+
+def test_item_selector_context_is_effective_input_with_input_path():
+    """Regression (review): ``$.context`` in ItemSelector must resolve
+    against the Map state's *effective input* (InputPath-narrowed), the
+    same document ItemsPath selected from — not the raw run context."""
+    definition = {
+        "StartAt": "Fan",
+        "States": {
+            "Fan": {
+                "Type": "Map",
+                "InputPath": "$.data",
+                "ItemsPath": "$.files",
+                "ItemSelector": {"path.$": "$.item", "tag.$": "$.context.tag"},
+                "Iterator": {
+                    "StartAt": "P",
+                    "States": {"P": {"Type": "Pass", "End": True}},
+                },
+                "ResultPath": "$.out",
+                "End": True,
+            },
+        },
+    }
+    engine = make_engine()
+    run = engine.start_run(
+        asl.parse(definition),
+        {"data": {"files": ["a", "b"], "tag": "T"}, "unrelated": 1},
+        flow_id="m", run_id="r",
+    )
+    engine.run_to_completion(run.run_id)
+    assert run.status == RUN_SUCCEEDED
+    assert run.context["out"] == [
+        {"path": "a", "tag": "T"}, {"path": "b", "tag": "T"},
+    ]
+
+
+def test_directly_cancelled_child_counts_as_item_failure():
+    """Regression (review): cancelling one in-flight Map item must not
+    record its partial context as a successful slot — it counts against the
+    failure tolerance like any failed item."""
+    flow = asl.parse(map_definition(2))
+    engine = make_engine()
+    run = engine.start_run(flow, {"xs": [5.0, 5.0]}, flow_id="m", run_id="r")
+    engine.scheduler.drain(until=1.0)  # both items mid-sleep
+    engine.cancel_run("r.m0")
+    engine.run_to_completion(run.run_id)
+    assert run.status == RUN_FAILED
+    assert run.error["Error"] == "States.MapItemFailed"
+
+    # with tolerance, the slot carries an explicit cancellation marker
+    tol_flow = asl.parse(map_definition(2, tolerated=1))
+    engine2 = make_engine()
+    run2 = engine2.start_run(tol_flow, {"xs": [5.0, 5.0]}, flow_id="m",
+                             run_id="r")
+    engine2.scheduler.drain(until=1.0)
+    engine2.cancel_run("r.m0")
+    engine2.run_to_completion(run2.run_id)
+    assert run2.status == RUN_SUCCEEDED
+    assert run2.context["results"][0]["MapItemFailed"]["Error"] == (
+        "States.MapItemCancelled"
+    )
+    assert run2.context["results"][1]["echoed"]["status"] == "SUCCEEDED"
+
+
+def test_empty_items_completes_with_empty_results():
+    engine = make_engine()
+    flow = asl.parse(map_definition(4))
+    run = engine.start_run(flow, {"xs": []}, flow_id="m", run_id="r")
+    engine.run_to_completion(run.run_id)
+    assert run.status == RUN_SUCCEEDED
+    assert run.context["results"] == []
+
+
+def test_non_list_items_is_runtime_failure():
+    engine = make_engine()
+    flow = asl.parse(map_definition(4))
+    run = engine.start_run(flow, {"xs": {"not": "a list"}}, flow_id="m",
+                           run_id="r")
+    engine.run_to_completion(run.run_id)
+    assert run.status == RUN_FAILED
+    assert run.error["Error"] == "States.Runtime"
+
+
+def test_map_retry_clause_reruns_whole_state():
+    """A Retry on the Map state re-enters it; stale children from the
+    superseded attempt must not corrupt the new join."""
+    definition = {
+        "StartAt": "Fan",
+        "States": {
+            "Fan": {
+                "Type": "Map",
+                "ItemsPath": "$.xs",
+                "MaxConcurrency": 2,
+                "Iterator": ITERATOR,
+                "Retry": [{"ErrorEquals": ["States.MapItemFailed"],
+                           "IntervalSeconds": 1, "MaxAttempts": 2}],
+                "Catch": [{"ErrorEquals": ["States.ALL"],
+                           "ResultPath": "$.err", "Next": "Fallback"}],
+                "ResultPath": "$.results",
+                "Next": "Done",
+            },
+            "Fallback": {"Type": "Pass", "Result": {"recovered": True},
+                         "ResultPath": "$.fb", "Next": "Done"},
+            "Done": {"Type": "Succeed"},
+        },
+    }
+    engine = make_engine()
+    run = engine.start_run(asl.parse(definition), {"xs": [1.0, -1.0]},
+                           flow_id="m", run_id="r")
+    engine.run_to_completion(run.run_id)
+    # -1.0 fails on every attempt: 1 + 2 retries, then Catch routes onward
+    assert run.status == RUN_SUCCEEDED
+    assert run.context["fb"] == {"recovered": True}
+    assert run.context["err"]["Error"] == "States.MapItemFailed"
+    assert engine.stats["retries"] == 2
+    assert all(".m" not in rid for rid in engine.runs)
+
+
+def test_publish_time_validation_errors():
+    import pytest
+
+    from repro.core.errors import FlowValidationError
+
+    base = map_definition(2)
+
+    bad_items = {"StartAt": "Fan", "States": {
+        "Fan": {**base["States"]["Fan"], "ItemsPath": "$.xs["}}}
+    with pytest.raises(FlowValidationError):
+        asl.parse(bad_items)
+
+    no_iterator = {"StartAt": "Fan", "States": {
+        "Fan": {k: v for k, v in base["States"]["Fan"].items()
+                if k != "Iterator"}}}
+    with pytest.raises(FlowValidationError):
+        asl.parse(no_iterator)
+
+    bad_mc = {"StartAt": "Fan", "States": {
+        "Fan": {**base["States"]["Fan"], "MaxConcurrency": -1}}}
+    with pytest.raises(FlowValidationError):
+        asl.parse(bad_mc)
+
+    bad_selector = {"StartAt": "Fan", "States": {
+        "Fan": {**base["States"]["Fan"],
+                "ItemSelector": {"x.$": "not-a-path"}}}}
+    with pytest.raises(FlowValidationError):
+        asl.parse(bad_selector)
+
+    bad_iterator = {"StartAt": "Fan", "States": {
+        "Fan": {**base["States"]["Fan"],
+                "Iterator": {"StartAt": "Nope", "States": {
+                    "P": {"Type": "Pass", "End": True}}}}}}
+    with pytest.raises(FlowValidationError):
+        asl.parse(bad_iterator)
+
+
+def test_map_status_rollup_reports_progress():
+    engine = make_engine()
+    flow = asl.parse(map_definition(2))
+    run = engine.start_run(flow, {"xs": [1.0, 2.0, 3.0, 4.0]}, flow_id="m",
+                           run_id="r")
+    engine.scheduler.drain(until=1.5)
+    doc = run.as_status()
+    assert doc["map"]["items"] == 4
+    assert doc["map"]["max_concurrency"] == 2
+    assert doc["map"]["live"] <= 2
+    engine.run_to_completion(run.run_id)
+    assert "map" not in run.as_status()
+
+
+def test_action_urls_walks_map_iterator():
+    flow = asl.parse(map_definition(2))
+    assert asl.action_urls(flow) == ["ap://sleep", "ap://echo"]

@@ -44,6 +44,61 @@ def test_release_then_unknown():
         p.status(st.action_id)
 
 
+def test_retention_expiry_gcs_completed_actions():
+    """Regression: RETENTION_SECONDS was declared but never enforced — a
+    long-lived provider accumulated every completed action forever.  Past
+    retention, completed state is swept on access and the id becomes
+    unrecognized, exactly like an explicit release."""
+    clock = VirtualClock()
+    p = EchoProvider(clock=clock)
+    p.retention_seconds = 100.0
+    done = p.run({"echo_string": "old"}, request_id="req-old")
+    assert p.run({"echo_string": "x"}, request_id="req-old").action_id == \
+        done.action_id  # idempotent while retained
+    clock.advance(50.0)
+    assert p.status(done.action_id).status == SUCCEEDED  # still retained
+
+    clock.advance(51.0)  # past completion_time + retention
+    with pytest.raises(ActionUnknown):
+        p.status(done.action_id)
+    assert p.stats["expired"] == 1
+    # the idempotency mapping is dropped with the action: a re-submitted
+    # request_id starts a NEW action instead of resurrecting the old one
+    fresh = p.run({"echo_string": "new"}, request_id="req-old")
+    assert fresh.action_id != done.action_id
+    assert fresh.details["echo_string"] == "new"
+    # internal maps are actually bounded (nothing leaks)
+    assert done.action_id not in p._actions
+
+
+def test_retention_expiry_spares_active_and_released_actions():
+    clock = VirtualClock()
+    p = SleepProvider(clock=clock)
+    p.retention_seconds = 10.0
+    active = p.run({"seconds": 1e9})  # stays ACTIVE "forever"
+    quick = p.run({"seconds": 0.0})
+    clock.advance(1.0)
+    assert p.status(quick.action_id).status == SUCCEEDED
+    released = p.release(quick.action_id)
+    assert released.status == SUCCEEDED
+    clock.advance(1000.0)
+    # released state is gone, but the sweep skips it without double-counting,
+    # and ACTIVE actions are never expired no matter how old
+    assert p.status(active.action_id).status == ACTIVE
+    assert p.stats["expired"] == 0
+
+
+def test_status_reports_remaining_release_after():
+    clock = VirtualClock(start=1000.0)
+    p = EchoProvider(clock=clock)
+    p.retention_seconds = 100.0
+    st = p.run({"echo_string": "hi"})  # completes synchronously at t=1000
+    assert st.release_after == 100.0
+    clock.advance(30.0)
+    assert p.status(st.action_id).release_after == 70.0
+    assert p.status(st.action_id).as_dict()["release_after"] == 70.0
+
+
 def test_release_active_forbidden_then_cancel():
     clock = VirtualClock()
     p = SleepProvider(clock=clock)

@@ -45,6 +45,51 @@ def test_visibility_timeout_redelivery():
     assert svc.depth(q.queue_id) == 0
 
 
+def test_explicit_zero_visibility_timeout_is_not_queue_default():
+    """Regression: ``visibility_timeout=0`` was coerced to the queue default
+    by a falsy ``or`` — an explicit 0 must mean "no invisibility window"."""
+    svc, _ = make_service()
+    q = svc.create_queue("events", visibility_timeout=30.0)
+    svc.send(q.queue_id, {"n": 1})
+    [m1] = svc.receive(q.queue_id, visibility_timeout=0)
+    # no invisibility window: immediately redeliverable (the default would
+    # have hidden it for 30 virtual seconds)
+    [m2] = svc.receive(q.queue_id, visibility_timeout=0)
+    assert m2["message_id"] == m1["message_id"]
+    assert m2["receive_count"] == 2
+    # a zero-timeout receipt is expired on arrival; ack must say so rather
+    # than silently dropping a message another receiver may now hold
+    with pytest.raises(QueueInvariantError):
+        svc.ack(q.queue_id, m2["receipt"])
+
+
+def test_subsecond_visibility_timeout_override():
+    svc, clock = make_service()
+    q = svc.create_queue("events", visibility_timeout=30.0)
+    svc.send(q.queue_id, {"n": 1})
+    [m1] = svc.receive(q.queue_id, visibility_timeout=0.25)
+    assert svc.receive(q.queue_id) == []  # still invisible
+    clock.advance(0.3)
+    [m2] = svc.receive(q.queue_id)  # redelivered after 0.25s, not 30s
+    assert m2["message_id"] == m1["message_id"]
+    svc.ack(q.queue_id, m2["receipt"])
+    assert svc.depth(q.queue_id) == 0
+
+
+def test_update_queue_accepts_zero_visibility_timeout():
+    """``update_queue`` keys off presence (``key in updates``), so an
+    explicit 0 must round-trip instead of being dropped as falsy."""
+    svc, _ = make_service()
+    q = svc.create_queue("events", visibility_timeout=30.0)
+    svc.update_queue(q.queue_id, visibility_timeout=0.0)
+    assert q.visibility_timeout == 0.0
+    svc.send(q.queue_id, {"n": 1})
+    [m1] = svc.receive(q.queue_id)  # queue default is now 0
+    [m2] = svc.receive(q.queue_id)
+    assert m2["message_id"] == m1["message_id"]
+    assert m2["receive_count"] == 2
+
+
 def test_deferred_delivery():
     svc, clock = make_service()
     q = svc.create_queue("later")

@@ -50,24 +50,10 @@ def test_forward_and_loss(arch):
     assert float(loss) < jnp.log(cfg.vocab_size) * 2.5
 
 
-# xlstm-1.3b: known seed bug — non-finite mLSTM grads through the
-# apply_mlstm_block path (ROADMAP.md; minimal repro pinned as a strict
-# xfail in tests/models/test_xlstm_regression.py)
-TRAIN_STEP_ARCHS = [
-    pytest.param(
-        arch,
-        marks=pytest.mark.xfail(
-            strict=True,
-            reason="seed bug (ROADMAP): non-finite mLSTM grads",
-        ),
-    )
-    if arch == "xlstm-1.3b"
-    else arch
-    for arch in configs.ARCH_IDS
-]
-
-
-@pytest.mark.parametrize("arch", TRAIN_STEP_ARCHS)
+# xlstm-1.3b: the seed non-finite-mLSTM-grads bug is fixed (overflow of the
+# exp(-m) denominator floor in float32 — see repro.models.xlstm._denom and
+# tests/models/test_xlstm_regression.py); it runs as a plain param again.
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
 def test_train_step_decreases_loss(arch):
     cfg = configs.get(arch, smoke=True)
     model = Model(cfg)

@@ -1,27 +1,24 @@
-"""Pin the seed xLSTM numerics bug at its minimal repro (see ROADMAP.md).
+"""Regression tests for the (fixed) seed xLSTM numerics bug (ROADMAP.md).
 
-``test_train_step_decreases_loss[xlstm-1.3b]`` gets non-finite gradients in
-the mLSTM block params (embed/conv/norm/up/w_if).  ``mlstm_chunkwise`` grads
-are finite in isolation with random inputs; the NaN appears only through the
-``apply_mlstm_block`` path when fed the model's *actual* (bfloat16) embedding
-output.  This strict xfail keeps the bug visible: the future numerics PR that
-fixes it will XPASS here and must flip the test to a plain assertion.
+``test_train_step_decreases_loss[xlstm-1.3b]`` used to get non-finite
+gradients in the mLSTM block params (embed/conv/norm/up/w_if).  The repro
+was the model's *actual* (bfloat16) embedding output driving the gate
+pre-activations to large magnitudes: once the running stabilizer ``m``
+dropped below ``-88.7``, the denominator floor ``exp(-m)`` overflowed
+float32 to ``+inf`` — the forward stayed finite (``num/inf = 0``) but the
+backward of ``maximum(|den|, inf)`` produced ``0 * inf = NaN``.  Fixed by
+clamping the floor's exponent (``repro.models.xlstm._denom``); these tests
+keep the minimal repro as a plain assertion so the bug cannot return.
 """
 
 import jax
 import jax.numpy as jnp
 import jax.tree_util as jtu
-import pytest
 
 from repro import configs
 from repro.models import transformer as tfm
 from repro.models import xlstm
 from repro.models.model import Model
-
-XFAIL_REASON = (
-    "seed bug (ROADMAP): non-finite mLSTM grads through apply_mlstm_block "
-    "on the model's embedded-token inputs — pending a numerics PR"
-)
 
 
 def _minimal_repro():
@@ -42,7 +39,6 @@ def _minimal_repro():
     return jax.grad(loss_fn)(block)
 
 
-@pytest.mark.xfail(strict=True, reason=XFAIL_REASON)
 def test_mlstm_block_grads_finite_minimal_repro():
     grads = _minimal_repro()
     nonfinite = [
@@ -54,9 +50,9 @@ def test_mlstm_block_grads_finite_minimal_repro():
 
 
 def test_mlstm_block_forward_is_finite():
-    """The forward pass is fine — only the backward blows up.  This pass
-    keeps the repro honest: if the forward ever goes non-finite too, the
-    bug has changed shape and the xfail above needs re-triage."""
+    """The forward pass was always fine — only the backward blew up.  Kept
+    alongside the gradient assertion so a future forward-path regression is
+    distinguishable from a backward-only one."""
     cfg = configs.get("xlstm-1.3b", smoke=True)
     model = Model(cfg)
     params, _ = model.init(jax.random.PRNGKey(0))
@@ -66,3 +62,23 @@ def test_mlstm_block_forward_is_finite():
     block = jtu.tree_map(lambda a: a[0, 0], params["super"]["mlstm"])
     y, _ = xlstm.apply_mlstm_block(block, cfg, x0)
     assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_denom_floor_matches_unclamped_in_safe_range():
+    """Where ``exp(-m)`` does not overflow, the clamped floor is bit-identical
+    to the original ``maximum(|den|, exp(-m))`` formulation."""
+    den = jnp.asarray([[-2.0, 0.5], [1e-3, 0.0]], jnp.float32)
+    m = jnp.asarray([[-3.0, 0.0], [5.0, -80.0]], jnp.float32)
+    expected = jnp.maximum(jnp.abs(den), jnp.exp(-m))
+    assert bool(jnp.all(xlstm._denom(den, m) == expected))
+
+
+def test_denom_floor_finite_and_differentiable_below_overflow():
+    """m < -88.7: the old floor was +inf (NaN backward); the clamped floor
+    stays finite and its gradient is exactly zero on the clamped branch."""
+    den = jnp.asarray([0.1], jnp.float32)
+    m = jnp.asarray([-500.0], jnp.float32)
+    d = xlstm._denom(den, m)
+    assert bool(jnp.all(jnp.isfinite(d)))
+    g = jax.grad(lambda mm: jnp.sum(1.0 / xlstm._denom(den, mm)))(m)
+    assert bool(jnp.all(jnp.isfinite(g)))
