@@ -11,10 +11,10 @@ export REPRO_PYTHONPATH := src:.
 ARGS ?=
 
 .PHONY: check bench bench-quick bench-nightly shards fanout recovery \
-        overhead map durability xfail-guard regression-gate baseline
+        overhead map dormant durability xfail-guard regression-gate baseline
 
 check:
-	./scripts/check.sh
+	./scripts/check.sh $(ARGS)
 
 bench:
 	PYTHONPATH=$(REPRO_PYTHONPATH) python -m benchmarks.run $(ARGS)
@@ -26,7 +26,7 @@ bench-quick:
 # benchmarks/results/, gated against the checked-in baseline
 bench-nightly:
 	PYTHONPATH=$(REPRO_PYTHONPATH) python -m benchmarks.run --quick \
-	  --only shards,fanout,recovery,overhead,map $(ARGS)
+	  --only shards,fanout,recovery,overhead,map,dormant $(ARGS)
 
 shards:
 	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/shard_scaling.py $(ARGS)
@@ -43,6 +43,11 @@ overhead:
 map:
 	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/fig_map_fanout.py $(ARGS)
 
+# dormant-flow scale: passivation memory + wake latency (10k quick;
+# `make dormant` without --quick sweeps to 1M parked flows)
+dormant:
+	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/fig_dormant_scale.py $(ARGS)
+
 # crash-point / fault-injection durability suite (CI runs it as its own
 # job with REPRO_TEST_SHARDS=4 and a dedicated timeout)
 durability:
@@ -50,7 +55,8 @@ durability:
 	  tests/core/test_group_commit.py tests/core/test_compaction.py \
 	  tests/core/test_delta_journal.py tests/core/test_map.py \
 	  tests/core/test_recovery.py tests/core/test_shard_pool.py \
-	  tests/core/test_queue_properties.py tests/core/test_event_router.py
+	  tests/core/test_queue_properties.py tests/core/test_event_router.py \
+	  tests/core/test_passivation.py tests/core/test_timer_wheel.py
 
 xfail-guard:
 	./scripts/check_xfails.sh

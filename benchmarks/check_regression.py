@@ -118,6 +118,31 @@ def collect_metrics() -> dict[str, dict]:
                 "value": row["bytes_reduction_vs_full"],
                 "higher_is_better": True,
             }
+
+    # dormant-flow scale: gate the passivation memory win (acceptance:
+    # >= 50x resident/dormant at the manifest workload), the absolute
+    # per-dormant-run footprint, and the rehydration latency at the
+    # quick-mode acceptance cell (n=10k).  The p99 carries a wider
+    # per-metric tolerance: a single slow wake out of the sample moves it
+    # far more than any code change does.
+    dormant = _load("fig_dormant_scale") or []
+    for row in dormant:
+        if row["n"] != 10_000:
+            continue
+        metrics["fig_dormant_scale/n=10000/dormant_b_per_run"] = {
+            "value": row["dormant_b_per_run"], "higher_is_better": False,
+        }
+        metrics["fig_dormant_scale/n=10000/wake_p50_us"] = {
+            "value": row["wake_p50_us"], "higher_is_better": False,
+        }
+        metrics["fig_dormant_scale/n=10000/wake_p99_us"] = {
+            "value": row["wake_p99_us"], "higher_is_better": False,
+            "tolerance": 0.5,
+        }
+        if "mem_reduction" in row:
+            metrics["fig_dormant_scale/n=10000/mem_reduction"] = {
+                "value": row["mem_reduction"], "higher_is_better": True,
+            }
     return metrics
 
 
@@ -147,6 +172,8 @@ def check(metrics: dict[str, dict], tolerance: float) -> int:
     for name, spec in sorted(baseline.items()):
         base = spec["value"]
         higher = spec.get("higher_is_better", True)
+        # a metric may carry its own tolerance (noisy tails like wake p99)
+        tol = spec.get("tolerance", tolerance)
         current = metrics.get(name)
         if current is None:
             print(f"FAIL {name}: metric missing from current results "
@@ -155,13 +182,13 @@ def check(metrics: dict[str, dict], tolerance: float) -> int:
             continue
         value = current["value"]
         if higher:
-            ok = value >= base * (1.0 - tolerance)
+            ok = value >= base * (1.0 - tol)
             direction = ">="
-            bound = base * (1.0 - tolerance)
+            bound = base * (1.0 - tol)
         else:
-            ok = value <= base * (1.0 + tolerance)
+            ok = value <= base * (1.0 + tol)
             direction = "<="
-            bound = base * (1.0 + tolerance)
+            bound = base * (1.0 + tol)
         status = "ok  " if ok else "FAIL"
         print(f"{status} {name}: {value:.4g} (need {direction} {bound:.4g}, "
               f"baseline {base:.4g})")

@@ -14,7 +14,7 @@ import time
 import traceback
 
 BENCHES = ["fig7", "fig8", "fig9", "table1", "fig10", "shards", "fanout",
-           "recovery", "overhead", "map", "soak", "roofline"]
+           "recovery", "overhead", "map", "dormant", "soak", "roofline"]
 
 
 def _run_roofline() -> list[str]:
@@ -77,6 +77,9 @@ def main() -> int:
     if "map" in selected:
         from benchmarks import fig_map_fanout
         runners["map"] = fig_map_fanout.main
+    if "dormant" in selected:
+        from benchmarks import fig_dormant_scale
+        runners["dormant"] = fig_dormant_scale.main
     if "soak" in selected:
         from benchmarks import soak
         runners["soak"] = soak.main

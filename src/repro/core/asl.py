@@ -31,7 +31,7 @@ from typing import Any, Callable
 
 from . import context as ctx
 from . import jsonpath
-from .errors import FlowValidationError
+from .errors import FlowValidationError, StateMachineError
 
 STATE_TYPES = (
     "Action", "Pass", "Choice", "Wait", "Fail", "Succeed", "Parallel", "Map"
@@ -296,12 +296,30 @@ class State:
         return fn(context, result)
 
     def wait_seconds(self, context: Any) -> float:
+        """Effective wait duration.
+
+        A literal ``Seconds`` was validated at publish time; a
+        ``SecondsPath`` resolves against the run context and can only be
+        validated here, at run time — a non-numeric or negative value fails
+        the state (States.Runtime), subject to its Retry/Catch clauses.
+        """
         if self.seconds is not None:
-            return self.seconds
+            return float(self.seconds)
         sel = self._seconds_sel
         if sel is None:
             sel = self._seconds_sel = jsonpath.compile_path(self.seconds_path)
-        return float(sel.get(context))
+        value = sel.get(context)
+        if isinstance(value, bool) or not isinstance(value, (int, float)):
+            raise StateMachineError(
+                f"Wait {self.name}: SecondsPath {self.seconds_path!r} "
+                f"resolved to {value!r}, not a number"
+            )
+        if value < 0:
+            raise StateMachineError(
+                f"Wait {self.name}: SecondsPath {self.seconds_path!r} "
+                f"resolved to {value!r}, which is negative"
+            )
+        return float(value)
 
     # -- Map helpers (compiled ItemsPath / ItemSelector plans) ---------------
     def items_for(self, doc: Any) -> Any:
@@ -426,11 +444,23 @@ def _parse_state(name: str, doc: dict, where: str) -> State:
             raise FlowValidationError(f"{where}: Choice takes no Next/End")
     elif kind == "Wait":
         st.seconds = _opt(doc, "Seconds", _NUMERIC, where)
+        # publish-time validation: a literal Seconds is fully known when the
+        # flow is deployed, so a bad value must fail deployment, not the run
+        if isinstance(st.seconds, bool):
+            raise FlowValidationError(
+                f"{where}: Seconds must be a number, not a boolean"
+            )
+        if st.seconds is not None and st.seconds < 0:
+            raise FlowValidationError(f"{where}: Seconds must be >= 0")
         st.seconds_path = _opt(doc, "SecondsPath", str, where)
         if (st.seconds is None) == (st.seconds_path is None):
             raise FlowValidationError(
                 f"{where}: Wait requires exactly one of Seconds/SecondsPath"
             )
+        # a SecondsPath can only fail at run time (the context is unknown
+        # here), so Wait supports Retry/Catch for that States.Runtime
+        st.retry = _parse_retry(doc, where)
+        st.catch = _parse_catch(doc, where)
     elif kind == "Fail":
         st.error = _opt(doc, "Error", str, where, "States.Error") or "States.Error"
         st.cause = _opt(doc, "Cause", str, where, "") or ""

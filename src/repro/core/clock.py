@@ -25,6 +25,14 @@ class Clock:
     def now(self) -> float:
         raise NotImplementedError
 
+    def advance_to(self, t: float) -> None:
+        """Move virtual time forward to ``t``; a no-op on real clocks.
+
+        Part of the base interface so scheduler drive loops (``Scheduler``,
+        ``PoolScheduler``) can call it unconditionally instead of
+        duck-typing with ``hasattr`` — real time advances on its own.
+        """
+
     def wait(self, cv: threading.Condition, timeout: float | None) -> None:
         """Wait on ``cv`` for at most ``timeout`` seconds (already locked)."""
         raise NotImplementedError

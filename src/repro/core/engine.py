@@ -24,7 +24,6 @@ EXPERIMENTS.md §Perf.
 from __future__ import annotations
 
 import copy
-import heapq
 import secrets
 import threading
 import traceback
@@ -35,7 +34,7 @@ from typing import Any, Callable
 from . import actions as ap
 from . import asl
 from .auth import Caller
-from .clock import Clock, MonotonicId, RealClock
+from .clock import Clock, RealClock
 from .errors import (
     ActionFailedException,
     ActionTimeout,
@@ -47,6 +46,7 @@ from .errors import (
     error_matches,
 )
 from .journal import Journal, RunImage, replay_segment
+from .timer_wheel import TimerHandle, TimerWheel
 
 RUN_ACTIVE = "ACTIVE"
 RUN_SUCCEEDED = "SUCCEEDED"
@@ -212,49 +212,169 @@ class Run:
         return doc
 
 
+# shared by every stub whose run carries no tags/ACLs — the common case,
+# where per-stub empty containers would otherwise dominate the stub's
+# footprint (an empty set alone is ~4x a frozenset reference)
+_NO_ACL: frozenset = frozenset()
+_NO_RUN_AS: dict = {}
+
+
+class DormantStub:
+    """Residue of a passivated run (ARCHITECTURE invariant 9).
+
+    When a run parks in a long Wait or between far-apart action polls, the
+    engine serializes it to its journal segment (a ``run_passivated``
+    record) and keeps only this stub: enough to answer ``as_status()`` and
+    to fire the wake-up, with no context document, no event ring and no
+    locks — so a million dormant flows cost a million small stubs plus one
+    coarse timer-wheel bucket entry each, not a million resident
+    :class:`Run` s (measured by benchmarks/fig_dormant_scale.py).
+    """
+
+    # duck-typed against Run for the status/RBAC surfaces
+    parent = None
+    status = RUN_ACTIVE
+
+    __slots__ = (
+        "run_id", "flow", "flow_id", "creator", "caller", "run_as", "label",
+        "state", "attempt", "mode", "wake_time", "start_time", "seq",
+        "tags", "monitor_by", "manage_by", "events_dropped",
+        "journal_ref", "wake_handle",
+    )
+
+    def __init__(
+        self,
+        *,
+        run_id: str,
+        flow: asl.Flow,
+        flow_id: str,
+        creator: str,
+        caller: Caller | None,
+        run_as: dict[str, Caller],
+        label: str,
+        state: str,
+        attempt: int,
+        mode: str,
+        wake_time: float,
+        start_time: float,
+        seq: int,
+        tags: tuple[str, ...],
+        monitor_by: frozenset[str],
+        manage_by: frozenset[str],
+        events_dropped: int,
+        journal_ref: tuple[int, int] | None,
+    ):
+        self.run_id = run_id
+        self.flow = flow
+        self.flow_id = flow_id
+        self.creator = creator
+        self.caller = caller
+        self.run_as = run_as
+        self.label = label
+        self.state = state
+        self.attempt = attempt
+        #: "wait" — the run parked inside a Wait state and wakes straight
+        #: into the wait's transition; "action" — it parked between action
+        #: polls and wakes by re-entering the state (the journaled
+        #: ``request_id`` makes the re-dispatch idempotent)
+        self.mode = mode
+        self.wake_time = wake_time
+        self.start_time = start_time
+        self.seq = seq
+        self.tags = tags
+        self.monitor_by = monitor_by
+        self.manage_by = manage_by
+        self.events_dropped = events_dropped
+        #: (journal generation, append offset) of the run_passivated record
+        #: — the page-table entry rehydration seeks to; stale (and ignored)
+        #: once the journal compacts to a newer generation
+        self.journal_ref = journal_ref
+        self.wake_handle: TimerHandle | None = None
+
+    @property
+    def current_state(self) -> str:
+        return self.state
+
+    def as_status(self) -> dict:
+        return {
+            "run_id": self.run_id,
+            "flow_id": self.flow_id,
+            "label": self.label,
+            "status": RUN_ACTIVE,
+            "current_state": self.state,
+            "creator": self.creator,
+            "start_time": self.start_time,
+            "completion_time": None,
+            "events_dropped": self.events_dropped,
+            "details": {},
+            "dormant": True,
+            "wake_time": self.wake_time,
+        }
+
+
 class Scheduler:
-    """Time-ordered event heap shared by real and virtual modes."""
+    """Time-ordered event queue shared by real and virtual modes.
+
+    Storage is a hierarchical :class:`~repro.core.timer_wheel.TimerWheel`
+    rather than a flat heap: insertion is O(1) and a million dormant
+    far-future wake-ups (run passivation, long Waits) sit in coarse buckets
+    instead of a million-entry comparison heap.  The wheel's pop order is
+    *exactly* the old heap's — ``(due time, submission seq)`` — which is
+    what keeps :meth:`~repro.core.shard_pool.PoolScheduler.drain`'s
+    deterministic merge unchanged (differentially tested in
+    tests/core/test_timer_wheel.py).
+    """
 
     def __init__(self, clock: Clock):
         self.clock = clock
-        self._heap: list[tuple[float, int, Callable[[], None]]] = []
-        self._seq = MonotonicId()
+        self._wheel = TimerWheel(now=clock.now())
         self._cv = threading.Condition()
         self._stopped = False
 
-    def call_at(self, t: float, fn: Callable[[], None]) -> None:
+    def call_at(
+        self, t: float, fn: Callable[..., None], arg: Any = None
+    ) -> TimerHandle:
+        # ``arg`` rides on the handle (see TimerHandle.fire) so mass
+        # schedulers — a million dormant wake-ups — share one callback
+        # object instead of allocating a closure per entry
         with self._cv:
-            heapq.heappush(self._heap, (t, self._seq.next(), fn))
+            handle = self._wheel.schedule(t, fn, arg)
             self._cv.notify_all()
+        return handle
 
-    def call_later(self, delay: float, fn: Callable[[], None]) -> None:
-        self.call_at(self.clock.now() + max(0.0, delay), fn)
+    def call_later(
+        self, delay: float, fn: Callable[..., None], arg: Any = None
+    ) -> TimerHandle:
+        return self.call_at(self.clock.now() + max(0.0, delay), fn, arg)
 
-    def submit(self, fn: Callable[[], None]) -> None:
-        self.call_later(0.0, fn)
+    def submit(self, fn: Callable[[], None]) -> TimerHandle:
+        return self.call_later(0.0, fn)
+
+    def cancel(self, handle: TimerHandle) -> bool:
+        """Cancel a pending event (False if already fired/cancelled)."""
+        with self._cv:
+            return self._wheel.cancel(handle)
 
     # -- virtual-time drive --------------------------------------------------
     def peek_time(self) -> float | None:
         """Due time of the earliest pending event (None when empty).
 
         Used by :class:`~repro.core.shard_pool.PoolScheduler` to merge many
-        shard heaps into one global time order.
+        shard queues into one global time order.  Exact, not a bucket bound:
+        the wheel cascades until the true earliest entry surfaces.
         """
         with self._cv:
-            return self._heap[0][0] if self._heap else None
+            return self._wheel.next_deadline()
 
     def pop_next(
         self, until: float | None = None
     ) -> tuple[float, Callable[[], None]] | None:
         """Pop the earliest event due at or before ``until`` (None if none)."""
         with self._cv:
-            if not self._heap:
+            handle = self._wheel.pop(until)
+            if handle is None:
                 return None
-            t, _, fn = self._heap[0]
-            if until is not None and t > until:
-                return None
-            heapq.heappop(self._heap)
-        return t, fn
+        return handle.t, handle.fire
 
     def drain(
         self,
@@ -277,8 +397,7 @@ class Scheduler:
             if popped is None:
                 return n
             t, fn = popped
-            if hasattr(self.clock, "advance_to"):
-                self.clock.advance_to(t)
+            self.clock.advance_to(t)
             fn()
             n += 1
         return n
@@ -290,14 +409,15 @@ class Scheduler:
                 if self._stopped:
                     return
                 now = self.clock.now()
-                if self._heap and self._heap[0][0] <= now:
-                    _, _, fn = heapq.heappop(self._heap)
-                else:
+                handle = self._wheel.pop(until=now)
+                if handle is None:
+                    deadline = self._wheel.next_deadline()
                     timeout = (
-                        max(0.0, self._heap[0][0] - now) if self._heap else None
+                        max(0.0, deadline - now) if deadline is not None else None
                     )
                     self.clock.wait(self._cv, timeout)
                     continue
+                fn = handle.fire
             executor(fn)
 
     def stop(self) -> None:
@@ -307,7 +427,7 @@ class Scheduler:
 
     def pending(self) -> int:
         with self._cv:
-            return len(self._heap)
+            return len(self._wheel)
 
 
 class FlowEngine:
@@ -323,6 +443,7 @@ class FlowEngine:
         start_threads: bool | None = None,
         delta_journal: bool = True,
         snapshot_every: int = 64,
+        passivate_after: float | None = None,
     ):
         self.registry = registry
         self.clock = clock or RealClock()
@@ -335,8 +456,17 @@ class FlowEngine:
         #: baseline (measured by benchmarks/fig_transition_overhead.py).
         self.delta_journal = delta_journal
         self.snapshot_every = max(1, snapshot_every)
+        #: park a run out of the engine when its next wake-up is at least
+        #: this many seconds away (None disables passivation).  Parked runs
+        #: live in ``dormant`` as :class:`DormantStub` s; their full state is
+        #: a ``run_passivated`` journal record.
+        self.passivate_after = passivate_after
         self.scheduler = Scheduler(self.clock)
         self.runs: dict[str, Run] = {}
+        self.dormant: dict[str, DormantStub] = {}
+        # cached bound method: every dormant wake-up shares this one
+        # callback object (its run_id rides on the TimerHandle)
+        self._wake_dormant_cb = self._wake_dormant
         self._lock = threading.RLock()
         self.stats = {
             "runs_started": 0,
@@ -348,6 +478,9 @@ class FlowEngine:
             "retries": 0,
             "map_items_admitted": 0,
             "map_items_completed": 0,
+            "runs_passivated": 0,
+            "runs_rehydrated": 0,
+            "runs_reparked": 0,
         }
         # real-time execution machinery (not used under a virtual clock)
         self._threads: list[threading.Thread] = []
@@ -436,11 +569,47 @@ class FlowEngine:
         return run
 
     def get_run(self, run_id: str) -> Run:
+        """Fetch a run, rehydrating it if it is dormant.
+
+        Callers that only need a status snapshot should use
+        :meth:`run_status` / :meth:`peek_run` instead — those answer from
+        the stub without paging the run back in.
+        """
         with self._lock:
             run = self.runs.get(run_id)
+        if run is None and run_id in self.dormant:
+            run = self._rehydrate(run_id, fire=False)
         if run is None:
             raise NotFound(f"unknown run {run_id!r}")
         return run
+
+    def peek_run(self, run_id: str) -> "Run | DormantStub":
+        """The resident Run or dormant stub, without rehydration."""
+        with self._lock:
+            run = self.runs.get(run_id)
+            if run is not None:
+                return run
+            stub = self.dormant.get(run_id)
+            if stub is not None:
+                return stub
+        raise NotFound(f"unknown run {run_id!r}")
+
+    def run_status(self, run_id: str) -> dict:
+        """Status snapshot; dormant runs answer from their stub (no page-in)."""
+        return self.peek_run(run_id).as_status()
+
+    def wake_run(self, run_id: str) -> bool:
+        """Rehydrate a dormant run now (external event targeting the run).
+
+        A parked Wait becomes resident with its original deadline re-armed;
+        a parked action poll re-enters its state immediately and discovers
+        the action's current status.  Returns False when the run is already
+        resident (or unknown) — waking is a no-op for live runs.
+        """
+        with self._lock:
+            if run_id not in self.dormant:
+                return False
+        return self._rehydrate(run_id, fire=False) is not None
 
     def cancel_run(self, run_id: str) -> Run:
         run = self.get_run(run_id)
@@ -523,7 +692,9 @@ class FlowEngine:
                 {"op": "put", "path": result_path, "value": result}
             )
 
-    def _journal_transition(self, run: Run, record: dict) -> None:
+    def _journal_transition(
+        self, run: Run, record: dict, full_context: bool = False
+    ) -> int | None:
         """Append a transition record with its context payload.
 
         Full-context mode (``delta_journal=False``, the pre-delta baseline)
@@ -535,10 +706,20 @@ class FlowEngine:
         journaled (a Parallel branch child, which has no ``run_created``
         record) gets a full context on its first record so replay has a
         baseline to patch.
+
+        ``full_context=True`` forces the whole context into this record
+        even in delta mode (resetting the patch chain, like a snapshot):
+        passivation requires it so one seek to the returned offset
+        reconstructs the paged-out run without replaying its patch chain.
+        Returns the record's journal offset (see :meth:`Journal.append`).
         """
         snapshot = False
         with run.lock:
-            if not self.delta_journal or not run.context_journaled:
+            if (
+                full_context
+                or not self.delta_journal
+                or not run.context_journaled
+            ):
                 record["context"] = run.context
                 run.context_journaled = True
                 run.pending_patch = []
@@ -550,7 +731,7 @@ class FlowEngine:
                 if run.patch_records >= self.snapshot_every:
                     run.patch_records = 0
                     snapshot = True
-        self.journal.append(record)
+        offset = self.journal.append(record)
         if snapshot:
             self.journal.append(
                 {
@@ -560,6 +741,7 @@ class FlowEngine:
                     "t": record["t"],
                 }
             )
+        return offset
 
     # ----------------------------------------------------------- state machine
     def _enter_state(self, run: Run, state_name: str, attempt: int = 0) -> None:
@@ -649,7 +831,244 @@ class FlowEngine:
 
     def _exec_wait(self, run: Run, state: asl.State) -> None:
         seconds = state.wait_seconds(run.context)
-        self.scheduler.call_later(seconds, lambda: self._transition(run, state))
+        wake_time = self.clock.now() + seconds
+        if self._passivation_eligible(run, seconds):
+            self._passivate(run, state, wake_time=wake_time, mode="wait")
+            return
+        self.scheduler.call_at(
+            wake_time, lambda: self._finish_wait(run, state)
+        )
+
+    def _finish_wait(self, run: Run, state: asl.State) -> None:
+        """Complete a Wait: transition iff the run is still parked in it."""
+        with run.lock:
+            if run.status != RUN_ACTIVE or run.current_state != state.name:
+                return
+        if not self._live(run):
+            return
+        self._transition(run, state)
+
+    # -- passivation (ARCHITECTURE invariant 9) -------------------------------
+    def _live(self, run: Run) -> bool:
+        """True iff this exact Run object is the engine's current one.
+
+        A passivate/rehydrate cycle replaces the Run object; events still
+        holding the old object (provider completion callbacks, in-flight
+        polls) are ghosts and must not act — the rehydrated successor owns
+        the run now.
+        """
+        with self._lock:
+            return self.runs.get(run.run_id) is run
+
+    def _passivation_eligible(self, run: Run, delay: float) -> bool:
+        if self.passivate_after is None or delay < self.passivate_after:
+            return False
+        with run.lock:
+            # fan-out members stay resident: joins hold direct object
+            # references both ways, and completion callbacks (flow-as-action
+            # composition) are closures that cannot be journaled
+            return (
+                run.status == RUN_ACTIVE
+                and run.parent is None
+                and not run.children
+                and run.map_join is None
+                and not run.completion_callbacks
+                and not run.cancel_requested
+            )
+
+    def _passivate(
+        self,
+        run: Run,
+        state: asl.State,
+        wake_time: float,
+        mode: str,
+        provider: ap.ActionProvider | None = None,
+        action_id: str | None = None,
+    ) -> None:
+        """Page a parked run out of the engine (journal is the backing store).
+
+        Journals a full-context ``run_passivated`` record, swaps the run
+        table entry for a :class:`DormantStub`, and schedules the wake-up.
+        The stub remembers the record's (generation, offset) so rehydration
+        is one seek + one decode; after a compaction the offset goes stale
+        and rehydration falls back to a segment replay.
+        """
+        now = self.clock.now()
+        offset = self._journal_transition(
+            run,
+            {
+                "type": "run_passivated",
+                "run_id": run.run_id,
+                "state": state.name,
+                "attempt": run.attempt,
+                "mode": mode,
+                "wake_time": wake_time,
+                "t": now,
+            },
+            full_context=True,
+        )
+        generation = self.journal.generation
+        stub = DormantStub(
+            run_id=run.run_id,
+            flow=run.flow,
+            flow_id=run.flow_id,
+            creator=run.creator,
+            caller=run.caller,
+            run_as=run.run_as if run.run_as else _NO_RUN_AS,
+            label=run.label,
+            state=state.name,
+            attempt=run.attempt,
+            mode=mode,
+            wake_time=wake_time,
+            start_time=run.start_time,
+            seq=run.seq,
+            # read-only views; empties collapse to shared singletons so a
+            # tagless, ACL-less run (the common case) pays nothing here
+            tags=tuple(run.tags) if run.tags else (),
+            monitor_by=frozenset(run.monitor_by) if run.monitor_by else _NO_ACL,
+            manage_by=frozenset(run.manage_by) if run.manage_by else _NO_ACL,
+            # the in-memory event ring does not survive the page-out;
+            # account for it so the status surface stays honest
+            events_dropped=run.events_dropped + len(run.events),
+            journal_ref=(generation, offset) if offset is not None else None,
+        )
+        with self._lock:
+            # crash window: the record above is durable but the run is still
+            # resident — recovery from a crash here re-parks the run from
+            # its run_passivated image, which is equivalent
+            self.dormant[run.run_id] = stub
+            if self.runs.get(run.run_id) is run:
+                del self.runs[run.run_id]
+            self.stats["runs_passivated"] += 1
+        # one cached bound method + the run_id as the handle's arg: no
+        # per-stub closure, so a million parked runs share one callback
+        stub.wake_handle = self.scheduler.call_at(
+            wake_time, self._wake_dormant_cb, arg=run.run_id
+        )
+        if provider is not None and action_id is not None:
+            # early wake when the parked action completes: the rehydrated
+            # run re-enters its state and the provider's request_id dedup
+            # resolves the re-dispatch to the already-finished action
+            try:
+                provider.subscribe(
+                    action_id,
+                    lambda doc, rid=run.run_id: self.scheduler.submit(
+                        lambda: self.wake_run(rid)
+                    ),
+                )
+            except (AttributeError, AutomationError):
+                pass
+
+    def _wake_dormant(self, run_id: str) -> None:
+        """Timer-fired wake-up; a no-op if the run was rehydrated earlier."""
+        with self._lock:
+            if run_id not in self.dormant:
+                return
+        try:
+            self._rehydrate(run_id, fire=True)
+        except Exception:  # pragma: no cover - diagnostics over crash
+            traceback.print_exc()
+
+    def _load_passivated_context(self, stub: DormantStub) -> Any:
+        """Read the paged-out context back from the journal.
+
+        Fast path: one seek to the stub's recorded offset.  Fallback (the
+        offset predates a compaction, or the record is unreadable): replay
+        the segment — the checkpoint folded the run_passivated image in, so
+        replay still reconstructs it.
+        """
+        ref = stub.journal_ref
+        if ref is not None:
+            generation, offset = ref
+            if generation == self.journal.generation:
+                rec = self.journal.record_at(offset)
+                if (
+                    rec is not None
+                    and rec.get("type") == "run_passivated"
+                    and rec.get("run_id") == stub.run_id
+                    and "context" in rec
+                ):
+                    return copy.deepcopy(rec["context"])
+        image = replay_segment(self.journal).runs.get(stub.run_id)
+        if image is None:
+            raise NotFound(
+                f"no journaled image for dormant run {stub.run_id!r}"
+            )
+        return copy.deepcopy(image.context)
+
+    def _rehydrate(self, run_id: str, fire: bool) -> Run | None:
+        """Page a dormant run back in and resume it.
+
+        ``fire=True`` (the wake timer): a "wait"-mode run completes its Wait
+        now.  ``fire=False`` (early access — get_run, wake_run, an external
+        event): a "wait"-mode run becomes resident with its original
+        deadline re-armed, preserving timing transparency.  "action"-mode
+        runs always re-enter their state (idempotent via request_id dedup).
+        """
+        with self._lock:
+            stub = self.dormant.pop(run_id, None)
+            if stub is None:
+                return self.runs.get(run_id)
+        if stub.wake_handle is not None:
+            self.scheduler.cancel(stub.wake_handle)
+        try:
+            context = self._load_passivated_context(stub)
+        except AutomationError as e:
+            context = None
+            load_error: AutomationError | None = e
+        else:
+            load_error = None
+        run = Run(
+            run_id=stub.run_id,
+            flow=stub.flow,
+            flow_id=stub.flow_id,
+            creator=stub.creator,
+            caller=stub.caller,
+            run_as=dict(stub.run_as),
+            label=stub.label,
+            tags=list(stub.tags),
+            monitor_by=set(stub.monitor_by),
+            manage_by=set(stub.manage_by),
+            context=context,
+            current_state=stub.state,
+            attempt=stub.attempt,
+            start_time=stub.start_time,
+            context_journaled=True,
+            seq=stub.seq,
+        )
+        run.events_dropped = stub.events_dropped
+        with self._lock:
+            self.runs[run_id] = run
+            self.stats["runs_rehydrated"] += 1
+        now = self.clock.now()
+        run.log_event(now, "RunRehydrated", state=stub.state, mode=stub.mode)
+        if load_error is not None:
+            self._run_failed(run, load_error)
+            return run
+        state = stub.flow.states.get(stub.state)
+        if state is None:
+            self._run_failed(
+                run, StateMachineError(f"unknown state {stub.state}")
+            )
+            return run
+        if stub.mode == "wait":
+            if fire or stub.wake_time is None or stub.wake_time <= now:
+                self.scheduler.submit(lambda: self._finish_wait(run, state))
+            else:
+                # the stale _wake_dormant event (if not cancelled above)
+                # no-ops on the missing stub; this is the live continuation
+                self.scheduler.call_at(
+                    stub.wake_time, lambda: self._finish_wait(run, state)
+                )
+        else:
+            self.scheduler.submit(
+                lambda: self._enter_state(run, stub.state, stub.attempt)
+            )
+        return run
+
+    def dormant_stubs(self) -> "list[DormantStub]":
+        with self._lock:
+            return list(self.dormant.values())
 
     # -- Action states ----------------------------------------------------------
     def _exec_action(self, run: Run, state: asl.State) -> None:
@@ -739,6 +1158,8 @@ class FlowEngine:
         with run.lock:
             if run.status != RUN_ACTIVE or run.poll_generation != generation:
                 return
+        if not self._live(run):
+            return  # ghost callback: the run passivated and was replaced
         self._action_finished(run, state, doc)
 
     def _poll_action(
@@ -749,7 +1170,7 @@ class FlowEngine:
                 return
             action_id = run.action_id
             deadline = run.action_deadline
-        if action_id is None:
+        if action_id is None or not self._live(run):
             return
         if run.cancel_requested:
             self._check_cancel(run)
@@ -780,6 +1201,18 @@ class FlowEngine:
             nxt = self.polling.next_interval(interval)
             if deadline is not None:
                 nxt = min(nxt, max(0.0, deadline - now) + 1e-9)
+            if self._passivation_eligible(run, nxt):
+                # long-poll parking: page the run out until the next poll
+                # (or until the provider's completion callback wakes it)
+                self._passivate(
+                    run,
+                    state,
+                    wake_time=now + nxt,
+                    mode="action",
+                    provider=provider,
+                    action_id=action_id,
+                )
+                return
             self.scheduler.call_later(
                 nxt, lambda: self._poll_action(run, state, generation, nxt)
             )
@@ -1281,10 +1714,20 @@ class FlowEngine:
                         self.stats[key] = max(self.stats.get(key, 0), value)
         resumed: list[Run] = []
         for image in view.runs.values():
-            if image.status != RUN_ACTIVE or image.run_id in self.runs:
+            if (
+                image.status != RUN_ACTIVE
+                or image.run_id in self.runs
+                or image.run_id in self.dormant
+            ):
                 continue
             flow = flows_by_id.get(image.flow_id)
             if flow is None:
+                continue
+            if image.passivated and resume and self.passivate_after is not None:
+                # the run was paged out when the crash hit: re-park it as a
+                # stub (with a fresh page-out record so rehydration has a
+                # fast path into this segment) instead of residency
+                self._adopt_dormant(image, flow)
                 continue
             run = Run(
                 run_id=image.run_id,
@@ -1307,6 +1750,21 @@ class FlowEngine:
             resumed.append(run)
             if not resume:
                 continue
+            if (
+                image.passivated
+                and image.passivate_mode == "wait"
+                and image.current_state in flow.states
+            ):
+                # passivation-disabled restart of a parked Wait: honor the
+                # original deadline instead of restarting the whole wait
+                state = flow.states[image.current_state]
+                run.current_state = image.current_state
+                run.attempt = image.attempt
+                wake = max(image.wake_time or 0.0, self.clock.now())
+                self.scheduler.call_at(
+                    wake, lambda r=run, s=state: self._finish_wait(r, s)
+                )
+                continue
             state_name = image.current_state or flow.start_at
             attempt = image.attempt
             # Re-enter the interrupted state.  The journaled request_id makes
@@ -1315,6 +1773,59 @@ class FlowEngine:
                 lambda r=run, s=state_name, a=attempt: self._enter_state(r, s, a)
             )
         return resumed
+
+    def _adopt_dormant(self, image: RunImage, flow: asl.Flow) -> None:
+        """Re-park a recovered passivated image as a dormant stub.
+
+        Appends a fresh ``run_passivated`` record (dirty-page writeback into
+        the current segment) so the stub's journal_ref addresses a live
+        offset — without it every wake after recovery would pay a full
+        segment replay.
+        """
+        now = self.clock.now()
+        wake_time = image.wake_time if image.wake_time is not None else now
+        mode = image.passivate_mode or "wait"
+        state_name = image.current_state or flow.start_at
+        offset = self.journal.append(
+            {
+                "type": "run_passivated",
+                "run_id": image.run_id,
+                "state": state_name,
+                "attempt": image.attempt,
+                "mode": mode,
+                "wake_time": wake_time,
+                "context": image.context,
+                "t": now,
+            }
+        )
+        stub = DormantStub(
+            run_id=image.run_id,
+            flow=flow,
+            flow_id=image.flow_id or "flow",
+            creator=image.creator,
+            caller=None,  # like any recovery, the token wallet did not survive
+            run_as=_NO_RUN_AS,
+            label=image.label,
+            state=state_name,
+            attempt=image.attempt,
+            mode=mode,
+            wake_time=wake_time,
+            start_time=now,
+            seq=0,
+            tags=(),
+            monitor_by=_NO_ACL,
+            manage_by=_NO_ACL,
+            events_dropped=0,
+            journal_ref=(
+                (self.journal.generation, offset) if offset is not None else None
+            ),
+        )
+        with self._lock:
+            self.dormant[image.run_id] = stub
+            self.stats["runs_reparked"] += 1
+        stub.wake_handle = self.scheduler.call_at(
+            max(wake_time, now), self._wake_dormant_cb, arg=image.run_id
+        )
 
 
 def _details_str(details: Any) -> str:

@@ -94,6 +94,7 @@ class FlowsService:
         queues: QueueService | None = None,
         delta_journal: bool = True,
         snapshot_every: int = 64,
+        passivate_after: float | None = None,
     ):
         self.clock = clock or RealClock()
         self.auth = auth
@@ -113,6 +114,7 @@ class FlowsService:
             max_workers=max_workers,
             delta_journal=delta_journal,
             snapshot_every=snapshot_every,
+            passivate_after=passivate_after,
         )
         self._flows: dict[str, FlowRecord] = {}
         self._lock = threading.RLock()
@@ -129,6 +131,7 @@ class FlowsService:
                 clock=self.clock,
                 scheduler=self.engine.scheduler,
                 journal_for=self.engine.journal_for,
+                run_waker=self.engine.wake_run,
             )
         if auth is not None:
             auth.register_resource_server("flows.repro")
@@ -300,7 +303,10 @@ class FlowsService:
 
     # ------------------------------------------------------------- run mgmt
     def run_status(self, run_id: str, caller: Caller | None = None) -> dict:
-        run = self.engine.get_run(run_id)
+        # peek_run answers from a dormant run's stub without rehydrating it —
+        # a status poll against a parked run must stay O(1), not page the
+        # whole run back in (passivation transparency, ARCHITECTURE.md inv. 9)
+        run = self.engine.peek_run(run_id)
         self._require_run(run, caller, run.monitor_by | run.manage_by, "Monitor")
         return run.as_status()
 
@@ -321,9 +327,12 @@ class FlowsService:
         status: str | None = None,
         tag: str | None = None,
     ) -> list[dict]:
-        # ``engine.runs`` aggregates every shard's runs in submission order
+        # ``engine.runs`` aggregates every shard's runs in submission order;
+        # dormant stubs are appended so parked runs stay listable without
+        # being rehydrated (their stub carries the status snapshot)
         out = []
-        for run in list(self.engine.runs.values()):
+        resident = list(self.engine.runs.values())
+        for run in resident + self.engine.dormant_stubs():
             if run.parent is not None:
                 continue
             if flow_id and run.flow_id != flow_id:
@@ -420,6 +429,42 @@ class FlowsService:
             config, owner=owner, trigger_id=trigger_id
         )
 
+    def create_run_wake_trigger(
+        self,
+        queue_id: str,
+        predicate: str,
+        run_id_key: str = "run_id",
+        transform: dict[str, str] | None = None,
+        owner: str = "anonymous",
+        trigger_id: str | None = None,
+        poll_min_s: float = 0.5,
+        poll_max_s: float = 30.0,
+        batch: int = 10,
+    ) -> Trigger:
+        """Bind a queue + predicate to *waking dormant runs* (paper §5.5 +
+        passivation).
+
+        A matching event rehydrates the parked run whose id sits at
+        ``run_id_key`` of the transformed input, instead of starting a new
+        flow.  Journaled with the durable action ref ``run-wake`` so
+        :meth:`recover_triggers` re-binds it without needing any flow to be
+        re-published first.
+        """
+        config = TriggerConfig(
+            queue_id=queue_id,
+            predicate=predicate,
+            action_invoker=lambda _input, _caller: "",  # unused on wake path
+            transform=dict(transform or {}),
+            poll_min_s=poll_min_s,
+            poll_max_s=poll_max_s,
+            batch=batch,
+            action_ref="run-wake",
+            wake_run_key=run_id_key,
+        )
+        return self._router().create_trigger(
+            config, owner=owner, trigger_id=trigger_id
+        )
+
     def enable_trigger(self, trigger_id: str, caller: Caller | None = None) -> None:
         self._router().enable(trigger_id, caller=caller)
 
@@ -451,10 +496,16 @@ class FlowsService:
         router = self._router()
 
         def invoker_for(image: TriggerImage):
+            if image.action_ref == "run-wake":
+                # wake-run triggers dispatch through the router's run_waker;
+                # the invoker is never called on that path
+                return lambda _input, _caller: ""
             flow_id = image.action_ref.removeprefix("flow:")
             return self._trigger_invoker(flow_id)
 
         def flow_published(image: TriggerImage) -> bool:
+            if image.action_ref == "run-wake":
+                return True  # not bound to a flow; always recoverable
             with self._lock:
                 return image.action_ref.removeprefix("flow:") in self._flows
 

@@ -259,11 +259,16 @@ class Journal:
         #: last auto-compaction failure, if any (auto-compaction is
         #: best-effort: it must never fail the append that triggered it)
         self.last_compact_error: Exception | None = None
+        #: byte offset (file) / index (memory) where the next record lands,
+        #: and the per-append offset handoff (see :meth:`append`)
+        self._pos = 0
+        self._offsets: dict[int, int] = {}
         if path is not None:
             os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
             if os.path.exists(path):
                 self._scan_existing(path)
             self._fh = open(path, "a", encoding="utf-8")
+            self._pos = os.path.getsize(path)
         self._committer = GroupCommitter(self._flush_batch)
 
     def _scan_existing(self, path: str) -> None:
@@ -299,21 +304,37 @@ class Journal:
                 fh.truncate(good_end)
 
     # ------------------------------------------------------------------ append
-    def append(self, record: dict) -> None:
-        """Write-ahead append: returns only once ``record`` is durable."""
+    def append(self, record: dict) -> int | None:
+        """Write-ahead append: returns only once ``record`` is durable.
+
+        Returns the record's position in the current segment — a byte
+        offset for file journals, a list index for in-memory ones — valid
+        until the next compaction (callers must pair it with
+        :attr:`generation` and treat a generation mismatch as stale; see
+        :meth:`record_at`).  Run passivation uses this as a page-table
+        entry: rehydrating a dormant run seeks straight to its
+        ``run_passivated`` record instead of replaying the segment.
+        """
         line = json.dumps(record, separators=(",", ":"), default=_jsonable)
-        if self.group_commit:
-            self._committer.append_and_commit(line)
-        else:
-            # serialized baseline: one durability round trip per record,
-            # taken while holding the journal lock
-            with self._lock:
-                self._flush_batch([line])
+        try:
+            if self.group_commit:
+                self._committer.append_and_commit(line)
+            else:
+                # serialized baseline: one durability round trip per record,
+                # taken while holding the journal lock
+                with self._lock:
+                    self._flush_batch([line])
+        finally:
+            # the leader that flushed our batch parked our offset under this
+            # exact string object's id; claim it (pop even on failure so the
+            # handoff dict cannot leak entries for poisoned appends)
+            offset = self._offsets.pop(id(line), None)
         if (
             self.compact_every is not None
             and self._since_checkpoint > self.compact_every
         ):
             self._maybe_auto_compact()
+        return offset
 
     def _maybe_auto_compact(self) -> None:
         with self._lock:
@@ -345,18 +366,57 @@ class Journal:
         if self.latency_s:
             time.sleep(self.latency_s)  # one simulated RTT per batch
         if self._fh is not None:
+            # park each record's byte offset for its append() caller, keyed
+            # by the submitted string object's identity (unique while the
+            # caller holds the reference).  json.dumps emits ASCII
+            # (ensure_ascii), so byte length == len(line) + newline.
+            base = self._pos
+            for line in lines:
+                self._offsets[id(line)] = base
+                base += len(line) + 1
             self._fh.write("".join(line + "\n" for line in lines))
+            self._pos = base
             self._hook("post-write", lines)
             self._fh.flush()
             self._hook("post-flush", lines)
             if self.fsync:
                 os.fsync(self._fh.fileno())
         else:
+            base = len(self._memory)
+            for i, line in enumerate(lines):
+                self._offsets[id(line)] = base + i
             self._memory.extend(json.loads(line) for line in lines)
             self._hook("post-write", lines)
             self._hook("post-flush", lines)
         self._hook("post-fsync", lines)
         self._since_checkpoint += len(lines)
+
+    def record_at(self, offset: int) -> dict | None:
+        """Decode the single record at ``offset`` (from :meth:`append`).
+
+        Returns ``None`` when the offset no longer addresses a complete
+        record — a compaction rewrote the segment, the tail is torn, or the
+        position is simply out of range.  Callers are expected to have
+        checked :attr:`generation` against the generation captured alongside
+        the offset and to fall back to :func:`replay_segment` on ``None``.
+        """
+        if self.path is None:
+            with self._lock:
+                if 0 <= offset < len(self._memory):
+                    return self._memory[offset]
+            return None
+        try:
+            with open(self.path, "rb") as fh:
+                fh.seek(offset)
+                raw = fh.readline()
+        except OSError:
+            return None
+        if not raw.endswith(b"\n"):
+            return None  # torn or truncated: not a durable record
+        try:
+            return json.loads(raw)
+        except ValueError:
+            return None
 
     # ------------------------------------------------------------------ read
     def records(self) -> Iterator[dict]:
@@ -447,6 +507,7 @@ class Journal:
                         os.replace(tmp, self.path)
                     finally:
                         self._fh = open(self.path, "a", encoding="utf-8")
+                        self._pos = os.path.getsize(self.path)
                     if self.fsync:
                         _fsync_dir(os.path.dirname(os.path.abspath(self.path)))
             else:
@@ -521,6 +582,7 @@ class RunImage:
         "run_id", "flow_id", "input", "creator", "label", "status",
         "context", "current_state", "attempt",
         "action_id", "action_provider", "action_request_id",
+        "passivated", "wake_time", "passivate_mode",
     )
 
     def __init__(self, run_id: str):
@@ -537,6 +599,12 @@ class RunImage:
         self.action_id: str | None = None
         self.action_provider: str | None = None
         self.action_request_id: str | None = None
+        # passivation: the run was paged out of the engine while parked in a
+        # Wait (mode "wait") or between action polls (mode "action"); it
+        # owes a wake-up at ``wake_time``
+        self.passivated: bool = False
+        self.wake_time: float | None = None
+        self.passivate_mode: str | None = None
         self.records: list[dict] = []
         #: False while ``context`` aliases a journal record (copy-on-write:
         #: the first patch deep-copies, so patching never mutates a record
@@ -610,8 +678,21 @@ class RunImage:
             self.action_id = None
             self.action_provider = None
             self.action_request_id = None
+            self.passivated = False
+            self.wake_time = None
+            self.passivate_mode = None
             self._context_from(rec)
         elif kind == "run_snapshot":
+            self._context_from(rec)
+        elif kind == "run_passivated":
+            # page-out image: the run keeps its current state and owes a
+            # wake-up; any later state_entered/state_exited (journaled by
+            # the rehydrated run) clears the dormant marker
+            self.current_state = rec.get("state", self.current_state)
+            self.attempt = rec.get("attempt", self.attempt)
+            self.passivated = True
+            self.wake_time = rec.get("wake_time")
+            self.passivate_mode = rec.get("mode", "wait")
             self._context_from(rec)
         elif kind == "action_started":
             self.action_id = rec.get("action_id")
@@ -624,6 +705,9 @@ class RunImage:
         elif kind == "state_exited":
             self._context_from(rec)
             self.current_state = None
+            self.passivated = False
+            self.wake_time = None
+            self.passivate_mode = None
         elif kind == "run_completed":
             self.status = rec.get("status", "SUCCEEDED")
             self._context_from(rec)
@@ -718,6 +802,7 @@ class TriggerImage:
     _STATE_FIELDS = (
         "trigger_id", "queue_id", "predicate", "transform", "action_ref",
         "owner", "enabled", "poll_min_s", "poll_max_s", "batch", "stats",
+        "wake_run_key",
     )
 
     def __init__(self, trigger_id: str):
@@ -732,6 +817,8 @@ class TriggerImage:
         self.poll_max_s: float = 30.0
         self.batch: int = 10
         self.stats: dict = {}
+        #: when set, matches wake a dormant run instead of invoking an action
+        self.wake_run_key: str | None = None
         #: message ids already handled to completion (invoked or discarded)
         self.resolved_message_ids: set[str] = set()
         #: the subset of resolved messages whose disposition was "invoked"
@@ -764,6 +851,7 @@ class TriggerImage:
             self.poll_min_s = rec.get("poll_min_s", 0.5)
             self.poll_max_s = rec.get("poll_max_s", 30.0)
             self.batch = rec.get("batch", 10)
+            self.wake_run_key = rec.get("wake_run_key")
         elif kind == "trigger_enabled":
             self.enabled = True
         elif kind == "trigger_disabled":

@@ -140,8 +140,7 @@ class PoolScheduler:
             if popped is None:  # raced by a live worker thread; re-scan
                 continue
             t, fn = popped
-            if hasattr(self.clock, "advance_to"):
-                self.clock.advance_to(t)
+            self.clock.advance_to(t)
             fn()
             n += 1
         return n
@@ -174,6 +173,7 @@ class EngineShardPool:
         start_threads: bool | None = None,
         delta_journal: bool = True,
         snapshot_every: int = 64,
+        passivate_after: float | None = None,
     ):
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
@@ -221,6 +221,7 @@ class EngineShardPool:
                     start_threads=start_threads,
                     delta_journal=delta_journal,
                     snapshot_every=snapshot_every,
+                    passivate_after=passivate_after,
                 )
             )
         self.scheduler = PoolScheduler([e.scheduler for e in self.engines], self.clock)
@@ -253,10 +254,10 @@ class EngineShardPool:
         recovered from segments written under a different shard count.
         """
         home = self.shard_of(run_id)
-        if run_id in home.runs:
+        if run_id in home.runs or run_id in home.dormant:
             return home
         for engine in self.engines:
-            if run_id in engine.runs:
+            if run_id in engine.runs or run_id in engine.dormant:
                 return engine
         return home  # raise NotFound from the canonical place
 
@@ -271,6 +272,18 @@ class EngineShardPool:
 
     def get_run(self, run_id: str) -> Run:
         return self._owner(run_id).get_run(run_id)
+
+    def peek_run(self, run_id: str):
+        """Resident Run or dormant stub, without rehydration."""
+        return self._owner(run_id).peek_run(run_id)
+
+    def run_status(self, run_id: str) -> dict:
+        """Status snapshot; dormant runs answer from their stub (no page-in)."""
+        return self._owner(run_id).run_status(run_id)
+
+    def wake_run(self, run_id: str) -> bool:
+        """Rehydrate a dormant run now; False if resident or unknown."""
+        return self._owner(run_id).wake_run(run_id)
 
     def cancel_run(self, run_id: str) -> Run:
         return self._owner(run_id).cancel_run(run_id)
@@ -320,6 +333,19 @@ class EngineShardPool:
                 merged.extend(engine.runs.values())
         merged.sort(key=lambda r: (r.seq, r.start_time, r.run_id))
         return {r.run_id: r for r in merged}
+
+    def dormant_stubs(self) -> list:
+        """Every shard's dormant stubs, in global submission order."""
+        stubs = []
+        for engine in self.engines:
+            stubs.extend(engine.dormant_stubs())
+        stubs.sort(key=lambda s: (s.seq, s.start_time, s.run_id))
+        return stubs
+
+    @property
+    def dormant(self) -> dict:
+        """Merged view of every shard's dormant stubs (run_id -> stub)."""
+        return {s.run_id: s for s in self.dormant_stubs()}
 
     @property
     def stats(self) -> dict[str, int]:

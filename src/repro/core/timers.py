@@ -43,6 +43,12 @@ class Timer:
     fired: int = 0
     missed_fired: int = 0
     next_due: float = 0.0
+    #: dispatch-chain epoch: every scheduled ``_fire`` carries the epoch it
+    #: was scheduled under and no-ops if the timer has moved on.  pause()
+    #: and resume() bump it, so a paused timer's still-pending fire event
+    #: and a resume's fresh one can never both invoke — the double-fire bug
+    #: when resuming after the deadline has already passed
+    epoch: int = 0
     last_results: list[Any] = field(default_factory=list)
     #: when set, each firing sends ``body`` to this queue (event fabric)
     #: instead of calling the service invoker directly
@@ -111,8 +117,14 @@ class TimerService:
             self._timers[timer.timer_id] = timer
             self._callers[timer.timer_id] = caller
         self._persist()
-        self.scheduler.call_at(timer.next_due, lambda: self._fire(timer.timer_id))
+        self._schedule_fire(timer)
         return timer
+
+    def _schedule_fire(self, timer: Timer, at: float | None = None) -> None:
+        self.scheduler.call_at(
+            at if at is not None else timer.next_due,
+            lambda tid=timer.timer_id, e=timer.epoch: self._fire(tid, e),
+        )
 
     def get(self, timer_id: str) -> Timer:
         with self._lock:
@@ -122,20 +134,25 @@ class TimerService:
         return t
 
     def pause(self, timer_id: str) -> None:
-        self.get(timer_id).active = False
+        timer = self.get(timer_id)
+        with self._lock:
+            timer.active = False
+            timer.epoch += 1  # orphan the pending fire chain
         self._persist()
 
     def resume(self, timer_id: str, caller: Caller | None = None) -> None:
         timer = self.get(timer_id)
         with self._lock:
             timer.active = True
+            # new epoch: exactly one live fire chain after a resume, even if
+            # a pre-pause event is still sitting in the scheduler (resuming
+            # while one was pending used to leave two chains — and two
+            # invocations when the deadline had already passed)
+            timer.epoch += 1
             if caller is not None:
                 self._callers[timer_id] = caller
         self._persist()
-        self.scheduler.call_at(
-            max(timer.next_due, self.clock.now()),
-            lambda: self._fire(timer_id),
-        )
+        self._schedule_fire(timer, at=max(timer.next_due, self.clock.now()))
 
     def delete(self, timer_id: str) -> None:
         with self._lock:
@@ -155,15 +172,15 @@ class TimerService:
             return True
         return False
 
-    def _fire(self, timer_id: str) -> None:
+    def _fire(self, timer_id: str, epoch: int = 0) -> None:
         with self._lock:
             timer = self._timers.get(timer_id)
             caller = self._callers.get(timer_id)
-        if timer is None or not timer.active:
-            return
+        if timer is None or not timer.active or timer.epoch != epoch:
+            return  # deleted, paused, or superseded by a newer fire chain
         now = self.clock.now()
-        if timer.next_due > now:  # stale wake-up (e.g. after resume)
-            self.scheduler.call_at(timer.next_due, lambda: self._fire(timer_id))
+        if timer.next_due > now:  # stale wake-up within the live chain
+            self._schedule_fire(timer)
             return
         if self._expired(timer):
             timer.active = False
@@ -193,7 +210,7 @@ class TimerService:
             timer.missed_fired += periods
             timer.next_due += periods * timer.interval
         if not self._expired(timer):
-            self.scheduler.call_at(timer.next_due, lambda: self._fire(timer_id))
+            self._schedule_fire(timer)
         else:
             timer.active = False
         self._persist()
@@ -252,7 +269,6 @@ class TimerService:
             self._callers[timer.timer_id] = None
             if timer.active:
                 # recover missed timers (fire immediately if overdue)
-                self.scheduler.call_at(
-                    max(timer.next_due, self.clock.now()),
-                    lambda tid=timer.timer_id: self._fire(tid),
+                self._schedule_fire(
+                    timer, at=max(timer.next_due, self.clock.now())
                 )

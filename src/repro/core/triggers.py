@@ -74,6 +74,12 @@ class TriggerConfig:
     action_ref: str = ""
     """Durable name for the invoker (e.g. ``flow:<flow_id>``).  Journaled so
     :meth:`EventRouter.recover` can re-bind the callable after a restart."""
+    wake_run_key: str | None = None
+    """When set, a matching event *wakes a dormant run* instead of invoking
+    the action: the run id is read from this key of the transformed input and
+    handed to the router's ``run_waker``.  This is the external-event
+    rehydration path for passivated runs — a parked run costs a stub until
+    its event arrives on the fabric."""
 
 
 @dataclass
@@ -143,8 +149,12 @@ class EventRouter:
         scheduler: Scheduler | None = None,
         journal: Journal | None = None,
         journal_for: Callable[[str], Journal] | None = None,
+        run_waker: Callable[[str], bool] | None = None,
     ):
         self.queues = queues
+        #: ``run_waker(run_id) -> bool`` rehydrates a dormant run (e.g.
+        #: ``EngineShardPool.wake_run``); required by wake_run_key triggers
+        self.run_waker = run_waker
         self.clock = clock or RealClock()
         self.scheduler = scheduler or Scheduler(self.clock)
         self._journal = journal
@@ -217,6 +227,7 @@ class EventRouter:
                     "predicate": config.predicate,
                     "transform": dict(config.transform),
                     "action_ref": config.action_ref,
+                    "wake_run_key": config.wake_run_key,
                     "owner": owner,
                     "poll_min_s": config.poll_min_s,
                     "poll_max_s": config.poll_max_s,
@@ -327,6 +338,7 @@ class EventRouter:
                     poll_max_s=image.poll_max_s,
                     batch=image.batch,
                     action_ref=image.action_ref,
+                    wake_run_key=image.wake_run_key,
                 )
                 trig = self.create_trigger(
                     config,
@@ -599,6 +611,36 @@ class EventRouter:
             trig.stats["errors"] += 1
             self._note(trig, {"error": str(e)})
             return "error"
+        if trig.config.wake_run_key is not None:
+            # wake-run path: the event carries a dormant run's id; rehydrate
+            # it instead of starting anything new.  An unknown or already-
+            # resident run resolves as "discarded" — the event is consumed
+            # (waking is idempotent; there is nothing to retry into)
+            # the transformed input wins; with no transform (or one that
+            # drops the key) fall back to the raw message properties
+            run_id = action_input.get(trig.config.wake_run_key)
+            if run_id is None:
+                run_id = props.get(trig.config.wake_run_key)
+            if not isinstance(run_id, str) or self.run_waker is None:
+                trig.stats["errors"] += 1
+                self._note(
+                    trig,
+                    {"error": f"no run id at key {trig.config.wake_run_key!r}"
+                     if self.run_waker is not None else "no run_waker wired"},
+                )
+                return "error"
+            try:
+                woke = self.run_waker(run_id)
+            except Exception as e:
+                trig.stats["errors"] += 1
+                self._note(trig, {"error": repr(e)})
+                return "failed"
+            if not woke:
+                trig.stats["discarded"] += 1
+                return "discarded"
+            trig.stats["invocations"] += 1
+            self._note(trig, {"woke_run": run_id, "input": action_input})
+            return "invoked"
         try:
             run_id = trig.config.action_invoker(action_input, trig.caller)
         except Exception as e:

@@ -335,3 +335,132 @@ def test_events_log_records_lifecycle():
     assert codes[0] == "FlowStarted"
     assert "StateEntered" in codes and "ActionCompleted" in codes
     assert codes[-1] == "FlowCompleted"
+
+
+# ---------------------------------------------------------- Wait edge cases
+
+def _wait_path_flow(next_state="Done"):
+    return {
+        "StartAt": "W",
+        "States": {
+            "W": {"Type": "Wait", "SecondsPath": "$.pause", "Next": next_state},
+            "Done": {"Type": "Succeed"},
+        },
+    }
+
+
+def test_wait_seconds_path_zero_fires_immediately():
+    engine, clock = make_engine()
+    run = run_flow(engine, _wait_path_flow(), {"pause": 0})
+    assert run.status == RUN_SUCCEEDED
+    assert clock.now() == pytest.approx(0.0)
+
+
+def test_wait_seconds_path_float():
+    engine, clock = make_engine()
+    run = run_flow(engine, _wait_path_flow(), {"pause": 0.25})
+    assert run.status == RUN_SUCCEEDED
+    assert clock.now() == pytest.approx(0.25)
+
+
+def test_wait_seconds_path_negative_fails_at_run_time():
+    """A negative SecondsPath value cannot be caught at publish time (the
+    context is unknown); it fails the *state* as States.Runtime."""
+    engine, _ = make_engine()
+    run = run_flow(engine, _wait_path_flow(), {"pause": -5})
+    assert run.status == RUN_FAILED
+    assert run.error["Error"] == "States.Runtime"
+    assert "negative" in run.error["Cause"]
+
+
+def test_wait_seconds_path_non_numeric_fails_at_run_time():
+    engine, _ = make_engine()
+    for bad in ("soon", None, True, [3]):
+        run = run_flow(engine, _wait_path_flow(), {"pause": bad})
+        assert run.status == RUN_FAILED
+        assert run.error["Error"] == "States.Runtime"
+        assert "not a number" in run.error["Cause"]
+
+
+def test_wait_seconds_path_failure_is_catchable():
+    """The run-time validation failure is an ordinary state failure: Catch
+    routes it like any other States.Runtime."""
+    definition = {
+        "StartAt": "W",
+        "States": {
+            "W": {"Type": "Wait", "SecondsPath": "$.pause",
+                  "Catch": [{"ErrorEquals": ["States.Runtime"],
+                             "ResultPath": "$.err", "Next": "Fallback"}],
+                  "Next": "Done"},
+            "Fallback": {"Type": "Pass", "Result": {"handled": True},
+                         "ResultPath": "$.fb", "End": True},
+            "Done": {"Type": "Succeed"},
+        },
+    }
+    engine, _ = make_engine()
+    run = run_flow(engine, definition, {"pause": "not-a-number"})
+    assert run.status == RUN_SUCCEEDED
+    assert run.context["fb"] == {"handled": True}
+    assert run.context["err"]["Error"] == "States.Runtime"
+
+
+def test_wait_literal_negative_seconds_rejected_at_publish_time():
+    """A literal negative Seconds is statically wrong: it must fail
+    asl.parse (publish time), never reach a run."""
+    from repro.core.errors import FlowValidationError
+
+    definition = {
+        "StartAt": "W",
+        "States": {"W": {"Type": "Wait", "Seconds": -1, "Next": "Done"},
+                   "Done": {"Type": "Succeed"}},
+    }
+    with pytest.raises(FlowValidationError, match=">= 0"):
+        asl.parse(definition)
+
+
+def test_wait_literal_boolean_seconds_rejected_at_publish_time():
+    from repro.core.errors import FlowValidationError
+
+    definition = {
+        "StartAt": "W",
+        "States": {"W": {"Type": "Wait", "Seconds": True, "Next": "Done"},
+                   "Done": {"Type": "Succeed"}},
+    }
+    with pytest.raises(FlowValidationError, match="boolean"):
+        asl.parse(definition)
+
+
+def test_wait_fires_across_checkpoint_compaction_boundary(tmp_path):
+    """A Wait parked before a compaction still fires correctly after it:
+    compaction swaps the journal generation (invalidating any byte-offset
+    fast path into the old segment), so the wake must fall back to segment
+    replay and still complete the run — for both a resident wait and a
+    passivated one."""
+    from repro.core.journal import Journal
+
+    definition = {
+        "StartAt": "W",
+        "States": {
+            "W": {"Type": "Wait", "Seconds": 100.0, "Next": "Done"},
+            "Done": {"Type": "Pass", "Result": {"ok": 1},
+                     "ResultPath": "$.done", "End": True},
+        },
+    }
+    for passivate_after in (None, 10.0):
+        clock = VirtualClock()
+        registry = ActionRegistry()
+        registry.register(EchoProvider(clock=clock))
+        journal = Journal(str(tmp_path / f"j-{passivate_after}.jsonl"))
+        engine = FlowEngine(registry, clock=clock, journal=journal,
+                            passivate_after=passivate_after)
+        flow = asl.parse(definition)
+        run = engine.start_run(flow, {"x": 1}, flow_id="f")
+        engine.scheduler.drain(until=50.0)  # parked mid-wait
+        if passivate_after is not None:
+            assert run.run_id in engine.dormant
+        journal.compact()  # generation swap exactly at the boundary
+        engine.scheduler.drain(until=200.0)  # the wake fires post-compaction
+        live = engine.get_run(run.run_id)
+        assert live.status == RUN_SUCCEEDED
+        assert live.context["done"] == {"ok": 1}
+        assert live.context["x"] == 1

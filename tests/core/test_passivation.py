@@ -1,0 +1,425 @@
+"""Differential tests: passivated runs ≡ always-resident runs.
+
+Passivation (engine ``passivate_after``) pages a parked run out to its
+``run_passivated`` journal record and keeps only a :class:`DormantStub`.
+Its correctness contract is *transparency* (docs/ARCHITECTURE.md invariant
+9): for every flow and every parking point, the terminal state of a run
+that was passivated and rehydrated — possibly many times, possibly across
+a crash — is identical to the run that stayed resident throughout.
+
+The suites force passivation at every eligible point (``passivate_after=
+0.0``) over randomized linear flows mixing Pass / Wait / WaitPath /
+long-poll Action states, and check the composition surfaces the feature
+touches: crash injection around the ``run_passivated`` append (durable
+record vs torn write), Map admission windows (children and joining parents
+must never park), 4-shard pool recovery with re-parking, and delta vs
+full-context journal encodings.
+
+Uses the ``repro.testing`` hypothesis shim: the real hypothesis when
+installed, a deterministic seeded sweep otherwise.
+"""
+
+import json
+import random
+import tempfile
+
+import pytest
+
+from repro.core import asl
+from repro.core.actions import ActionRegistry
+from repro.core.clock import VirtualClock
+from repro.core.engine import RUN_SUCCEEDED, FlowEngine
+from repro.core.journal import (
+    Journal,
+    JournalCrashed,
+    SimulatedCrash,
+    replay,
+)
+from repro.core.providers import EchoProvider, SleepProvider
+from repro.core.shard_pool import EngineShardPool
+from repro.testing import hypothesis_shim
+
+given, settings, st = hypothesis_shim()
+
+pytestmark = pytest.mark.slow
+
+HORIZON = 10_000_000.0  # drain horizon: far past any generated wake-up
+
+
+def make_engine(journal: Journal | None = None, **kwargs) -> FlowEngine:
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    registry.register(SleepProvider(clock=clock))
+    return FlowEngine(registry, clock=clock, journal=journal or Journal(),
+                      **kwargs)
+
+
+def make_pool(path: str, shards: int = 4, **kwargs) -> EngineShardPool:
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    registry.register(SleepProvider(clock=clock))
+    return EngineShardPool(registry, num_shards=shards, clock=clock,
+                           journal_path=path, **kwargs)
+
+
+def canon(doc):
+    """Normalize legitimately nondeterministic fields.
+
+    Action ids are random per process; ``started`` is the virtual time an
+    action's sleep began, which differs when a rehydrated run re-enters its
+    action state later than the resident reference polled it.
+    """
+    if isinstance(doc, dict):
+        return {
+            k: ("<nondet>" if k in ("action_id", "started") else canon(v))
+            for k, v in doc.items()
+        }
+    if isinstance(doc, list):
+        return [canon(v) for v in doc]
+    return doc
+
+
+def terminal(run) -> str:
+    """The comparison key: status + full context, canonicalized to JSON.
+
+    Works for live :class:`~repro.core.engine.Run` objects and replayed
+    :class:`~repro.core.journal.RunImage` s alike, so a run that finished
+    *before* a crash (recovery correctly leaves it unresumed) can still be
+    compared through its journal image.
+    """
+    error = getattr(run, "error", None)
+    return json.dumps(
+        {"status": run.status, "context": canon(run.context),
+         "error": canon(error) if isinstance(error, dict) else error},
+        sort_keys=True,
+    )
+
+
+def recovered_terminal(engine_or_pool, journals, run_id) -> str:
+    """Terminal key after a restart: the live (resumed) run if present,
+    else the journal image of a run that completed before the crash."""
+    from repro.core.errors import NotFound
+
+    try:
+        return terminal(engine_or_pool.get_run(run_id))
+    except NotFound:
+        for journal in journals:
+            image = replay(journal).get(run_id)
+            if image is not None:
+                return terminal(image)
+        raise
+
+
+# ------------------------------------------------------- random flow builder
+
+def random_linear_flow(rng: random.Random) -> tuple[dict, dict]:
+    """A linear flow of 2..7 states drawn from the parking-relevant mix.
+
+    Returns (definition, flow_input).  WaitPath states read their duration
+    from the input so the SecondsPath parking path is exercised too.
+    """
+    states = {}
+    flow_input = {"w": round(rng.uniform(0.0, 5000.0), 2)}
+    names = []
+    for i in range(rng.randint(2, 7)):
+        name = f"S{i}"
+        kind = rng.choice(["pass", "wait", "wait_path", "action"])
+        if kind == "pass":
+            states[name] = {"Type": "Pass", "Result": {"step": i},
+                            "ResultPath": f"$.p{i}"}
+        elif kind == "wait":
+            states[name] = {"Type": "Wait",
+                            "Seconds": round(rng.uniform(0.0, 100_000.0), 2)}
+        elif kind == "wait_path":
+            states[name] = {"Type": "Wait", "SecondsPath": "$.w"}
+        else:
+            states[name] = {
+                "Type": "Action", "ActionUrl": "ap://sleep",
+                "Parameters": {"seconds": round(rng.uniform(0.0, 500.0), 2)},
+                "ResultPath": f"$.a{i}",
+            }
+        names.append(name)
+    states[names[-1]]["End"] = True
+    for prev, nxt in zip(names, names[1:]):
+        states[prev]["Next"] = nxt
+    return {"StartAt": names[0], "States": states}, flow_input
+
+
+def run_resident(defn, flow_input, **kwargs):
+    """Reference: the same flow on an engine with passivation disabled."""
+    engine = make_engine(passivate_after=None, **kwargs)
+    run = engine.start_run(asl.parse(defn), dict(flow_input), flow_id="f",
+                           run_id="run-ref")
+    engine.scheduler.drain(until=HORIZON)
+    return run
+
+
+# ----------------------------------------- property: forced parking ≡ resident
+
+@settings(max_examples=30)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_forced_passivation_matches_resident(seed):
+    rng = random.Random(seed)
+    defn, flow_input = random_linear_flow(rng)
+    ref = run_resident(defn, flow_input)
+
+    engine = make_engine(passivate_after=0.0)
+    run = engine.start_run(asl.parse(defn), dict(flow_input), flow_id="f",
+                           run_id="run-ref")
+    engine.scheduler.drain(until=HORIZON)
+    live = engine.get_run(run.run_id)
+
+    assert live.status == ref.status == RUN_SUCCEEDED
+    assert terminal(live) == terminal(ref)
+    # every Wait (and every long-poll gap) was an eligible parking point
+    n_waits = sum(1 for s in defn["States"].values() if s["Type"] == "Wait")
+    assert engine.stats["runs_passivated"] >= n_waits
+    assert engine.stats["runs_rehydrated"] == engine.stats["runs_passivated"]
+    assert not engine.dormant
+
+
+@settings(max_examples=15)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_forced_passivation_matches_resident_across_restart(seed):
+    """Kill the engine while parked; the re-parked run still converges."""
+    rng = random.Random(seed)
+    defn, flow_input = random_linear_flow(rng)
+    if not any(s["Type"] == "Wait" for s in defn["States"].values()):
+        defn["States"]["S0"] = {"Type": "Wait", "Seconds": 1000.0,
+                                "Next": defn["StartAt"]}
+        defn["StartAt"] = "S0"
+    ref = run_resident(defn, flow_input)
+
+    flow = asl.parse(defn)
+    journal = Journal()  # in-memory journals survive engine objects
+    engine1 = make_engine(journal=journal, passivate_after=0.0)
+    run_id = engine1.start_run(flow, dict(flow_input), flow_id="f",
+                               run_id="run-ref").run_id
+    # stop mid-flight at a random moment (often while dormant)
+    engine1.scheduler.drain(until=rng.uniform(0.0, 200_000.0))
+
+    engine2 = make_engine(journal=journal, passivate_after=0.0)
+    engine2.recover({"f": flow})
+    engine2.scheduler.drain(until=HORIZON)
+    assert recovered_terminal(engine2, [journal], run_id) == terminal(ref)
+
+
+# ------------------------------------------------- crash around run_passivated
+
+def _crash_engine(path, phase_to_kill, flow, flow_input):
+    """Run with a fault hook killing at ``phase_to_kill`` of the FIRST
+    run_passivated batch; returns after the simulated crash."""
+
+    def hook(phase, batch):
+        if phase == phase_to_kill and any(
+            '"run_passivated"' in line for line in batch
+        ):
+            raise SimulatedCrash(f"killed at {phase}")
+
+    journal = Journal(path, fault_hook=hook)
+    engine = make_engine(journal=journal, passivate_after=0.0)
+    run = engine.start_run(flow, dict(flow_input), flow_id="f",
+                           run_id="run-ref")
+    with pytest.raises((SimulatedCrash, JournalCrashed)):
+        engine.scheduler.drain(until=HORIZON)
+        raise JournalCrashed("flow finished without ever parking")
+    return run.run_id
+
+
+@settings(max_examples=10)
+@given(st.integers(min_value=0, max_value=2**31),
+       st.sampled_from(["pre-write", "post-fsync"]))
+def test_crash_between_record_and_stub_drop(seed, phase):
+    """Crash injection around the passivation append.
+
+    ``post-fsync``: the run_passivated record is durable but the engine
+    died before dropping the run — recovery must adopt the dormant image.
+    ``pre-write``: the record was never written — recovery must resume the
+    run resident in its Wait/Action state.  Either way the terminal state
+    equals the never-passivated, never-crashed reference.
+    """
+    rng = random.Random(seed)
+    defn, flow_input = random_linear_flow(rng)
+    # guarantee at least one parking point so the hook always fires
+    defn["States"]["Park"] = {"Type": "Wait", "Seconds": 5000.0,
+                              "Next": defn["StartAt"]}
+    defn["StartAt"] = "Park"
+    flow = asl.parse(defn)
+    ref = run_resident(defn, flow_input)
+
+    path = tempfile.mkdtemp(prefix="passiv-crash-") + "/journal.jsonl"
+    run_id = _crash_engine(path, phase, flow, flow_input)
+
+    engine2 = make_engine(journal=Journal(path), passivate_after=0.0)
+    engine2.recover({"f": flow})
+    engine2.scheduler.drain(until=HORIZON)
+    live = engine2.get_run(run_id)
+    assert terminal(live) == terminal(ref)
+
+
+def test_durable_record_crash_recovers_dormant(tmp_path):
+    """The post-fsync crash specifically must re-park, not re-run: the run
+    was journaled as passivated, so recovery adopts a stub (O(1) memory)
+    and re-appends a fresh record for the new generation."""
+    defn = {"StartAt": "Park",
+            "States": {"Park": {"Type": "Wait", "Seconds": 5000.0,
+                                "Next": "Done"},
+                       "Done": {"Type": "Pass", "End": True}}}
+    flow = asl.parse(defn)
+    path = str(tmp_path / "journal.jsonl")
+    run_id = _crash_engine(path, "post-fsync", flow, {})
+
+    engine2 = make_engine(journal=Journal(path), passivate_after=0.0)
+    engine2.recover({"f": flow})
+    assert engine2.stats["runs_reparked"] == 1
+    assert run_id in engine2.dormant
+    stub = engine2.dormant[run_id]
+    assert stub.as_status()["dormant"] is True
+    assert stub.as_status()["current_state"] == "Park"
+    engine2.scheduler.drain(until=HORIZON)
+    assert engine2.get_run(run_id).status == RUN_SUCCEEDED
+
+
+# --------------------------------------------------- composition: Map windows
+
+MAP_ITERATOR = {
+    "StartAt": "Work",
+    "States": {
+        "Work": {"Type": "Action", "ActionUrl": "ap://sleep",
+                 "Parameters": {"seconds.$": "$.item"},
+                 "ResultPath": "$.slept", "Next": "Echo"},
+        "Echo": {"Type": "Action", "ActionUrl": "ap://echo",
+                 "Parameters": {"echo_string.$": "$.index"},
+                 "ResultPath": "$.echoed", "End": True},
+    },
+}
+
+
+@settings(max_examples=10)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_passivation_composes_with_map_admission(seed):
+    """Waits around a Map park; the Map itself (joining parent + children
+    inside the admission window) never does."""
+    rng = random.Random(seed)
+    items = [round(rng.uniform(0.0, 50.0), 2)
+             for _ in range(rng.randint(1, 10))]
+    window = rng.choice([0, 1, 2, 16])
+    defn = {
+        "StartAt": "Before",
+        "States": {
+            "Before": {"Type": "Wait", "Seconds": 4000.0, "Next": "Fan"},
+            "Fan": {"Type": "Map", "ItemsPath": "$.xs",
+                    "MaxConcurrency": window, "Iterator": MAP_ITERATOR,
+                    "ResultPath": "$.results", "Next": "After"},
+            "After": {"Type": "Wait", "Seconds": 9000.0, "Next": "Done"},
+            "Done": {"Type": "Pass", "End": True},
+        },
+    }
+    ref = run_resident(defn, {"xs": items})
+
+    engine = make_engine(passivate_after=0.0)
+    run = engine.start_run(asl.parse(defn), {"xs": items}, flow_id="f",
+                           run_id="run-ref")
+    engine.scheduler.drain(until=HORIZON)
+    live = engine.get_run(run.run_id)
+
+    assert terminal(live) == terminal(ref)
+    # exactly the two Waits parked: Map children (they have a parent) and
+    # the joining parent (map_join held) are ineligible by construction
+    assert engine.stats["runs_passivated"] == 2
+    if window:
+        assert live.map_peak_live <= window
+
+
+# ------------------------------------------------- composition: 4-shard pool
+
+@settings(max_examples=8)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_four_shard_recovery_with_passivation(seed):
+    """A 4-shard pool full of parked runs crashes; the recovered pool
+    (re-parking each shard's dormant images from its own segment) reaches
+    the same terminals as an uninterrupted resident pool."""
+    rng = random.Random(seed)
+    flows, inputs = {}, {}
+    for i in range(6):
+        defn, flow_input = random_linear_flow(rng)
+        flows[f"f{i}"] = asl.parse(defn)
+        inputs[f"f{i}"] = flow_input
+
+    base = tempfile.mkdtemp(prefix="passiv-shards-")
+    ref_pool = make_pool(base + "/ref", passivate_after=None)
+    refs = {}
+    for i, (fid, flow) in enumerate(flows.items()):
+        refs[fid] = ref_pool.start_run(flow, dict(inputs[fid]), flow_id=fid,
+                                       run_id=f"run-{i}")
+    ref_pool.scheduler.drain(until=HORIZON)
+
+    path = base + "/crashed"
+    pool1 = make_pool(path, passivate_after=0.0)
+    for i, (fid, flow) in enumerate(flows.items()):
+        pool1.start_run(flow, dict(inputs[fid]), flow_id=fid,
+                        run_id=f"run-{i}")
+    pool1.scheduler.drain(until=rng.uniform(0.0, 300_000.0))
+
+    pool2 = make_pool(path, passivate_after=0.0)
+    pool2.recover(flows, resume=True)
+    pool2.scheduler.drain(until=HORIZON)
+    for i, fid in enumerate(flows):
+        got = recovered_terminal(pool2, pool2.journals, f"run-{i}")
+        assert got == terminal(refs[fid]), fid
+
+
+# --------------------------------------------- journal encodings + inspection
+
+@settings(max_examples=10)
+@given(st.integers(min_value=0, max_value=2**31), st.booleans())
+def test_passivated_replay_matches_live_context(seed, delta):
+    """Replaying a journal full of run_passivated records (riding either
+    the delta or the full-context encoding) reproduces the live terminal
+    context exactly."""
+    rng = random.Random(seed)
+    defn, flow_input = random_linear_flow(rng)
+    journal = Journal()
+    engine = make_engine(journal=journal, passivate_after=0.0,
+                         delta_journal=delta)
+    run = engine.start_run(asl.parse(defn), dict(flow_input), flow_id="f",
+                           run_id="run-ref")
+    engine.scheduler.drain(until=HORIZON)
+    live = engine.get_run(run.run_id)
+    assert live.status == RUN_SUCCEEDED
+
+    image = replay(journal)[run.run_id]
+    assert image.status == RUN_SUCCEEDED
+    assert json.dumps(image.context, sort_keys=True) == json.dumps(
+        live.context, sort_keys=True
+    )
+
+
+def test_stub_status_answers_without_rehydration():
+    """as_status() on a dormant run is served by the stub; explicit wake
+    rehydrates with the original deadline preserved."""
+    defn = {"StartAt": "Park",
+            "States": {"Park": {"Type": "Wait", "Seconds": 7000.0,
+                                "Next": "Done"},
+                       "Done": {"Type": "Pass",
+                                "Result": {"ok": True},
+                                "ResultPath": "$.done", "End": True}}}
+    engine = make_engine(passivate_after=60.0)
+    run = engine.start_run(asl.parse(defn), {"x": 1}, flow_id="f")
+    engine.scheduler.drain(until=10.0)
+
+    status = engine.run_status(run.run_id)
+    assert status["dormant"] is True
+    assert status["current_state"] == "Park"
+    assert status["wake_time"] == 7000.0
+    assert run.run_id in engine.dormant  # no rehydration happened
+
+    assert engine.wake_run(run.run_id) is True
+    assert run.run_id not in engine.dormant
+    live = engine.get_run(run.run_id)
+    assert live.current_state == "Park"  # deadline preserved, wait re-armed
+    engine.scheduler.drain(until=HORIZON)
+    assert engine.get_run(run.run_id).status == RUN_SUCCEEDED
+    assert engine.get_run(run.run_id).context["done"] == {"ok": True}

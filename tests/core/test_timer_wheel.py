@@ -1,0 +1,261 @@
+"""Differential tests: hierarchical timer wheel vs a flat-heap reference.
+
+The wheel (``repro.core.timer_wheel``) replaces the scheduler's flat heap,
+so its *only* license to exist is byte-identical behaviour: every pop comes
+out in ``(due time, insertion seq)`` order — time, then insertion order —
+exactly like ``heapq`` over ``(t, seq)`` tuples, and ``next_deadline()`` is
+exact (the true earliest pending due time, never a bucket lower bound).
+These properties are what keep the PoolScheduler's deterministic
+VirtualClock merge unchanged across the swap.
+
+Random schedules exercise the wheel's interesting geometry: entries inside
+one tick (straight to the imminent heap), entries spanning bucket and level
+boundaries, far-future deadlines beyond the top level's width, simultaneous
+deadlines (tie-broken by insertion seq — including ties landing exactly on
+a bucket's start time, the cascade's strict-vs-non-strict comparison edge),
+cancellations (lazily reaped), and interleaved cursor advances.
+
+Uses the ``repro.testing`` hypothesis shim: the real hypothesis when
+installed, a deterministic seeded sweep otherwise.
+"""
+
+import heapq
+
+import pytest
+
+from repro.core.clock import VirtualClock
+from repro.core.engine import Scheduler
+from repro.core.timer_wheel import TimerWheel
+from repro.testing import hypothesis_shim
+
+given, settings, st = hypothesis_shim()
+
+pytestmark = pytest.mark.slow
+
+
+class FlatHeapModel:
+    """The pre-wheel scheduler storage: one heapq of (t, seq) entries."""
+
+    def __init__(self):
+        self._heap = []
+        self._seq = 0
+        self._cancelled = set()
+
+    def schedule(self, t):
+        self._seq += 1
+        heapq.heappush(self._heap, (float(t), self._seq))
+        return self._seq
+
+    def cancel(self, seq):
+        self._cancelled.add(seq)
+
+    def next_deadline(self):
+        while self._heap and self._heap[0][1] in self._cancelled:
+            heapq.heappop(self._heap)
+        return self._heap[0][0] if self._heap else None
+
+    def pop(self, until=None):
+        deadline = self.next_deadline()
+        if deadline is None or (until is not None and deadline > until):
+            return None
+        return heapq.heappop(self._heap)  # (t, seq)
+
+    def __len__(self):
+        n = 0
+        for t, seq in self._heap:
+            if seq not in self._cancelled:
+                n += 1
+        return n
+
+
+# Op stream over both structures.  Delays are quantized to .25 so
+# simultaneous deadlines are common, and the mix spans every wheel level
+# for tick=0.5/span=4/levels=3 (level widths 0.5, 2.0, 8.0 — delays up to
+# 200 overflow the top level's width, exercising the unbounded dict
+# indexing).
+OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("schedule"), st.integers(0, 800)),   # delay/4
+        st.tuples(st.just("schedule_past"), st.integers(0, 40)),
+        st.tuples(st.just("cancel"), st.integers(0, 10**6)),
+        st.tuples(st.just("advance"), st.integers(1, 120)),    # delta/4
+        st.tuples(st.just("pop_until"), st.integers(0, 200)),  # horizon/4
+        st.tuples(st.just("pop_all_due"), st.just(0)),
+        st.tuples(st.just("peek"), st.just(0)),
+    ),
+    max_size=80,
+)
+
+
+def _run_differential(ops, tick, span, levels):
+    wheel = TimerWheel(now=0.0, tick=tick, span=span, levels=levels)
+    model = FlatHeapModel()
+    handles = {}  # model seq -> wheel handle
+    now = 0.0
+    for op, arg in ops:
+        if op == "schedule":
+            t = now + arg / 4.0
+            seq = model.schedule(t)
+            handles[seq] = wheel.schedule(t, fn=lambda: None)
+        elif op == "schedule_past":
+            # entries behind the cursor must fire immediately, in order
+            t = max(0.0, now - arg / 4.0)
+            seq = model.schedule(t)
+            handles[seq] = wheel.schedule(t, fn=lambda: None)
+        elif op == "cancel":
+            live = [s for s in handles if not handles[s].cancelled]
+            if live:
+                seq = live[arg % len(live)]
+                model.cancel(seq)
+                assert wheel.cancel(handles[seq]) is True
+        elif op == "advance":
+            now += arg / 4.0
+            wheel.advance_to(now)
+        elif op == "pop_until":
+            until = now + arg / 4.0
+            while True:
+                got = wheel.pop(until=until)
+                want = model.pop(until=until)
+                if want is None:
+                    assert got is None
+                    break
+                assert got is not None, f"wheel dropped {want}"
+                assert (got.t, got.seq) == want, (
+                    f"pop order diverged: wheel {(got.t, got.seq)} "
+                    f"vs flat heap {want}"
+                )
+                handles.pop(got.seq)  # fired: no longer cancellable
+                now = max(now, got.t)
+        elif op == "pop_all_due":
+            while True:
+                got = wheel.pop(until=now)
+                want = model.pop(until=now)
+                if want is None:
+                    assert got is None
+                    break
+                assert got is not None and (got.t, got.seq) == want
+                handles.pop(got.seq)
+        elif op == "peek":
+            assert wheel.next_deadline() == model.next_deadline(), (
+                "next_deadline must be exact, not a bucket lower bound"
+            )
+        assert len(wheel) == len(model)
+    # drain: the full residue must come out in identical order
+    while True:
+        got = wheel.pop()
+        want = model.pop()
+        if want is None:
+            assert got is None
+            break
+        assert got is not None and (got.t, got.seq) == want
+    assert len(wheel) == 0
+
+
+@settings(max_examples=40)
+@given(OPS)
+def test_wheel_matches_flat_heap_small_geometry(ops):
+    """Tiny levels force constant cascading — the worst case for ordering."""
+    _run_differential(ops, tick=0.5, span=4, levels=3)
+
+
+@settings(max_examples=25)
+@given(OPS)
+def test_wheel_matches_flat_heap_default_geometry(ops):
+    """The scheduler's production geometry (wide buckets, rare cascades)."""
+    _run_differential(ops, tick=1.0, span=256, levels=4)
+
+
+def test_simultaneous_deadlines_pop_in_insertion_order():
+    wheel = TimerWheel(tick=1.0, span=4, levels=3)
+    # all land exactly on a level-1 bucket start: the tie edge where a
+    # non-strict cascade comparison would leave heap entries popping ahead
+    # of equal-time bucket entries with smaller seqs
+    t = 16.0
+    first = wheel.schedule(t, fn=lambda: None)
+    wheel.advance_to(15.5)  # t is now < one level-1 width away: cascades
+    second = wheel.schedule(t, fn=lambda: None)
+    third = wheel.schedule(t + 0.0, fn=lambda: None)
+    order = []
+    while True:
+        handle = wheel.pop()
+        if handle is None:
+            break
+        order.append(handle.seq)
+    assert order == [first.seq, second.seq, third.seq]
+
+
+def test_far_future_deadline_beyond_top_level():
+    wheel = TimerWheel(tick=1.0, span=4, levels=2)  # top width = 4s
+    near = wheel.schedule(2.0, fn=lambda: None)
+    far = wheel.schedule(3 * 7 * 24 * 3600.0, fn=lambda: None)  # three weeks
+    assert wheel.next_deadline() == 2.0
+    assert wheel.pop() is near
+    assert wheel.next_deadline() == far.t
+    assert wheel.pop(until=100.0) is None  # horizon respected
+    assert wheel.pop() is far
+    assert wheel.pop() is None
+
+
+def test_cancel_is_lazy_but_invisible():
+    wheel = TimerWheel(tick=1.0, span=4, levels=2)
+    a = wheel.schedule(5.0, fn=lambda: None)
+    b = wheel.schedule(5.0, fn=lambda: None)
+    c = wheel.schedule(9.0, fn=lambda: None)
+    assert wheel.cancel(a) is True
+    assert wheel.cancel(a) is False  # second cancel is a no-op
+    assert len(wheel) == 2
+    assert wheel.next_deadline() == 5.0
+    assert wheel.pop() is b
+    assert wheel.pop() is c
+    assert wheel.pop() is None
+
+
+def test_cancel_after_fire_is_a_noop():
+    """Cancelling a handle that already popped must not corrupt the live
+    count (the Scheduler promises False for already-fired handles)."""
+    wheel = TimerWheel(tick=1.0, span=4, levels=2)
+    fired = wheel.schedule(1.0, fn=lambda: None)
+    pending = wheel.schedule(10.0, fn=lambda: None)
+    assert wheel.pop() is fired
+    assert wheel.cancel(fired) is False
+    assert len(wheel) == 1
+    assert wheel.cancel(pending) is True
+    assert len(wheel) == 0
+    assert wheel.pop() is None
+
+
+def test_dormant_entries_cost_no_cascades_until_imminent():
+    """The O(live) claim: parked far-future entries sit untouched."""
+    wheel = TimerWheel(tick=1.0, span=256, levels=4)
+    for i in range(1000):
+        wheel.schedule(1e6 + i, fn=lambda: None)
+    now = 0.0
+    for _ in range(100):
+        handle = wheel.schedule(now + 2.0, fn=lambda: None)
+        assert wheel.pop(until=now + 3.0) is handle
+        now = handle.t
+    # each near-term entry cascades level 0 -> imminent exactly once;
+    # the churn never touched the dormant cohort's coarse bucket
+    assert wheel.cascades == 100
+    assert len(wheel) == 1000
+
+
+def test_scheduler_drain_is_deterministic_over_the_wheel():
+    """End-to-end: two identical schedules drain in the identical order."""
+
+    def build():
+        clock = VirtualClock()
+        sched = Scheduler(clock)
+        fired = []
+        for i, delay in enumerate([5.0, 1.0, 5.0, 0.0, 3600.0, 5.0, 1.0]):
+            sched.call_later(delay, lambda i=i: fired.append((clock.now(), i)))
+        handle = sched.call_later(2.0, lambda: fired.append("cancelled"))
+        sched.cancel(handle)
+        sched.drain(until=7200.0)
+        return fired
+
+    first, second = build(), build()
+    assert first == second
+    assert "cancelled" not in first
+    assert [i for _, i in first] == [3, 1, 6, 0, 2, 5, 4]
+    assert [t for t, _ in first] == sorted(t for t, _ in first)

@@ -155,3 +155,64 @@ def test_timer_persistence_recovers_missed(tmp_path):
     assert timer.fired == 10
     assert timer.active is False
     assert len(fired2) == 8
+
+
+def test_timer_resume_past_deadline_fires_exactly_once():
+    """Regression: resuming a paused timer whose deadline already passed
+    must invoke once, not twice.
+
+    pause() used to leave the pre-pause fire event pending in the
+    scheduler; resume() scheduled a second one.  With the deadline in the
+    past the ``next_due > now`` stale-wake guard stopped NEITHER — in
+    real-time mode two pool threads execute the two events concurrently
+    and both invoke before either advances ``next_due``.  The epoch
+    carried by each fire chain kills the orphaned pre-pause event at the
+    guard, independent of interleaving; this test replays the racing
+    interleaving deterministically by invoking both chains' fire events
+    directly, the way two executor threads would.
+    """
+    clock, scheduler, _ = make_stack()
+    fired = []
+    svc = TimerService(
+        invoker=lambda body, caller: fired.append(clock.now()) or "r",
+        clock=clock, scheduler=scheduler, catch_up_missed=False,
+    )
+    timer = svc.create_timer("t", interval=10.0, body={}, start=0.0, count=100)
+    scheduler.drain(until=5.0)
+    assert fired == [0.0]  # next_due=10, its fire event is pending
+    stale_epoch = timer.epoch  # the epoch the pending chain carries
+    svc.pause(timer.timer_id)
+    # the deadline passes while paused, WITHOUT draining: the pre-pause
+    # event for t=10 is still sitting in the scheduler
+    clock.advance_to(35.0)
+    svc.resume(timer.timer_id)
+    # both events are now due in the past; dispatch them as the pool would
+    svc._fire(timer.timer_id, stale_epoch)
+    assert fired == [0.0], "orphaned pre-pause chain invoked after resume"
+    svc._fire(timer.timer_id, timer.epoch)
+    assert fired == [0.0, 35.0]
+    # skip-ahead accounting (catch_up_missed=False) from the single fire
+    assert timer.missed_fired == 2
+    assert timer.next_due == 40.0
+    # the scheduler's own copies of those events are no-ops too
+    scheduler.drain(until=36.0)
+    assert fired == [0.0, 35.0]
+    scheduler.drain(until=41.0)
+    assert fired == [0.0, 35.0, 40.0]
+
+
+def test_timer_pause_resume_before_deadline_single_chain():
+    """Resuming before the deadline must not double-schedule either: the
+    pre-pause chain is orphaned, exactly one fire lands per due time."""
+    clock, scheduler, _ = make_stack()
+    fired = []
+    svc = TimerService(
+        invoker=lambda body, caller: fired.append(clock.now()) or "r",
+        clock=clock, scheduler=scheduler,
+    )
+    timer = svc.create_timer("t", interval=10.0, body={}, start=0.0, count=100)
+    scheduler.drain(until=5.0)
+    svc.pause(timer.timer_id)
+    svc.resume(timer.timer_id)  # immediately: both chains now pending
+    scheduler.drain(until=25.0)
+    assert fired == [0.0, 10.0, 20.0]
