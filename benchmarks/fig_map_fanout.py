@@ -17,20 +17,33 @@ tracemalloc peak memory.  The headline contrast: a 10,000-item Map at
 window 16 vs unbounded — same result, bounded table, a fraction of the
 peak memory.
 
+The ``--shards`` axis measures *cross-shard* Map fan-out: the same
+10k-item Map on a real-clock ``EngineShardPool`` whose journal segments
+carry a simulated 2 ms durability RTT.  Items spread across the pool
+(hash placement + least-loaded stealing), so N shards commit their
+children's transitions in parallel — the multi-shard items/s over the
+shards=1 co-located figure is the headline scaling number the nightly
+gate reads (``fig_map_fanout/items=10000,window=64/shards=8``).
+
     PYTHONPATH=src:. python benchmarks/fig_map_fanout.py [--quick]
+        [--shards 1,4,8]
 """
 
 from __future__ import annotations
 
+import os
+import shutil
+import tempfile
 import time
 import tracemalloc
 
 from benchmarks.common import csv_line, save_results
 from repro.core import asl
 from repro.core.actions import ActionRegistry
-from repro.core.clock import VirtualClock
+from repro.core.clock import RealClock, VirtualClock
 from repro.core.engine import FlowEngine
 from repro.core.providers import EchoProvider
+from repro.core.shard_pool import EngineShardPool
 
 #: (items, [max_concurrency ...]); 0 = unbounded.  The 10k x {16, 0} pair
 #: is the acceptance-criteria cell and its memory baseline — kept in quick
@@ -44,6 +57,17 @@ SWEEP_QUICK = [
     (500, [1, 4, 16]),
     (10_000, [16, 0]),
 ]
+
+#: the cross-shard axis: shard counts for the real-clock scaling cells.
+#: All three run in quick mode too — the nightly gate reads shards=1 and
+#: shards=8 (acceptance: shards=8 items/s >= 3x the shards=1 figure).
+SHARDS_SWEEP = [1, 4, 8]
+SHARDS_ITEMS = 10_000
+SHARDS_WINDOW = 64
+#: simulated per-commit durability round trip (cf. shard_scaling.py): the
+#: sleep releases the GIL, so shards flush their segments concurrently —
+#: which is exactly the parallelism cross-shard placement buys
+JOURNAL_RTT_S = 0.002
 
 
 def map_flow(window: int) -> asl.Flow:
@@ -111,7 +135,57 @@ def bench_cell(items: int, window: int) -> dict:
     }
 
 
-def run(quick: bool = False) -> list[dict]:
+def bench_shards_cell(items: int, window: int, shards: int) -> dict:
+    """One real-clock multi-shard Map cell (durable journal segments).
+
+    Unlike the VirtualClock cells (single-threaded drain — it cannot show
+    parallelism), this runs the pool's worker threads for real: each shard
+    group-commits its own journal segment with a simulated ``JOURNAL_RTT_S``
+    round trip, so distributing the children is what lets commits overlap.
+    """
+    workdir = tempfile.mkdtemp(prefix="fig_map_shards_")
+    clock = RealClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    pool = EngineShardPool(
+        registry,
+        num_shards=shards,
+        clock=clock,
+        journal_path=os.path.join(workdir, "map.jsonl"),
+        journal_latency_s=JOURNAL_RTT_S,
+        group_commit=True,
+    )
+    try:
+        t0 = time.perf_counter()
+        run = pool.start_run(map_flow(window), {"items": list(range(items))},
+                             run_id="run-map-shards")
+        pool.wait(run.run_id, timeout=600.0)
+        elapsed = time.perf_counter() - t0
+        assert run.status == "SUCCEEDED", run.error
+        assert len(run.context["results"]) == items
+        spread = [e.stats["map_items_completed"] for e in pool.engines]
+        stolen = pool.stats.get("map_children_stolen", 0)
+    finally:
+        pool.shutdown()
+        shutil.rmtree(workdir, ignore_errors=True)
+    window_ok = run.map_peak_live <= window
+    assert window_ok, (
+        f"admission window violated: peak {run.map_peak_live} > {window}"
+    )
+    return {
+        "items": items,
+        "max_concurrency": window,
+        "shards": shards,
+        "elapsed_s": elapsed,
+        "items_per_s": items / elapsed,
+        "peak_live_children": run.map_peak_live,
+        "items_per_shard": spread,
+        "children_stolen": stolen,
+        "window_ok": window_ok,
+    }
+
+
+def run(quick: bool = False, shards_axis: list[int] | None = None) -> list[dict]:
     sweep = SWEEP_QUICK if quick else SWEEP_FULL
     rows = []
     for items, windows in sweep:
@@ -130,14 +204,40 @@ def run(quick: bool = False) -> list[dict]:
             bounded["table_reduction_vs_unbounded"] = (
                 unbounded["peak_run_table"] / bounded["peak_run_table"]
             )
+    # cross-shard scaling cells (real clock, durable per-shard segments)
+    baseline_ips = None
+    for shards in (SHARDS_SWEEP if shards_axis is None else shards_axis):
+        row = bench_shards_cell(SHARDS_ITEMS, SHARDS_WINDOW, shards)
+        if shards == 1:
+            baseline_ips = row["items_per_s"]
+        if baseline_ips is not None:
+            row["speedup_vs_colocated"] = row["items_per_s"] / baseline_ips
+        rows.append(row)
     return rows
 
 
-def main(quick: bool = False):
-    rows = run(quick=quick)
+def main(quick: bool = False, shards_axis: list[int] | None = None):
+    rows = run(quick=quick, shards_axis=shards_axis)
     save_results("fig_map_fanout", rows)
     lines = []
     for row in rows:
+        if "shards" in row:
+            derived = (
+                f"shards={row['shards']};"
+                f"items_per_s={row['items_per_s']:.0f};"
+                f"peak_live={row['peak_live_children']};"
+                f"stolen={row['children_stolen']}"
+            )
+            if "speedup_vs_colocated" in row:
+                derived += f";speedup={row['speedup_vs_colocated']:.2f}x"
+            lines.append(csv_line(
+                f"fig_map_fanout/items={row['items']}"
+                f",window={row['max_concurrency']}"
+                f"/shards={row['shards']}",
+                1e6 / row["items_per_s"],
+                derived,
+            ))
+            continue
         derived = (
             f"window={row['max_concurrency']};"
             f"items_per_s={row['items_per_s']:.0f};"
@@ -164,5 +264,14 @@ if __name__ == "__main__":
 
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--quick", action="store_true")
+    parser.add_argument(
+        "--shards", default=None,
+        help="comma-separated shard counts for the cross-shard axis "
+             "(default: 1,4,8; include 1 to compute the speedup baseline)",
+    )
     args = parser.parse_args()
-    print("\n".join(main(quick=args.quick)))
+    axis = (
+        [int(s) for s in args.shards.split(",") if s]
+        if args.shards else None
+    )
+    print("\n".join(main(quick=args.quick, shards_axis=axis)))

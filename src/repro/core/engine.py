@@ -45,7 +45,7 @@ from .errors import (
     StateMachineError,
     error_matches,
 )
-from .journal import Journal, RunImage, replay_segment
+from .journal import Journal, RunImage, replay_segment, terminal_map_children
 from .timer_wheel import TimerHandle, TimerWheel
 
 RUN_ACTIVE = "ACTIVE"
@@ -101,6 +101,10 @@ class MapJoin:
     peak_live: int = 0     # high-water mark (window-bound assertions)
     window: int = 0        # effective MaxConcurrency (0 -> len(items))
     failing: bool = False  # tolerance exceeded; stop admitting, fail at join
+    #: children currently placed off their hash-home shard by the
+    #: least-loaded policy — bounds the pool's foreign-residency index
+    #: (work stealing stops adapting once the bound is hit)
+    stolen_live: int = 0
 
 
 @dataclass
@@ -149,6 +153,14 @@ class Run:
     #: re-enters the Map state builds a NEW join with the same child ids, so
     #: stale children from the superseded attempt must not touch it
     of_join: MapJoin | None = None
+    #: the engine this run is resident on.  For pool-started runs this is
+    #: the home shard; for cross-shard Map children it is the shard the
+    #: placement policy chose — completion routing and cancellation always
+    #: go through it instead of assuming co-location with the parent.
+    engine: "FlowEngine | None" = field(default=None, repr=False)
+    #: True when the least-loaded policy placed this Map child off its
+    #: hash-home shard (releases the join's ``stolen_live`` budget slot)
+    foreign_placed: bool = False
 
     # global submission order, stamped by EngineShardPool (0 = shard-internal)
     seq: int = 0
@@ -464,6 +476,21 @@ class FlowEngine:
         self.scheduler = Scheduler(self.clock)
         self.runs: dict[str, Run] = {}
         self.dormant: dict[str, DormantStub] = {}
+        #: set by EngineShardPool: the pool this engine is a shard of, and
+        #: its shard index.  A bare engine (no pool) hosts every Map child
+        #: itself, exactly as before cross-shard placement existed.
+        self.pool = None
+        self.shard_id = 0
+        #: live Map children resident on THIS engine (load gauge for the
+        #: pool's least-loaded placement; guarded by ``_lock`` for writes,
+        #: read dirty by the placement policy)
+        self.map_hosted = 0
+        #: terminal Map-child results replayed from journal segments
+        #: (child_id -> (status, context, error)); a recovered parent's
+        #: ``_map_admit`` pops entries instead of re-running those items.
+        #: EngineShardPool.recover merges all shards' tables into one shared
+        #: dict so children that ran on a foreign shard re-attach too.
+        self.recovered_map_results: dict[str, tuple] = {}
         # cached bound method: every dormant wake-up shares this one
         # callback object (its run_id rides on the TimerHandle)
         self._wake_dormant_cb = self._wake_dormant
@@ -478,6 +505,7 @@ class FlowEngine:
             "retries": 0,
             "map_items_admitted": 0,
             "map_items_completed": 0,
+            "map_children_stolen": 0,
             "runs_passivated": 0,
             "runs_rehydrated": 0,
             "runs_reparked": 0,
@@ -534,7 +562,13 @@ class FlowEngine:
         monitor_by: list[str] | None = None,
         manage_by: list[str] | None = None,
         run_id: str | None = None,
+        seq: int = 0,
     ) -> Run:
+        # ``seq`` (global submission order) is set at construction — before
+        # the run is registered or its first event scheduled — so no journal
+        # record or concurrent observer ever sees the default.  The pool
+        # stamps it here instead of after start_run returns (the old
+        # post-assignment raced the run's first transitions).
         run = Run(
             run_id=run_id or "run-" + secrets.token_hex(8),
             flow=flow,
@@ -549,6 +583,8 @@ class FlowEngine:
             context=dict(flow_input),
             start_time=self.clock.now(),
             context_journaled=True,  # run_created carries the full input
+            engine=self,
+            seq=seq,
         )
         with self._lock:
             self.runs[run.run_id] = run
@@ -561,6 +597,7 @@ class FlowEngine:
                 "input": run.context,
                 "creator": creator,
                 "label": label,
+                "seq": seq,
                 "t": run.start_time,
             }
         )
@@ -605,11 +642,17 @@ class FlowEngine:
         a parked action poll re-enters its state immediately and discovers
         the action's current status.  Returns False when the run is already
         resident (or unknown) — waking is a no-op for live runs.
+
+        True means *this call* performed the rehydration: the stub pop is
+        atomic, so if the wake timer (or another caller) wins the race
+        between dormancy-check and rehydration, this call observes the pop
+        miss and returns False instead of claiming the other actor's work.
         """
-        with self._lock:
-            if run_id not in self.dormant:
-                return False
-        return self._rehydrate(run_id, fire=False) is not None
+        stub = self._pop_stub(run_id)
+        if stub is None:
+            return False
+        self._resume_stub(stub, fire=False)
+        return True
 
     def cancel_run(self, run_id: str) -> Run:
         run = self.get_run(run_id)
@@ -996,6 +1039,17 @@ class FlowEngine:
             )
         return copy.deepcopy(image.context)
 
+    def _pop_stub(self, run_id: str) -> DormantStub | None:
+        """Atomically claim a dormant stub (None if not dormant).
+
+        Exactly one caller — the wake timer, ``wake_run``, or ``get_run`` —
+        wins the pop; everyone else sees None.  This is the linearization
+        point every wake path shares, which is what makes ``wake_run``'s
+        "True only if I rehydrated it" contract hold under races.
+        """
+        with self._lock:
+            return self.dormant.pop(run_id, None)
+
     def _rehydrate(self, run_id: str, fire: bool) -> Run | None:
         """Page a dormant run back in and resume it.
 
@@ -1005,10 +1059,14 @@ class FlowEngine:
         deadline re-armed, preserving timing transparency.  "action"-mode
         runs always re-enter their state (idempotent via request_id dedup).
         """
-        with self._lock:
-            stub = self.dormant.pop(run_id, None)
-            if stub is None:
-                return self.runs.get(run_id)
+        stub = self._pop_stub(run_id)
+        if stub is None:
+            return self.runs.get(run_id)
+        return self._resume_stub(stub, fire)
+
+    def _resume_stub(self, stub: DormantStub, fire: bool) -> Run:
+        """Rebuild a Run from a claimed stub and schedule its continuation."""
+        run_id = stub.run_id
         if stub.wake_handle is not None:
             self.scheduler.cancel(stub.wake_handle)
         try:
@@ -1034,6 +1092,7 @@ class FlowEngine:
             attempt=stub.attempt,
             start_time=stub.start_time,
             context_journaled=True,
+            engine=self,
             seq=stub.seq,
         )
         run.events_dropped = stub.events_dropped
@@ -1292,6 +1351,7 @@ class FlowEngine:
                 parent=run,
                 branch_index=i,
                 parent_state=state.name,
+                engine=self,
             )
             children.append(child)
         with run.lock:
@@ -1300,6 +1360,11 @@ class FlowEngine:
         with self._lock:
             for child in children:
                 self.runs[child.run_id] = child
+        for child in children:
+            # branches co-locate with their parent; if the parent itself is
+            # a Map child placed off its hash home, tell the pool's
+            # residency index so facade lookups still resolve in O(1)
+            self._note_residency(child.run_id)
         for child in children:
             self.scheduler.submit(
                 lambda c=child: self._enter_state(c, c.flow.start_at)
@@ -1351,10 +1416,16 @@ class FlowEngine:
         but at most ``MaxConcurrency`` children exist at once — completed
         children are dropped and the next item admitted, so a 10k-item Map
         holds O(window) live runs, not O(items) (ARCHITECTURE invariant 8).
+        Under an :class:`~repro.core.shard_pool.EngineShardPool` the
+        children are *distributed across the pool* (deterministic per-item
+        hash home, least-loaded override for skewed costs) while the join
+        stays here on the owner (ARCHITECTURE invariant 10).
         Re-entering the state (Retry clause, crash recovery) rebuilds the
         join from scratch: child run ids are deterministic
         (``<parent>.m<i>``), so re-dispatched actions deduplicate on their
-        journaled ``request_id`` exactly like Parallel branches.
+        journaled ``request_id`` exactly like Parallel branches, and items
+        whose terminal records survive in any shard's segment re-attach
+        their results without re-running.
         """
         doc = state.input_for(run.context)
         items = state.items_for(doc)
@@ -1385,9 +1456,53 @@ class FlowEngine:
             run.join_claimed = False
         self._map_admit(run, state)
 
+    def _place_map_child(self, child_id: str, join: MapJoin) -> tuple["FlowEngine", bool]:
+        """(host engine, stolen?) for a Map child about to be admitted.
+
+        A bare engine hosts everything itself; a pooled shard delegates to
+        :meth:`~repro.core.shard_pool.EngineShardPool.place_map_child`
+        (deterministic hash home, least-loaded override within the join's
+        steal budget).  Called under the parent's ``run.lock`` — the pool
+        only reads dirty load gauges, no engine locks.
+        """
+        if self.pool is None:
+            return self, False
+        return self.pool.place_map_child(child_id, join)
+
+    def _note_residency(self, run_id: str) -> None:
+        if self.pool is not None:
+            self.pool.note_residency(run_id, self.shard_id)
+
+    def _forget_residency(self, run_id: str) -> None:
+        if self.pool is not None:
+            self.pool.forget_residency(run_id, self.shard_id)
+
+    def _adopt_recovered_result(self, child_id: str):
+        """One-shot claim of a journal-replayed terminal child result.
+
+        Pops so a Retry attempt that rebuilds the join with the same child
+        ids re-runs the items instead of replaying a superseded result.
+        """
+        table = self.recovered_map_results
+        if not table:
+            return None
+        return table.pop(child_id, None)
+
     def _map_admit(self, run: Run, state: asl.State) -> None:
-        """Admit items while the window has room (callers do NOT hold locks)."""
+        """Admit items while the window has room (callers do NOT hold locks).
+
+        Each admitted item becomes a child Run *hosted on the shard the
+        placement policy picks* — the child registers in that engine's run
+        table, journals to that shard's segment, and executes on that
+        shard's scheduler; only the join bookkeeping stays here on the
+        owner.  Items whose children already finished before a crash (their
+        terminal records replayed from some shard's segment into
+        ``recovered_map_results``) are re-attached directly to the join
+        without consuming a window slot or re-executing.
+        """
         admitted: list[Run] = []
+        finish = None   # claimed terminal decision, applied outside the lock
+        fail_fast: list[tuple[str, "FlowEngine"]] = []
         with run.lock:
             join = run.map_join
             if join is None or run.status != RUN_ACTIVE:
@@ -1400,11 +1515,48 @@ class FlowEngine:
             ):
                 i = join.next_index
                 join.next_index += 1
+                child_id = f"{run.run_id}.m{i}"
+                adopted = self._adopt_recovered_result(child_id)
+                if adopted is not None:
+                    # crash recovery: this item finished before the crash on
+                    # whichever shard hosted it — fill its slot from the
+                    # replayed image instead of re-running it
+                    status, ctx, err = adopted
+                    join.done += 1
+                    if status == RUN_SUCCEEDED:
+                        join.results[i] = copy.deepcopy(ctx)
+                    else:
+                        join.failed += 1
+                        join.results[i] = {
+                            "MapItemFailed": copy.deepcopy(err) or {
+                                "Error": MapItemFailed.error_name,
+                                "Cause": f"item {i} failed before recovery",
+                            }
+                        }
+                        if (
+                            join.failed > state.tolerated_failures
+                            and not join.failing
+                        ):
+                            join.failing = True
+                            fail_fast = [
+                                (c.run_id, c.engine or self)
+                                for c in run.children
+                            ]
+                    run.log_event(
+                        self.clock.now(), "MapItemCompleted",
+                        state=state.name, index=i, status=status,
+                        completed=join.done, total=len(join.items),
+                        recovered=True,
+                    )
+                    continue
                 join.live += 1
                 join.peak_live = max(join.peak_live, join.live)
                 run.map_peak_live = max(run.map_peak_live, join.live)
+                host, stolen = self._place_map_child(child_id, join)
+                if stolen:
+                    join.stolen_live += 1
                 child = Run(
-                    run_id=f"{run.run_id}.m{i}",
+                    run_id=child_id,
                     flow=state.iterator,
                     flow_id=f"{run.flow_id}#map:{state.name}[{i}]",
                     creator=run.creator,
@@ -1417,43 +1569,84 @@ class FlowEngine:
                     branch_index=i,
                     parent_state=state.name,
                     of_join=join,
+                    engine=host,
+                    foreign_placed=stolen,
                 )
                 run.children.append(child)
                 admitted.append(child)
-        if not admitted:
-            return
-        with self._lock:
-            self.stats["map_items_admitted"] += len(admitted)
-            for child in admitted:
-                self.runs[child.run_id] = child
-        for child in admitted:
-            self.scheduler.submit(
-                lambda c=child: self._enter_state(c, c.flow.start_at)
+            # adoption can drain the join without any child ever going
+            # live (every item finished pre-crash) — claim the finish here,
+            # since no completion callback will ever fire to claim it
+            drained = join.live == 0 and (
+                join.failing or join.next_index >= len(join.items)
             )
+            if drained and not run.join_claimed and not run.cancel_requested:
+                run.join_claimed = True
+                finish = "fail" if join.failing else "ok"
+        stolen_total = 0
+        for child in admitted:
+            host = child.engine
+            with host._lock:
+                host.runs[child.run_id] = child
+                host.stats["map_items_admitted"] += 1
+                host.map_hosted += 1
+            host._note_residency(child.run_id)
+            if child.foreign_placed:
+                stolen_total += 1
+            host.scheduler.submit(
+                lambda c=child, h=host: h._enter_state(c, c.flow.start_at)
+            )
+        if stolen_total:
+            with self._lock:
+                self.stats["map_children_stolen"] += stolen_total
+        for run_id, host in fail_fast:
+            try:
+                host.cancel_run(run_id)
+            except AutomationError:
+                pass
+        if finish is not None:
+            self._map_finish(run, state, join, finish)
+
+    def _drop_map_child(self, child: Run) -> None:
+        """Drop a terminal Map child from its HOST engine's run table.
+
+        Runs on the host (which may not be the join owner) *before* the
+        completion is routed to the owner — so each engine only ever takes
+        its own ``_lock``, and live state stays bounded by the window
+        regardless of item count.
+        """
+        with self._lock:
+            # identity-checked: a Retry attempt re-registers the same child
+            # ids, and a stale completion must not evict the live successor
+            resident = self.runs.get(child.run_id) is child
+            if resident:
+                del self.runs[child.run_id]
+            self.stats["map_items_completed"] += 1
+            self.map_hosted = max(0, self.map_hosted - 1)
+        if resident:
+            self._forget_residency(child.run_id)
 
     def _map_child_done(self, child: Run) -> None:
         """One Map item reached a terminal state: record, refill, maybe join.
 
-        The child's slot result is its final context (success) or its error
-        document (tolerated failure).  The child Run object is dropped from
-        the parent and the engine's run table — live state stays bounded by
-        the window regardless of item count.
+        Always executes on the join OWNER's scheduler (the parent's home
+        engine) — :meth:`_fanout_child_done` routes cross-shard completions
+        here after the host has already dropped the child, so the join is
+        single-writer and no two shard locks are ever held together.  The
+        child's slot result is its final context (success) or its error
+        document (tolerated failure).
         """
         parent = child.parent
         assert parent is not None
         state = parent.flow.states[child.parent_state]
-        with self._lock:
-            # identity-checked: a Retry attempt re-registers the same child
-            # ids, and a stale completion must not evict the live successor
-            if self.runs.get(child.run_id) is child:
-                del self.runs[child.run_id]
-            self.stats["map_items_completed"] += 1
         finish = None   # claimed terminal decision, applied outside the lock
-        fail_fast: list[str] = []  # siblings to cancel when tolerance trips
+        fail_fast: list[tuple[str, "FlowEngine"]] = []
         with parent.lock:
             join = parent.map_join
             if join is None or child.of_join is not join:
                 return  # stale child from a superseded attempt
+            if child.foreign_placed:
+                join.stolen_live = max(0, join.stolen_live - 1)
             if parent.status != RUN_ACTIVE:
                 return
             if child in parent.children:
@@ -1478,8 +1671,11 @@ class FlowEngine:
                 }
                 if join.failed > state.tolerated_failures and not join.failing:
                     # fail fast: stop admitting and cancel in-flight items
+                    # on whichever shard hosts them
                     join.failing = True
-                    fail_fast = [c.run_id for c in parent.children]
+                    fail_fast = [
+                        (c.run_id, c.engine or self) for c in parent.children
+                    ]
             else:
                 # a successful child contributes its final context
                 join.results[child.branch_index] = child.context
@@ -1497,14 +1693,20 @@ class FlowEngine:
                 # must not both transition the parent (cf. Parallel)
                 parent.join_claimed = True
                 finish = "fail" if join.failing else "ok"
-        for run_id in fail_fast:
+        for run_id, host in fail_fast:
             try:
-                self.cancel_run(run_id)
+                host.cancel_run(run_id)
             except AutomationError:
                 pass
         if finish is None:
             self._map_admit(parent, state)
             return
+        self._map_finish(parent, state, join, finish)
+
+    def _map_finish(
+        self, parent: Run, state: asl.State, join: MapJoin, finish: str
+    ) -> None:
+        """Apply a claimed join outcome (owner engine, no shard locks held)."""
         with parent.lock:
             parent.map_join = None
             parent.children = []
@@ -1633,16 +1835,17 @@ class FlowEngine:
                 self.stats[key] += 1
         run.done.set()
         # a parent leaving ACTIVE mid-Map abandons its fan-out: cancel the
-        # in-flight children so they don't run on (advisory, like Parallel)
+        # in-flight children — on whichever shard hosts them — so they
+        # don't run on (advisory, like Parallel)
         with run.lock:
             abandoned = (
-                [c.run_id for c in run.children]
+                [(c.run_id, c.engine or self) for c in run.children]
                 if run.map_join is not None and status != RUN_SUCCEEDED
                 else []
             )
-        for child_id in abandoned:
+        for child_id, host in abandoned:
             try:
-                self.cancel_run(child_id)
+                host.cancel_run(child_id)
             except AutomationError:
                 pass
         for cb in list(run.completion_callbacks):
@@ -1654,10 +1857,22 @@ class FlowEngine:
             self.scheduler.submit(lambda: self._fanout_child_done(run))
 
     def _fanout_child_done(self, child: Run) -> None:
-        """Route a completed fan-out child to its join (Parallel vs Map)."""
+        """Route a completed fan-out child to its join (Parallel vs Map).
+
+        Runs on the child's HOST engine.  A Map child is first dropped from
+        this host's run table (host lock only), then the join bookkeeping is
+        handed to the parent's owner engine — its own scheduler event on its
+        own shard — so the two shards' locks are taken strictly in
+        sequence, never nested (ARCHITECTURE invariant 10).
+        """
         parent = child.parent
         state = parent.flow.states.get(child.parent_state) if parent else None
         if state is not None and state.kind == "Map":
+            self._drop_map_child(child)
+            owner = parent.engine or self
+            if owner is not self:
+                owner.scheduler.submit(lambda: owner._map_child_done(child))
+                return
             self._map_child_done(child)
         else:
             self._parallel_child_done(child)
@@ -1712,6 +1927,14 @@ class FlowEngine:
                 for key, value in view.counters.items():
                     if isinstance(value, (int, float)):
                         self.stats[key] = max(self.stats.get(key, 0), value)
+        # Terminal Map children replay from THIS shard's segment (each child
+        # journals where it ran, which after cross-shard placement need not
+        # be its parent's shard).  Their results are staged before any
+        # parent is resumed; a recovered parent's _map_admit re-attaches
+        # them to its join instead of re-running the items.  A pool merges
+        # every shard's table into one shared dict afterwards — see
+        # EngineShardPool.recover.
+        self.recovered_map_results.update(terminal_map_children(view))
         resumed: list[Run] = []
         for image in view.runs.values():
             if (
@@ -1744,6 +1967,8 @@ class FlowEngine:
                 # the replayed history already established a context
                 # baseline for this run; new records may patch against it
                 context_journaled=True,
+                engine=self,
+                seq=image.seq,
             )
             with self._lock:
                 self.runs[run.run_id] = run
@@ -1811,7 +2036,7 @@ class FlowEngine:
             mode=mode,
             wake_time=wake_time,
             start_time=now,
-            seq=0,
+            seq=image.seq,
             tags=(),
             monitor_by=_NO_ACL,
             manage_by=_NO_ACL,

@@ -95,11 +95,16 @@ class FlowsService:
         delta_journal: bool = True,
         snapshot_every: int = 64,
         passivate_after: float | None = None,
+        map_steal_bound: int | None = None,
     ):
         self.clock = clock or RealClock()
         self.auth = auth
         self.registry = registry
-        #: sharded execution layer; ``max_workers`` is the per-shard pool size
+        #: sharded execution layer; ``max_workers`` is the per-shard pool
+        #: size.  Map fan-outs spread their item children across all
+        #: ``shards`` (deterministic hash placement with a least-loaded
+        #: override capped by ``map_steal_bound``); the join stays on the
+        #: parent's shard — see repro.core.shard_pool.
         self.engine = EngineShardPool(
             registry,
             num_shards=shards,
@@ -115,6 +120,7 @@ class FlowsService:
             delta_journal=delta_journal,
             snapshot_every=snapshot_every,
             passivate_after=passivate_after,
+            map_steal_bound=map_steal_bound,
         )
         self._flows: dict[str, FlowRecord] = {}
         self._lock = threading.RLock()

@@ -580,7 +580,7 @@ class RunImage:
     #: scalar fields that round-trip through a checkpoint record
     _STATE_FIELDS = (
         "run_id", "flow_id", "input", "creator", "label", "status",
-        "context", "current_state", "attempt",
+        "context", "current_state", "attempt", "seq", "error",
         "action_id", "action_provider", "action_request_id",
         "passivated", "wake_time", "passivate_mode",
     )
@@ -595,6 +595,10 @@ class RunImage:
         self.context: Any = None
         self.current_state: str | None = None
         self.attempt: int = 0
+        #: global submission order (run_created ``seq``; 0 = shard-internal)
+        self.seq: int = 0
+        #: terminal error document (run_completed / run_cancelled records)
+        self.error: Any = None
         # outstanding action (if the run crashed mid-action)
         self.action_id: str | None = None
         self.action_provider: str | None = None
@@ -671,6 +675,7 @@ class RunImage:
             self.input = rec.get("input")
             self.creator = rec.get("creator", "anonymous")
             self.label = rec.get("label", "")
+            self.seq = rec.get("seq", 0)
             self._set_context(rec.get("input"))
         elif kind == "state_entered":
             self.current_state = rec["state"]
@@ -710,9 +715,11 @@ class RunImage:
             self.passivate_mode = None
         elif kind == "run_completed":
             self.status = rec.get("status", "SUCCEEDED")
+            self.error = rec.get("error")
             self._context_from(rec)
         elif kind == "run_cancelled":
             self.status = "CANCELLED"
+            self.error = rec.get("error")
             self._context_from(rec)
 
 
@@ -787,6 +794,31 @@ def replay_counters(journal: Journal) -> tuple[dict, int]:
     """
     view = replay_segment(journal)
     return view.counters, view.generation
+
+
+def terminal_map_children(view: SegmentView) -> dict[str, tuple]:
+    """Finished Map-item children in a replayed segment.
+
+    Keyed by child run id (``<parent>.m<i>``); each value is
+    ``(status, final context, error doc)``.  Cross-shard Map placement means
+    a child journals to *its* shard's segment, not its parent's — recovery
+    replays each segment independently and
+    :meth:`~repro.core.engine.FlowEngine._map_admit` re-attaches these
+    results to the recovered parent's join so finished items are not
+    re-executed.  Cancelled children are excluded: pre-crash cancellations
+    (a fail-fast sweep interrupted mid-flight) must not shadow an item a
+    fresh attempt would run normally.
+    """
+    results: dict[str, tuple] = {}
+    for run_id, image in view.runs.items():
+        if image.status not in ("SUCCEEDED", "FAILED"):
+            continue
+        dot = run_id.rfind(".")
+        tail = run_id[dot + 1:]
+        if dot < 0 or len(tail) < 2 or tail[0] != "m" or not tail[1:].isdigit():
+            continue
+        results[run_id] = (image.status, image.context, image.error)
+    return results
 
 
 class TriggerImage:

@@ -9,20 +9,28 @@ facade that is call-compatible with a single engine.
 
 Partitioning contract
 ---------------------
-* Runs are **hash-partitioned by run id**: ``shard_index(run_id, n)`` maps a
-  run to its home shard with a stable (process-independent) CRC32 hash, so
-  routing is stateless and a restarted pool recovers the same placement from
-  its journal segments.
-* ``Parallel`` branch children get ids of the form ``<parent>.bN`` and
-  ``Map`` item children ``<parent>.mN``; the hash covers only the root id,
-  so children **co-locate with their parent** (neither the branch join nor
-  the Map admission window ever crosses a shard boundary, and the window's
-  bookkeeping needs only the owning shard's locks).
-* Cross-shard traffic exists only at the facade: ``list_runs`` aggregates all
-  shards, and flow-as-action composition may place a child flow's run on a
-  different shard than its parent (each side only touches its own shard's
-  state; the parent observes the child through the provider API, exactly as
-  the paper's flows observe remote actions).
+* Runs are **hash-partitioned by placement key**: ``shard_index(run_id, n)``
+  maps a run to its home shard with a stable (process-independent) CRC32
+  hash of :func:`placement_key`, so routing is stateless and a restarted
+  pool recovers the same placement from its journal segments.
+* ``Parallel`` branch children (``<parent>.bN``) are *dropped* from the
+  placement key, so branches **co-locate with their parent** — the branch
+  join never crosses a shard boundary.
+* ``Map`` item children (``<parent>.mN``) are *kept* in the placement key,
+  so a Map fan-out **spreads deterministically across the whole pool**
+  (seeded by the parent run id + item index) instead of saturating the
+  parent's shard.  The admission window and join bookkeeping stay on the
+  parent's shard — the *owner* — and child completions are routed back to
+  it as ordinary scheduler events, so no two shards' locks are ever held
+  together (ARCHITECTURE invariant 10).  A least-loaded override (bounded
+  per-join work stealing, ``map_steal_bound``) smooths skewed item costs;
+  off-home placements are tracked in a small foreign-residency index so
+  facade lookups stay O(1).
+* Remaining cross-shard traffic lives at the facade: ``list_runs``
+  aggregates all shards, and flow-as-action composition may place a child
+  flow's run on a different shard than its parent (each side only touches
+  its own shard's state; the parent observes the child through the provider
+  API, exactly as the paper's flows observe remote actions).
 
 Determinism contract
 --------------------
@@ -43,11 +51,15 @@ checkpoint-compacts each segment independently so per-shard recovery is
 O(live state), not O(history) — see docs/durability.md.
 Recovery is per-shard: each shard replays only its own segment, so
 a pool restarted with the same ``num_shards`` recovers every unfinished run
-on its original home shard.  Restarting with a *different* count opens fresh
-segments and recovers nothing (the count is embedded in the segment file
-names) — restart with the original count to recover.  For callers wiring
-explicit ``journals=`` whose contents don't match the hash placement,
-``get_run`` falls back to scanning all shards so reads still resolve.
+on its original home shard, and a Map child's terminal record replays from
+the segment of the shard that *hosted* it — :meth:`EngineShardPool.recover`
+merges every shard's replayed child results so a recovered parent re-attaches
+them to its join regardless of where each item ran.  Restarting with a
+*different* count opens fresh segments and recovers nothing (the count is
+embedded in the segment file names) — restart with the original count to
+recover.  For callers wiring explicit ``journals=`` whose contents don't
+match the hash placement, recovery registers the off-home runs in the
+foreign-residency index, so reads resolve without scanning the pool.
 """
 
 from __future__ import annotations
@@ -65,15 +77,34 @@ from .errors import NotFound
 from .journal import Journal, segment_path
 
 
+def placement_key(run_id: str) -> str:
+    """The id substring a run is hash-placed by.
+
+    ``Parallel`` branch segments (``.bN``) are dropped — branches co-locate
+    with their parent, so their join never crosses shards.  ``Map`` item
+    segments (``.mN``) are kept — each item child hashes with its full Map
+    path, which is exactly "parent run id + item index", giving every Map
+    fan-out a deterministic spread over the pool that recovery and request
+    routing can recompute from the id alone.
+    """
+    if "." not in run_id:
+        return run_id
+    parts = run_id.split(".")
+    kept = [parts[0]]
+    for part in parts[1:]:
+        if part[:1] == "m" and part[1:].isdigit():
+            kept.append(part)
+    return ".".join(kept)
+
+
 def shard_index(run_id: str, num_shards: int) -> int:
     """Stable hash partition of a run id onto ``num_shards`` shards.
 
-    Only the root id (before the first ``.``) is hashed so fan-out children
-    (``<parent>.bN`` Parallel branches, ``<parent>.mN`` Map items) land on
-    their parent's shard.
+    Hashes :func:`placement_key`, so Parallel branches land on their
+    parent's shard while Map item children get their own deterministic
+    home — process-independent (CRC32), hence recomputable after a crash.
     """
-    root = run_id.split(".", 1)[0]
-    return zlib.crc32(root.encode("utf-8")) % num_shards
+    return zlib.crc32(placement_key(run_id).encode("utf-8")) % num_shards
 
 
 class PoolScheduler:
@@ -174,6 +205,7 @@ class EngineShardPool:
         delta_journal: bool = True,
         snapshot_every: int = 64,
         passivate_after: float | None = None,
+        map_steal_bound: int | None = None,
     ):
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
@@ -224,8 +256,24 @@ class EngineShardPool:
                     passivate_after=passivate_after,
                 )
             )
+        for i, engine in enumerate(self.engines):
+            engine.pool = self
+            engine.shard_id = i
         self.scheduler = PoolScheduler([e.scheduler for e in self.engines], self.clock)
         self._seq = MonotonicId()  # global submission order for list_runs
+        #: per-join cap on *concurrently* off-home Map children: the
+        #: least-loaded policy stops deviating from the hash home once a
+        #: join has this many stolen children in flight, which bounds the
+        #: foreign-residency index and keeps placement mostly deterministic
+        self.map_steal_bound = (
+            map_steal_bound if map_steal_bound is not None else 2 * num_shards
+        )
+        #: run_id -> shard index, ONLY for runs resident off their hash
+        #: home (stolen Map children, runs recovered from mismatched
+        #: ``journals=``).  Kept small by the steal bound; lets ``_owner``
+        #: resolve misses in O(1) instead of scanning every shard.
+        self._foreign: dict[str, int] = {}
+        self._foreign_lock = threading.Lock()
 
     # ------------------------------------------------------------- routing
     def shard_of(self, run_id: str) -> FlowEngine:
@@ -248,27 +296,77 @@ class EngineShardPool:
         return [engine.journal for engine in self.engines]
 
     def _owner(self, run_id: str) -> FlowEngine:
-        """Resolve the engine actually holding ``run_id``.
+        """Resolve the engine actually holding ``run_id`` — in O(1).
 
-        The home shard almost always matches; the fallback scan covers runs
-        recovered from segments written under a different shard count.
+        The hash home almost always matches; anything resident elsewhere
+        (a stolen Map child, a run recovered from mismatched ``journals=``)
+        was registered in the foreign-residency index when it was placed or
+        recovered.  Unknown ids resolve to the home shard so NotFound is
+        raised from the canonical place — without the full-pool scan this
+        used to cost on every miss.
         """
         home = self.shard_of(run_id)
         if run_id in home.runs or run_id in home.dormant:
             return home
-        for engine in self.engines:
-            if run_id in engine.runs or run_id in engine.dormant:
-                return engine
+        idx = self._foreign.get(run_id)
+        if idx is not None:
+            return self.engines[idx]
         return home  # raise NotFound from the canonical place
+
+    # ------------------------------------------------------- Map placement
+    def place_map_child(self, child_id: str, join) -> tuple[FlowEngine, bool]:
+        """(host engine, stolen?) for a Map child about to go live.
+
+        Default is the child's deterministic hash home.  When the home is
+        measurably busier than the least-loaded shard — skewed item costs
+        pile long-running children onto one engine — the child is *stolen*
+        to the least-loaded shard instead, up to ``map_steal_bound``
+        concurrently-stolen children per join.  Load gauges are read dirty
+        (no engine locks; the caller holds only the parent's run lock), so
+        under a VirtualClock the decision is still deterministic.
+        """
+        home_idx = shard_index(child_id, self.num_shards)
+        if self.num_shards == 1:
+            return self.engines[0], False
+        loads = [engine.map_hosted for engine in self.engines]
+        best = min(range(self.num_shards), key=lambda i: (loads[i], i))
+        if (
+            loads[home_idx] <= loads[best]
+            or join.stolen_live >= self.map_steal_bound
+        ):
+            return self.engines[home_idx], False
+        return self.engines[best], True
+
+    def note_residency(self, run_id: str, shard_id: int) -> None:
+        """Record that ``run_id`` is resident on ``shard_id``.
+
+        A no-op for home placements; off-home runs go into the foreign
+        index so ``_owner`` finds them without scanning.
+        """
+        if shard_index(run_id, self.num_shards) != shard_id:
+            with self._foreign_lock:
+                self._foreign[run_id] = shard_id
+
+    def forget_residency(self, run_id: str, shard_id: int) -> None:
+        """Drop ``run_id``'s foreign-index entry if ``shard_id`` owns it.
+
+        Guarded by owner: a stale child from a superseded Map attempt must
+        not erase the entry its live successor registered from another
+        shard.
+        """
+        with self._foreign_lock:
+            if self._foreign.get(run_id) == shard_id:
+                del self._foreign[run_id]
 
     # ------------------------------------------------------------- run API
     def start_run(self, flow: asl.Flow, flow_input: dict, **kwargs) -> Run:
         run_id = kwargs.pop("run_id", None) or "run-" + secrets.token_hex(8)
-        run = self.shard_of(run_id).start_run(
-            flow, flow_input, run_id=run_id, **kwargs
+        # seq is handed to the shard so it is set at Run construction —
+        # stamping it on the returned (already-live) run raced the run's
+        # first transitions, which could observe/journal the default seq
+        return self.shard_of(run_id).start_run(
+            flow, flow_input, run_id=run_id, seq=self._seq.next(), **kwargs
         )
-        run.seq = self._seq.next()
-        return run
 
     def get_run(self, run_id: str) -> Run:
         return self._owner(run_id).get_run(run_id)
@@ -379,9 +477,29 @@ class EngineShardPool:
         """Per-shard crash recovery: each shard replays its own segment.
 
         Shards are independent — one shard's corrupt or missing segment does
-        not block the others (the caller sees whatever recovered).
+        not block the others (the caller sees whatever recovered).  Two
+        pool-level stitches happen on top of the per-shard replays:
+
+        * every shard's replayed terminal Map-child results are merged into
+          ONE table shared by all engines, so a recovered parent re-attaches
+          items that ran (and finished) on *foreign* shards' segments — and
+          the shared dict's one-shot pops stay global;
+        * runs and dormant stubs that recovered onto a shard other than
+          their hash home (explicit ``journals=`` wiring) are registered in
+          the foreign-residency index so lookups resolve without scanning.
         """
         resumed: list[Run] = []
+        merged_children: dict[str, tuple] = {}
         for engine in self.engines:
-            resumed.extend(engine.recover(flows_by_id, resume=resume))
+            shard_resumed = engine.recover(flows_by_id, resume=resume)
+            resumed.extend(shard_resumed)
+            merged_children.update(engine.recovered_map_results)
+            for run in shard_resumed:
+                self.note_residency(run.run_id, engine.shard_id)
+            with engine._lock:
+                dormant_ids = list(engine.dormant)
+            for run_id in dormant_ids:
+                self.note_residency(run_id, engine.shard_id)
+        for engine in self.engines:
+            engine.recovered_map_results = merged_children
         return resumed

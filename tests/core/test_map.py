@@ -336,6 +336,139 @@ def test_crash_mid_map_recovers_to_reference(seed, tmp_path_factory=None):
         assert all(".m" not in rid for rid in recovered_pool.runs)
 
 
+# ----------------------- cross-shard fan-out ≡ single-shard reference
+
+@settings(max_examples=8)
+@given(st.integers(min_value=0, max_value=2**31))
+def test_multishard_map_equals_single_shard_reference(seed):
+    """Map children spread across the pool (``.mN`` kept in the placement
+    key) must be invisible to flow semantics: same ordered results, same
+    terminal context, same virtual completion time as the shards=1 run —
+    including failed items under full tolerance, whose error documents
+    route back to the owner's join from foreign shards."""
+    rng = random.Random(seed)
+    items = [
+        round(rng.uniform(0.0, 5.0), 3) if rng.random() < 0.8 else -1.0
+        for _ in range(rng.randint(4, 20))
+    ]
+    window = rng.choice([2, 4, 8])
+    flow = asl.parse(map_definition(window, tolerated=len(items)))
+
+    outcomes = {}
+    spreads = {}
+    for shards in (1, 4, 8):
+        pool = make_pool(None, shards=shards)
+        run = pool.start_run(flow, {"xs": items}, flow_id="m", run_id="run-ms")
+        pool.run_to_completion(run.run_id)
+        assert run.status == RUN_SUCCEEDED
+        assert run.map_peak_live <= window
+        # completed fan-out leaves no children and no foreign-index residue
+        assert all(".m" not in rid for rid in pool.runs)
+        assert pool._foreign == {}
+        outcomes[shards] = (run.status, canon(run.context),
+                            run.completion_time)
+        spreads[shards] = [e.stats["map_items_completed"]
+                           for e in pool.engines]
+    assert outcomes[4] == outcomes[1]
+    assert outcomes[8] == outcomes[1]
+    # every item executed exactly once, and (hash spread + least-loaded
+    # stealing) the pool actually distributed them
+    assert sum(spreads[4]) == len(items)
+    if len(items) >= 8 and window >= 2:
+        assert sum(1 for hosted in spreads[4] if hosted) >= 2
+
+
+def test_multishard_fail_fast_cancels_foreign_children():
+    """Fail-fast must sweep in-flight siblings on *other* shards: the
+    cancel is routed to each child's host engine, not the owner's."""
+    items = [5.0] * 5 + [-1.0] + [5.0] * 6  # index 5 fails mid-first-wave
+    flow = asl.parse(map_definition(6))
+    pool = make_pool(None, shards=4)
+    run = pool.start_run(flow, {"xs": items}, flow_id="m", run_id="run-ff")
+    pool.run_to_completion(run.run_id)
+    assert run.status == RUN_FAILED
+    assert run.error["Error"] == "States.MapItemFailed"
+    # no orphaned children anywhere in the pool, no foreign-index leaks
+    assert all(".m" not in rid for rid in pool.runs)
+    assert pool._foreign == {}
+
+
+def test_skewed_item_costs_steal_across_shards():
+    """Every 4th item is 100x slower: hash placement alone piles long
+    sleeps onto whichever shard their ids hash to, so the least-loaded
+    override must steal some children — without changing the outcome or
+    the deterministic virtual timeline."""
+    items = [100.0 if i % 4 == 0 else 1.0 for i in range(64)]
+    flow = asl.parse(map_definition(8))
+
+    ref_engine = make_engine()
+    ref = ref_engine.start_run(flow, {"xs": items}, flow_id="m",
+                               run_id="run-skew")
+    ref_engine.run_to_completion(ref.run_id)
+    assert ref.status == RUN_SUCCEEDED
+
+    pool = make_pool(None, shards=4)
+    run = pool.start_run(flow, {"xs": items}, flow_id="m", run_id="run-skew")
+    pool.run_to_completion(run.run_id)
+
+    assert run.status == RUN_SUCCEEDED
+    assert canon(run.context) == canon(ref.context)
+    assert run.completion_time == ref.completion_time
+    spread = [e.stats["map_items_completed"] for e in pool.engines]
+    assert sum(spread) == len(items) and all(spread)  # every shard hosted
+    assert pool.stats["map_children_stolen"] > 0
+    assert pool._foreign == {}  # stolen placements were forgotten on drop
+
+
+def test_crash_mid_map_children_recover_from_foreign_segments(tmp_path):
+    """Children journal on their *host* shard: after a mid-Map crash their
+    records span several segments, and recovery must merge every shard's
+    replayed terminal children so the owner's join re-attaches finished
+    items instead of re-running them."""
+    from repro.core.journal import segment_path
+
+    items = [float(i % 7) for i in range(24)]
+    flow = asl.parse(map_definition(5))
+
+    ref_pool = make_pool(str(tmp_path / "ref.jsonl"))
+    ref = ref_pool.start_run(flow, {"xs": items}, flow_id="f1", run_id="run-x")
+    ref_pool.run_to_completion(ref.run_id)
+    assert ref.status == RUN_SUCCEEDED
+
+    path = str(tmp_path / "crash.jsonl")
+    crash_pool = make_pool(path)
+    crash_pool.start_run(flow, {"xs": items}, flow_id="f1", run_id="run-x")
+    crash_pool.drain(until=6.0)  # some items done, some in flight, some not
+
+    segments_with_children = set()
+    finished_children = set()
+    for i in range(4):
+        with open(segment_path(path, i, 4)) as fh:
+            for line in fh:
+                if '"run-x.m' not in line:
+                    continue
+                segments_with_children.add(i)
+                if '"type":"run_completed"' in line:
+                    finished_children.add(i)
+    assert len(segments_with_children) >= 2  # fan-out really crossed shards
+    assert finished_children  # at least one item was durably finished
+
+    recovered = make_pool(path)
+    resumed = recovered.recover({"f1": flow})
+    assert [r.run_id for r in resumed] == ["run-x"]
+    # the per-shard replays were merged into ONE table shared by every
+    # engine, holding the pre-crash terminal children
+    merged = recovered.engines[0].recovered_map_results
+    assert merged and all(rid.startswith("run-x.m") for rid in merged)
+    assert all(e.recovered_map_results is merged for e in recovered.engines)
+
+    after = recovered.run_to_completion("run-x")
+    assert after.status == RUN_SUCCEEDED
+    assert canon(after.context) == canon(ref.context)
+    assert not merged  # every replayed terminal child was adopted (one-shot)
+    assert all(".m" not in rid for rid in recovered.runs)
+
+
 # --------------------------- invariant 7: delta replay ≡ snapshot replay
 
 @settings(max_examples=8)

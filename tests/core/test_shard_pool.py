@@ -1,5 +1,6 @@
 """EngineShardPool: routing, cross-shard determinism, sharded recovery."""
 
+import json
 import os
 
 import pytest
@@ -7,9 +8,10 @@ import pytest
 from repro.core import asl
 from repro.core.actions import ActionRegistry
 from repro.core.clock import VirtualClock
-from repro.core.engine import RUN_ACTIVE, RUN_SUCCEEDED
-from repro.core.journal import segment_path
-from repro.core.shard_pool import EngineShardPool, shard_index
+from repro.core.engine import RUN_ACTIVE, RUN_SUCCEEDED, FlowEngine
+from repro.core.errors import NotFound
+from repro.core.journal import Journal, segment_path
+from repro.core.shard_pool import EngineShardPool, placement_key, shard_index
 from repro.core.providers import EchoProvider, SleepProvider
 
 CHAIN = {
@@ -76,6 +78,27 @@ def test_parallel_children_colocate_with_parent():
         assert shard_index("run-abc.b1.b2", n) == shard_index("run-abc", n)
 
 
+def test_placement_key_strips_branches_keeps_map_items():
+    """Branch segments (``.bN``) co-locate; Map item segments (``.mN``)
+    give each item child its own deterministic home."""
+    assert placement_key("run-abc") == "run-abc"
+    assert placement_key("run-abc.b0") == "run-abc"
+    assert placement_key("run-abc.b1.b2") == "run-abc"
+    assert placement_key("run-abc.m3") == "run-abc.m3"
+    assert placement_key("run-abc.b1.m2") == "run-abc.m2"
+    assert placement_key("run-abc.m2.b1") == "run-abc.m2"
+    # only "m<digits>" is a Map segment; anything else folds to the parent
+    assert placement_key("run-abc.mx") == "run-abc"
+    assert placement_key("run-abc.m") == "run-abc"
+
+
+def test_map_children_spread_across_shards():
+    for n in (2, 4, 8):
+        homes = {shard_index(f"run-abc.m{i}", n) for i in range(32)}
+        assert homes <= set(range(n))
+        assert len(homes) > 1  # a fan-out never saturates one shard
+
+
 def test_runs_route_to_owning_shard():
     pool, _ = make_pool(4)
     flow = asl.parse(CHAIN)
@@ -96,8 +119,6 @@ def test_bad_shard_configs_rejected():
     registry = ActionRegistry()
     with pytest.raises(ValueError):
         EngineShardPool(registry, num_shards=0)
-    from repro.core.journal import Journal
-
     with pytest.raises(ValueError):
         EngineShardPool(registry, num_shards=2, journal=Journal())
     with pytest.raises(ValueError):
@@ -236,3 +257,155 @@ def test_runs_view_merges_shards_in_submission_order():
         rid for rid, run in pool.runs.items() if run.parent is None
     ]
     assert top_level == expected
+
+
+# ------------------------------------------- regression: seq assignment race
+
+def test_seq_set_at_construction_and_journaled(tmp_path):
+    """Regression: ``seq`` used to be stamped on the *returned* run, racing
+    its first transitions — a run's ``run_created`` record could journal the
+    default 0.  It is now handed into ``FlowEngine.start_run`` so the run is
+    born with it, the journal records it, and recovery restores it."""
+    path = str(tmp_path / "journal.jsonl")
+    flow = asl.parse(CHAIN)
+    pool1, _ = make_pool(4, journal_path=path)
+    expected = [
+        pool1.start_run(flow, {"msg": str(i)}, run_id=f"run-{i:04d}").run_id
+        for i in range(8)
+    ]
+    assert [pool1.get_run(rid).seq for rid in expected] == list(range(1, 9))
+    pool1.drain(until=10.0)  # "crash" mid-flight, every run in Pause
+
+    seqs = {}
+    for i in range(4):
+        with open(segment_path(path, i, 4)) as fh:
+            for line in fh:
+                rec = json.loads(line)
+                if rec.get("type") == "run_created":
+                    seqs[rec["run_id"]] = rec["seq"]
+    assert [seqs[rid] for rid in expected] == list(range(1, 9))
+
+    pool2, _ = make_pool(4, journal_path=path)
+    pool2.recover({"flow": flow})
+    assert [pool2.get_run(rid).seq for rid in expected] == list(range(1, 9))
+    # the merged runs view sorts by the recovered seq: submission order holds
+    assert list(pool2.runs) == expected
+
+
+def test_engine_start_run_accepts_seq():
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    registry.register(SleepProvider(clock=clock))
+    engine = FlowEngine(registry, clock=clock)
+    run = engine.start_run(asl.parse(CHAIN), {"msg": "x"}, run_id="r", seq=7)
+    assert run.seq == 7
+
+
+# --------------------------------------- regression: wake_run TOCTOU contract
+
+PARK = {
+    "StartAt": "Park",
+    "States": {
+        "Park": {"Type": "Wait", "Seconds": 7000.0, "Next": "Done"},
+        "Done": {"Type": "Pass", "Result": {"ok": True},
+                 "ResultPath": "$.done", "End": True},
+    },
+}
+
+
+def make_parking_pool(num_shards=2):
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    registry.register(SleepProvider(clock=clock))
+    return EngineShardPool(registry, num_shards=num_shards, clock=clock,
+                           passivate_after=0.0)
+
+
+def test_wake_run_contract_sequential():
+    pool = make_parking_pool()
+    run = pool.start_run(asl.parse(PARK), {}, flow_id="f", run_id="run-park")
+    pool.drain(until=10.0)
+    assert run.run_id in pool.dormant
+
+    assert pool.wake_run(run.run_id) is True   # this call rehydrated it
+    assert pool.wake_run(run.run_id) is False  # already resident
+    assert pool.wake_run("run-nope") is False  # unknown
+    pool.drain()
+    assert pool.get_run(run.run_id).status == RUN_SUCCEEDED
+
+
+def test_wake_run_raced_by_timer_returns_false():
+    """Regression: wake_run used to check dormancy, then pop — a wake that
+    landed between the two made it claim a rehydration it never performed.
+    The pop is the atomic claim now: a raced wake_run observes the miss and
+    returns False, and the run is resumed exactly once."""
+    pool = make_parking_pool()
+    run = pool.start_run(asl.parse(PARK), {}, flow_id="f", run_id="run-park")
+    pool.drain(until=10.0)
+    engine = pool.shard_of(run.run_id)
+    assert run.run_id in engine.dormant
+
+    real_pop = engine._pop_stub
+    raced = []
+
+    def racy_pop(run_id):
+        if not raced:  # the timer wake fires inside wake_run's window
+            raced.append(run_id)
+            engine._wake_dormant(run_id)
+        return real_pop(run_id)
+
+    engine._pop_stub = racy_pop
+    try:
+        assert engine.wake_run(run.run_id) is False  # lost the race
+    finally:
+        engine._pop_stub = real_pop
+    assert raced == [run.run_id]  # the injected race did happen
+    assert run.run_id in engine.runs
+    assert run.run_id not in engine.dormant
+    pool.drain()
+    assert pool.get_run(run.run_id).status == RUN_SUCCEEDED
+    assert pool.get_run(run.run_id).context["done"] == {"ok": True}
+
+
+# ---------------------------------- regression: O(1) foreign-residency index
+
+def test_recover_mismatched_journals_registers_foreign_index():
+    """Explicit ``journals=`` whose contents don't match hash placement:
+    recovery registers the off-home runs in the foreign-residency index, so
+    facade lookups resolve without the full-pool scan ``_owner`` used to
+    fall back to — and unknown ids still raise NotFound from the home."""
+    def pool_with(journals):
+        clock = VirtualClock()
+        registry = ActionRegistry()
+        registry.register(EchoProvider(clock=clock))
+        registry.register(SleepProvider(clock=clock))
+        return EngineShardPool(registry, num_shards=2, clock=clock,
+                               journals=journals)
+
+    j0, j1 = Journal(), Journal()
+    flow = asl.parse(CHAIN)
+    pool1 = pool_with([j0, j1])
+    by_home, i = {}, 0
+    while len(by_home) < 2:  # one run homed on each shard
+        rid = f"run-{i:02d}"
+        by_home.setdefault(shard_index(rid, 2), rid)
+        i += 1
+    for rid in by_home.values():
+        pool1.start_run(flow, {"msg": rid}, flow_id="f", run_id=rid)
+    pool1.drain(until=10.0)  # crash mid-flight
+
+    pool2 = pool_with([j1, j0])  # segments swapped: every run is off-home
+    resumed = pool2.recover({"f": flow})
+    assert sorted(r.run_id for r in resumed) == sorted(by_home.values())
+    assert pool2._foreign == {by_home[0]: 1, by_home[1]: 0}
+    for home, rid in by_home.items():
+        assert rid not in pool2.engines[home].runs
+        assert pool2.get_run(rid).run_id == rid  # resolves via the index
+    with pytest.raises(NotFound):
+        pool2.get_run("run-nope")
+
+    done = pool2.run_to_completion(by_home[0])
+    assert done.status == RUN_SUCCEEDED
+    assert done.context["b"]["details"]["echo_string"] == by_home[0]
