@@ -11,7 +11,8 @@ export REPRO_PYTHONPATH := src:.
 ARGS ?=
 
 .PHONY: check bench bench-quick bench-nightly shards fanout recovery \
-        overhead map dormant durability xfail-guard regression-gate baseline
+        overhead map dormant noisy durability xfail-guard regression-gate \
+        baseline
 
 check:
 	./scripts/check.sh $(ARGS)
@@ -26,7 +27,7 @@ bench-quick:
 # benchmarks/results/, gated against the checked-in baseline
 bench-nightly:
 	PYTHONPATH=$(REPRO_PYTHONPATH) python -m benchmarks.run --quick \
-	  --only shards,fanout,recovery,overhead,map,dormant $(ARGS)
+	  --only shards,fanout,recovery,overhead,map,dormant,noisy $(ARGS)
 
 shards:
 	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/shard_scaling.py $(ARGS)
@@ -48,6 +49,11 @@ map:
 dormant:
 	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/fig_dormant_scale.py $(ARGS)
 
+# noisy neighbor: tenant B's p99 latency under a 10x tenant-A flood must
+# stay within 1.5x its solo baseline (weighted-fair admission)
+noisy:
+	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/fig_noisy_neighbor.py $(ARGS)
+
 # crash-point / fault-injection durability suite (CI runs it as its own
 # job with REPRO_TEST_SHARDS=4 and a dedicated timeout)
 durability:
@@ -56,7 +62,9 @@ durability:
 	  tests/core/test_delta_journal.py tests/core/test_map.py \
 	  tests/core/test_recovery.py tests/core/test_shard_pool.py \
 	  tests/core/test_queue_properties.py tests/core/test_event_router.py \
-	  tests/core/test_passivation.py tests/core/test_timer_wheel.py
+	  tests/core/test_passivation.py tests/core/test_timer_wheel.py \
+	  tests/core/test_auth.py tests/core/test_tenancy.py \
+	  tests/core/test_auth_chain.py
 
 xfail-guard:
 	./scripts/check_xfails.sh

@@ -161,6 +161,23 @@ def collect_metrics() -> dict[str, dict]:
             metrics["fig_dormant_scale/n=10000/mem_reduction"] = {
                 "value": row["mem_reduction"], "higher_is_better": True,
             }
+
+    # noisy neighbor: gate tenant isolation.  fairness_ok is the hard
+    # acceptance bit (contended p99 <= 1.5x solo p99 — 1.0 or the
+    # benchmark itself asserts); the ratio is gated too, with a wide
+    # tolerance since it divides two latency tails.
+    noisy = _load("fig_noisy_neighbor") or []
+    for row in noisy:
+        if row.get("phase") != "contended":
+            continue
+        metrics["fig_noisy_neighbor/fairness_ok"] = {
+            "value": 1.0 if row.get("fairness_ok") else 0.0,
+            "higher_is_better": True,
+        }
+        metrics["fig_noisy_neighbor/b_p99_ratio"] = {
+            "value": row["b_p99_ratio"], "higher_is_better": False,
+            "tolerance": 0.5,
+        }
     return metrics
 
 

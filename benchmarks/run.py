@@ -14,7 +14,8 @@ import time
 import traceback
 
 BENCHES = ["fig7", "fig8", "fig9", "table1", "fig10", "shards", "fanout",
-           "recovery", "overhead", "map", "dormant", "soak", "roofline"]
+           "recovery", "overhead", "map", "dormant", "noisy", "soak",
+           "roofline"]
 
 
 def _run_roofline() -> list[str]:
@@ -80,6 +81,9 @@ def main() -> int:
     if "dormant" in selected:
         from benchmarks import fig_dormant_scale
         runners["dormant"] = fig_dormant_scale.main
+    if "noisy" in selected:
+        from benchmarks import fig_noisy_neighbor
+        runners["noisy"] = fig_noisy_neighbor.main
     if "soak" in selected:
         from benchmarks import soak
         runners["soak"] = soak.main

@@ -9,7 +9,7 @@ the training fabric plugs in through action providers
 
 from .actions import ACTIVE, FAILED, SUCCEEDED, ActionProvider, ActionRegistry, ActionStatus
 from .asl import Flow, parse as parse_flow
-from .auth import AuthService, Caller, Identity
+from .auth import AuthContext, AuthService, Caller, Identity, Tenant
 from .clock import RealClock, VirtualClock
 from .engine import (
     RUN_ACTIVE,
@@ -40,6 +40,7 @@ from .journal import (
     segment_path,
 )
 from .queues import QueueService
+from .admission import FairAdmission, StrideOrder, TokenBucket
 from .shard_pool import EngineShardPool, PoolScheduler, shard_index
 from .timers import TimerService
 from .triggers import EventRouter, Trigger, TriggerConfig, TriggerService
@@ -48,8 +49,9 @@ __all__ = [
     "ACTIVE", "FAILED", "SUCCEEDED",
     "ActionProvider", "ActionRegistry", "ActionStatus",
     "Flow", "parse_flow",
-    "AuthService", "Caller", "Identity",
+    "AuthService", "AuthContext", "Caller", "Identity", "Tenant",
     "RealClock", "VirtualClock",
+    "FairAdmission", "StrideOrder", "TokenBucket",
     "RUN_ACTIVE", "RUN_CANCELLED", "RUN_FAILED", "RUN_SUCCEEDED",
     "FlowEngine", "PollingPolicy", "Run", "Scheduler",
     "AutomationError", "ActionFailedException", "ActionTimeout", "AuthError",

@@ -37,7 +37,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable
 
 from . import schema as jsonschema
-from .auth import AuthService, Caller, Identity
+from .auth import AuthContext, AuthService, Identity
 from .clock import Clock, RealClock
 from .errors import ActionUnknown, AuthError, Forbidden
 
@@ -82,7 +82,7 @@ class _Action:
     action_id: str
     creator: str
     body: dict
-    caller: "Caller | None" = None
+    caller: "AuthContext | None" = None
     status: str = ACTIVE
     details: Any = None
     display_status: str = ""
@@ -161,7 +161,7 @@ class ActionProvider:
     def run(
         self,
         body: dict,
-        caller: Caller | None = None,
+        caller: AuthContext | None = None,
         request_id: str | None = None,
         monitor_by: list[str] | None = None,
         manage_by: list[str] | None = None,
@@ -194,7 +194,7 @@ class ActionProvider:
             self._complete(action, FAILED, details={"error": str(e)})
         return self._status_of(action)
 
-    def status(self, action_id: str, caller: Caller | None = None) -> ActionStatus:
+    def status(self, action_id: str, caller: AuthContext | None = None) -> ActionStatus:
         """GET <action_id>/status."""
         action = self._get(action_id)
         self._authorize_view(action, caller)
@@ -204,7 +204,7 @@ class ActionProvider:
             self._poll(action)
         return self._status_of(action)
 
-    def cancel(self, action_id: str, caller: Caller | None = None) -> ActionStatus:
+    def cancel(self, action_id: str, caller: AuthContext | None = None) -> ActionStatus:
         """POST <action_id>/cancel — advisory only (paper §5.2)."""
         action = self._get(action_id)
         self._authorize_manage(action, caller)
@@ -214,7 +214,7 @@ class ActionProvider:
             self._cancel(action)
         return self._status_of(action)
 
-    def release(self, action_id: str, caller: Caller | None = None) -> ActionStatus:
+    def release(self, action_id: str, caller: AuthContext | None = None) -> ActionStatus:
         """POST <action_id>/release — forget a completed action."""
         action = self._get(action_id)
         self._authorize_manage(action, caller)
@@ -338,22 +338,24 @@ class ActionProvider:
             raise ActionUnknown(f"unknown action id {action_id!r}")
         return action
 
-    def _authenticate(self, caller: Caller | None) -> Identity | None:
+    def _authenticate(self, caller: AuthContext | None) -> Identity | None:
         if self.auth is None:
             return caller.identity if caller else None
         if caller is None:
-            raise AuthError(f"{self.url}: authentication required")
+            raise AuthError(
+                f"{self.url}: authentication required", code="missing_token"
+            )
         token = caller.token_for(self.scope)
         return self.auth.require(token, self.scope)
 
-    def _authorize_view(self, action: _Action, caller: Caller | None) -> None:
+    def _authorize_view(self, action: _Action, caller: AuthContext | None) -> None:
         self._authorize(action, caller, action.monitor_by | action.manage_by)
 
-    def _authorize_manage(self, action: _Action, caller: Caller | None) -> None:
+    def _authorize_manage(self, action: _Action, caller: AuthContext | None) -> None:
         self._authorize(action, caller, action.manage_by)
 
     def _authorize(
-        self, action: _Action, caller: Caller | None, extra: set[str]
+        self, action: _Action, caller: AuthContext | None, extra: set[str]
     ) -> None:
         if self.auth is None:
             return

@@ -33,7 +33,7 @@ from typing import Any, Callable
 
 from . import actions as ap
 from . import asl
-from .auth import Caller
+from .auth import AuthContext
 from .clock import Clock, RealClock
 from .errors import (
     ActionFailedException,
@@ -59,6 +59,14 @@ RUN_INACTIVE = "INACTIVE"
 #: Long-lived runs (paper: "seconds to weeks") otherwise accumulate events
 #: without bound; beyond the cap the oldest events are dropped and counted.
 MAX_RUN_EVENTS = 256
+
+
+def _error_details(exc: AutomationError) -> dict | None:
+    """State-failure ``Details`` payload: auth errors carry their
+    machine-readable ``code`` so Catch handlers can see *why* (token_expired
+    vs consent_required vs scope_mismatch), not just the error family."""
+    code = getattr(exc, "code", None)
+    return {"code": code} if code is not None else None
 
 
 @dataclass
@@ -113,8 +121,8 @@ class Run:
     flow: asl.Flow
     flow_id: str
     creator: str
-    caller: Caller | None
-    run_as: dict[str, Caller] = field(default_factory=dict)
+    caller: AuthContext | None
+    run_as: dict[str, AuthContext] = field(default_factory=dict)
     label: str = ""
     tags: list[str] = field(default_factory=list)
     monitor_by: set[str] = field(default_factory=set)
@@ -164,6 +172,10 @@ class Run:
 
     # global submission order, stamped by EngineShardPool (0 = shard-internal)
     seq: int = 0
+    #: fairness/accounting domain this run is billed to (Tenant.tenant_id);
+    #: None = unmetered.  Stamped at submission, inherited by fan-out
+    #: children, and preserved across passivation.
+    tenant_id: str | None = None
 
     # events log (web-app Events tab, Fig 2c) — a bounded ring buffer:
     # beyond MAX_RUN_EVENTS the oldest entries are dropped and counted
@@ -250,7 +262,7 @@ class DormantStub:
     __slots__ = (
         "run_id", "flow", "flow_id", "creator", "caller", "run_as", "label",
         "state", "attempt", "mode", "wake_time", "start_time", "seq",
-        "tags", "monitor_by", "manage_by", "events_dropped",
+        "tenant_id", "tags", "monitor_by", "manage_by", "events_dropped",
         "journal_ref", "wake_handle",
     )
 
@@ -261,8 +273,8 @@ class DormantStub:
         flow: asl.Flow,
         flow_id: str,
         creator: str,
-        caller: Caller | None,
-        run_as: dict[str, Caller],
+        caller: AuthContext | None,
+        run_as: dict[str, AuthContext],
         label: str,
         state: str,
         attempt: int,
@@ -270,6 +282,7 @@ class DormantStub:
         wake_time: float,
         start_time: float,
         seq: int,
+        tenant_id: str | None,
         tags: tuple[str, ...],
         monitor_by: frozenset[str],
         manage_by: frozenset[str],
@@ -293,6 +306,7 @@ class DormantStub:
         self.wake_time = wake_time
         self.start_time = start_time
         self.seq = seq
+        self.tenant_id = tenant_id
         self.tags = tags
         self.monitor_by = monitor_by
         self.manage_by = manage_by
@@ -555,14 +569,16 @@ class FlowEngine:
         flow_input: dict,
         flow_id: str = "flow",
         creator: str = "anonymous",
-        caller: Caller | None = None,
-        run_as: dict[str, Caller] | None = None,
+        caller: AuthContext | None = None,
+        run_as: dict[str, AuthContext] | None = None,
         label: str = "",
         tags: list[str] | None = None,
         monitor_by: list[str] | None = None,
         manage_by: list[str] | None = None,
         run_id: str | None = None,
         seq: int = 0,
+        tenant_id: str | None = None,
+        defer_start: bool = False,
     ) -> Run:
         # ``seq`` (global submission order) is set at construction — before
         # the run is registered or its first event scheduled — so no journal
@@ -585,6 +601,7 @@ class FlowEngine:
             context_journaled=True,  # run_created carries the full input
             engine=self,
             seq=seq,
+            tenant_id=tenant_id,
         )
         with self._lock:
             self.runs[run.run_id] = run
@@ -599,11 +616,28 @@ class FlowEngine:
                 "label": label,
                 "seq": seq,
                 "t": run.start_time,
+                **({"tenant": tenant_id} if tenant_id is not None else {}),
             }
         )
         run.log_event(run.start_time, "FlowStarted", input=flow_input)
-        self.scheduler.submit(lambda: self._enter_state(run, flow.start_at))
+        if not defer_start:
+            self.scheduler.submit(lambda: self._enter_state(run, flow.start_at))
         return run
+
+    def release_run(self, run: Run) -> None:
+        """Admit a run created with ``defer_start=True``.
+
+        The pool's weighted-fair admission queue (repro.core.admission)
+        creates metered runs deferred — journaled and visible, but with no
+        first transition scheduled — and releases them here in DRR order.
+        A run cancelled while parked in the admission queue is a no-op
+        (``cancel_run`` already completed it).
+        """
+        if run.status != RUN_ACTIVE:
+            return
+        self.scheduler.submit(
+            lambda: self._enter_state(run, run.flow.start_at)
+        )
 
     def get_run(self, run_id: str) -> Run:
         """Fetch a run, rehydrating it if it is dormant.
@@ -833,7 +867,7 @@ class FlowEngine:
             else:  # pragma: no cover
                 raise StateMachineError(f"unhandled state kind {state.kind}")
         except AutomationError as e:
-            self._state_failed(run, state, e.error_name, e.cause)
+            self._state_failed(run, state, e.error_name, e.cause, _error_details(e))
         except Exception as e:
             self._state_failed(run, state, "States.Runtime", repr(e))
 
@@ -915,7 +949,13 @@ class FlowEngine:
                 and run.parent is None
                 and not run.children
                 and run.map_join is None
-                and not run.completion_callbacks
+                # admission slot-release callbacks don't pin a run resident:
+                # _passivate credits the slot back (a dormant run must not
+                # hold admission capacity) and drops them
+                and not any(
+                    not getattr(cb, "admission_slot", False)
+                    for cb in run.completion_callbacks
+                )
                 and not run.cancel_requested
             )
 
@@ -936,6 +976,21 @@ class FlowEngine:
         is one seek + one decode; after a compaction the offset goes stale
         and rehydration falls back to a segment replay.
         """
+        # a parked run stops consuming admission capacity: credit its slot
+        # back now (the callbacks are in-memory closures and would not
+        # survive the page-out anyway); wake-from-dormant is not re-admitted
+        with run.lock:
+            slot_cbs = [
+                cb for cb in run.completion_callbacks
+                if getattr(cb, "admission_slot", False)
+            ]
+            if slot_cbs:
+                run.completion_callbacks = [
+                    cb for cb in run.completion_callbacks
+                    if not getattr(cb, "admission_slot", False)
+                ]
+        for cb in slot_cbs:
+            cb(run)
         now = self.clock.now()
         offset = self._journal_transition(
             run,
@@ -965,6 +1020,7 @@ class FlowEngine:
             wake_time=wake_time,
             start_time=run.start_time,
             seq=run.seq,
+            tenant_id=run.tenant_id,
             # read-only views; empties collapse to shared singletons so a
             # tagless, ACL-less run (the common case) pays nothing here
             tags=tuple(run.tags) if run.tags else (),
@@ -1094,6 +1150,7 @@ class FlowEngine:
             context_journaled=True,
             engine=self,
             seq=stub.seq,
+            tenant_id=stub.tenant_id,
         )
         run.events_dropped = stub.events_dropped
         with self._lock:
@@ -1163,7 +1220,7 @@ class FlowEngine:
                 manage_by=sorted(run.manage_by),
             )
         except AutomationError as e:
-            self._state_failed(run, state, e.error_name, e.cause)
+            self._state_failed(run, state, e.error_name, e.cause, _error_details(e))
             return
         run.log_event(
             self.clock.now(),
@@ -1240,7 +1297,7 @@ class FlowEngine:
         try:
             status = provider.status(action_id, self._caller_for(run, state.run_as))
         except AutomationError as e:
-            self._state_failed(run, state, e.error_name, e.cause)
+            self._state_failed(run, state, e.error_name, e.cause, _error_details(e))
             return
         now = self.clock.now()
         if status.status == ap.ACTIVE:
@@ -1352,6 +1409,7 @@ class FlowEngine:
                 branch_index=i,
                 parent_state=state.name,
                 engine=self,
+                tenant_id=run.tenant_id,
             )
             children.append(child)
         with run.lock:
@@ -1571,6 +1629,7 @@ class FlowEngine:
                     of_join=join,
                     engine=host,
                     foreign_placed=stolen,
+                    tenant_id=run.tenant_id,
                 )
                 run.children.append(child)
                 admitted.append(child)
@@ -1878,7 +1937,7 @@ class FlowEngine:
             self._parallel_child_done(child)
 
     # -- auth ---------------------------------------------------------------------
-    def _caller_for(self, run: Run, run_as: str | None) -> Caller | None:
+    def _caller_for(self, run: Run, run_as: str | None) -> AuthContext | None:
         """Map a state's RunAs role to the identity whose tokens to use.
 
         Default: the run creator (paper §4.2.1 — "By default, actions are run
@@ -1969,6 +2028,7 @@ class FlowEngine:
                 context_journaled=True,
                 engine=self,
                 seq=image.seq,
+                tenant_id=getattr(image, "tenant", None),
             )
             with self._lock:
                 self.runs[run.run_id] = run
@@ -2037,6 +2097,7 @@ class FlowEngine:
             wake_time=wake_time,
             start_time=now,
             seq=image.seq,
+            tenant_id=image.tenant,
             tags=(),
             monitor_by=_NO_ACL,
             manage_by=_NO_ACL,

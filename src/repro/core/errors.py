@@ -75,15 +75,43 @@ class MapItemFailed(AutomationError):
 
 
 class AuthError(AutomationError):
-    """Authentication / authorization failure (missing or bad token/scope)."""
+    """Authentication / authorization failure (missing or bad token/scope).
+
+    ``code`` is a machine-readable discriminator (``token_expired``,
+    ``consent_required``, ``scope_mismatch``, ``missing_token``,
+    ``token_invalid``) surfaced in ``as_result()`` so flows can model
+    re-consent / re-delegation with ``Retry``/``Catch`` (paper §5.3) —
+    matching on the error name selects the family, the code says *why*.
+    """
 
     error_name = "AuthError"
+    default_code = "auth_error"
+
+    def __init__(
+        self,
+        message: str = "",
+        *,
+        code: str | None = None,
+        cause: str | None = None,
+    ):
+        super().__init__(message, cause=cause)
+        self.code = code or self.default_code
+
+    def as_result(self) -> dict:
+        return {"Error": self.error_name, "Cause": self.cause, "Code": self.code}
 
 
 class ConsentRequired(AuthError):
     """The presented token lacks a consent for a required dependent scope."""
 
     error_name = "ConsentRequired"
+    default_code = "consent_required"
+
+
+class QuotaExceeded(AutomationError):
+    """A tenant exceeded its admission quota (rate or concurrency)."""
+
+    error_name = "QuotaExceeded"
 
 
 class NotFound(AutomationError):

@@ -37,7 +37,7 @@ from .actions import (
     ActionStatus,
     _Action,
 )
-from .auth import AuthService, Caller, Identity, principal_matches
+from .auth import AuthContext, AuthService, Identity, principal_matches
 from .clock import Clock, RealClock
 from .engine import (
     RUN_ACTIVE,
@@ -46,7 +46,7 @@ from .engine import (
     PollingPolicy,
     Run,
 )
-from .errors import Forbidden, InputValidationError, NotFound
+from .errors import AutomationError, Forbidden, InputValidationError, NotFound
 from .journal import Journal, TriggerImage
 from .queues import QueueService
 from .shard_pool import EngineShardPool
@@ -96,6 +96,7 @@ class FlowsService:
         snapshot_every: int = 64,
         passivate_after: float | None = None,
         map_steal_bound: int | None = None,
+        admission_window: int | None = None,
     ):
         self.clock = clock or RealClock()
         self.auth = auth
@@ -121,6 +122,7 @@ class FlowsService:
             snapshot_every=snapshot_every,
             passivate_after=passivate_after,
             map_steal_bound=map_steal_bound,
+            admission_window=admission_window,
         )
         self._flows: dict[str, FlowRecord] = {}
         self._lock = threading.RLock()
@@ -138,6 +140,7 @@ class FlowsService:
                 scheduler=self.engine.scheduler,
                 journal_for=self.engine.journal_for,
                 run_waker=self.engine.wake_run,
+                admission=self.engine.admission,
             )
         if auth is not None:
             auth.register_resource_server("flows.repro")
@@ -195,7 +198,7 @@ class FlowsService:
         )
         return record
 
-    def update_flow(self, flow_id: str, caller: Caller | None = None, **updates):
+    def update_flow(self, flow_id: str, caller: AuthContext | None = None, **updates):
         record = self._record(flow_id)
         self._require(
             record,
@@ -214,14 +217,14 @@ class FlowsService:
                 setattr(record, key, updates[key])
         return record
 
-    def remove_flow(self, flow_id: str, caller: Caller | None = None) -> None:
+    def remove_flow(self, flow_id: str, caller: AuthContext | None = None) -> None:
         record = self._record(flow_id)
         self._require(record, caller, [f"user:{record.owner}"], "Owner")
         with self._lock:
             del self._flows[flow_id]
 
     # ------------------------------------------------------------- discovery
-    def get_flow(self, flow_id: str, caller: Caller | None = None) -> FlowRecord:
+    def get_flow(self, flow_id: str, caller: AuthContext | None = None) -> FlowRecord:
         record = self._record(flow_id)
         if self.auth is not None:
             identity = caller.identity if caller else None
@@ -230,7 +233,7 @@ class FlowsService:
         return record
 
     def search_flows(
-        self, q: str = "", caller: Caller | None = None
+        self, q: str = "", caller: AuthContext | None = None
     ) -> list[FlowRecord]:
         identity = caller.identity if caller else None
         out = []
@@ -251,8 +254,8 @@ class FlowsService:
         self,
         flow_id: str,
         flow_input: dict,
-        caller: Caller | None = None,
-        run_as: dict[str, Caller] | None = None,
+        caller: AuthContext | None = None,
+        run_as: dict[str, AuthContext] | None = None,
         label: str = "",
         tags: list[str] | None = None,
         monitor_by: list[str] | None = None,
@@ -277,15 +280,26 @@ class FlowsService:
                     f"caller must present a token for scope {record.scope}"
                 )
             dependent = self.auth.get_dependent_tokens(token)
-            caller = Caller(identity=identity, tokens={**caller.tokens, **dependent})
-            resolved_run_as: dict[str, Caller] = {}
+            # the run's AuthContext: merged wallet + tenant stamp + a handle
+            # back to the AuthService so token_for can re-delegate expired
+            # tokens (a run parked past its tokens' lifetime wakes cleanly)
+            caller = AuthContext(
+                identity=identity,
+                tokens={**caller.tokens, **dependent},
+                tenant=self.auth.tenant_of(identity),
+                auth=self.auth,
+            )
+            resolved_run_as: dict[str, AuthContext] = {}
             for role, role_caller in (run_as or {}).items():
                 role_token = role_caller.token_for(record.scope)
                 role_tokens = dict(role_caller.tokens)
                 if role_token is not None:
                     role_tokens.update(self.auth.get_dependent_tokens(role_token))
-                resolved_run_as[role] = Caller(
-                    identity=role_caller.identity, tokens=role_tokens
+                resolved_run_as[role] = AuthContext(
+                    identity=role_caller.identity,
+                    tokens=role_tokens,
+                    tenant=self.auth.tenant_of(role_caller.identity),
+                    auth=self.auth,
                 )
             run_as = resolved_run_as
         try:
@@ -308,7 +322,7 @@ class FlowsService:
         return run
 
     # ------------------------------------------------------------- run mgmt
-    def run_status(self, run_id: str, caller: Caller | None = None) -> dict:
+    def run_status(self, run_id: str, caller: AuthContext | None = None) -> dict:
         # peek_run answers from a dormant run's stub without rehydrating it —
         # a status poll against a parked run must stay O(1), not page the
         # whole run back in (passivation transparency, ARCHITECTURE.md inv. 9)
@@ -316,19 +330,19 @@ class FlowsService:
         self._require_run(run, caller, run.monitor_by | run.manage_by, "Monitor")
         return run.as_status()
 
-    def run_events(self, run_id: str, caller: Caller | None = None) -> list[dict]:
+    def run_events(self, run_id: str, caller: AuthContext | None = None) -> list[dict]:
         run = self.engine.get_run(run_id)
         self._require_run(run, caller, run.monitor_by | run.manage_by, "Monitor")
         return list(run.events)
 
-    def cancel_run(self, run_id: str, caller: Caller | None = None) -> dict:
+    def cancel_run(self, run_id: str, caller: AuthContext | None = None) -> dict:
         run = self.engine.get_run(run_id)
         self._require_run(run, caller, run.manage_by, "Manager")
         return self.engine.cancel_run(run_id).as_status()
 
     def list_runs(
         self,
-        caller: Caller | None = None,
+        caller: AuthContext | None = None,
         flow_id: str | None = None,
         status: str | None = None,
         tag: str | None = None,
@@ -372,9 +386,46 @@ class FlowsService:
         """Resume unfinished runs of published flows after a restart.
 
         Delegates to per-shard journal replay (each shard recovers only the
-        runs it owns; see :meth:`EngineShardPool.recover`).
+        runs it owns; see :meth:`EngineShardPool.recover`), then
+        **re-delegates** each resumed run's credentials: token wallets do
+        not survive a crash (tokens are never journaled), but the creator's
+        *consent* persists in the AuthService, so the run re-acquires a
+        fresh scoped wallet (paper §5.3 — long-running actions outliving
+        their original tokens).  A run whose consent was revoked while the
+        service was down resumes without a wallet and fails its next
+        provider invocation with the precise coded ``AuthError``.
         """
-        return self.engine.recover(self.flows_by_id(), resume=resume)
+        recovered = self.engine.recover(self.flows_by_id(), resume=resume)
+        if self.auth is not None:
+            for run in recovered:
+                self._redelegate_run(run)
+            for stub in self.engine.dormant_stubs():
+                if stub.caller is None:
+                    self._redelegate_run(stub)
+        return recovered
+
+    def _redelegate_run(self, run) -> None:
+        """Attach a freshly-delegated AuthContext to a recovered run/stub."""
+        if run.caller is not None:
+            return
+        record = self._flows.get(run.flow_id)
+        if record is None or not record.scope:
+            return
+        try:
+            identity = self.auth.get_identity(run.creator)
+            wallet = self.auth.redelegate(run.creator, record.scope)
+        except AutomationError:
+            return  # unknown creator or revoked consent: fail at invocation
+        run.caller = AuthContext(
+            identity=identity,
+            tokens=wallet,
+            tenant=self.auth.tenant_of(identity),
+            auth=self.auth,
+        )
+        if isinstance(run, Run):
+            run.tenant_id = run.tenant_id or (
+                run.caller.tenant.tenant_id if run.caller.tenant else None
+            )
 
     def compact(self) -> list[dict]:
         """Checkpoint-compact every shard's journal segment on demand.
@@ -397,7 +448,7 @@ class FlowsService:
         return self.router
 
     def _trigger_invoker(self, flow_id: str):
-        def invoke(action_input: dict, caller: Caller | None) -> str:
+        def invoke(action_input: dict, caller: AuthContext | None) -> str:
             return self.run_flow(flow_id, action_input, caller=caller).run_id
 
         return invoke
@@ -471,7 +522,7 @@ class FlowsService:
             config, owner=owner, trigger_id=trigger_id
         )
 
-    def enable_trigger(self, trigger_id: str, caller: Caller | None = None) -> None:
+    def enable_trigger(self, trigger_id: str, caller: AuthContext | None = None) -> None:
         self._router().enable(trigger_id, caller=caller)
 
     def disable_trigger(self, trigger_id: str) -> None:
@@ -527,7 +578,7 @@ class FlowsService:
     def _require(
         self,
         record: FlowRecord,
-        caller: Caller | None,
+        caller: AuthContext | None,
         principals: list[str],
         role: str,
     ) -> None:
@@ -540,7 +591,7 @@ class FlowsService:
             )
 
     def _require_run(
-        self, run: Run, caller: Caller | None, extra: set[str], role: str
+        self, run: Run, caller: AuthContext | None, extra: set[str], role: str
     ) -> None:
         if self.auth is None:
             return

@@ -580,7 +580,7 @@ class RunImage:
     #: scalar fields that round-trip through a checkpoint record
     _STATE_FIELDS = (
         "run_id", "flow_id", "input", "creator", "label", "status",
-        "context", "current_state", "attempt", "seq", "error",
+        "context", "current_state", "attempt", "seq", "tenant", "error",
         "action_id", "action_provider", "action_request_id",
         "passivated", "wake_time", "passivate_mode",
     )
@@ -597,6 +597,8 @@ class RunImage:
         self.attempt: int = 0
         #: global submission order (run_created ``seq``; 0 = shard-internal)
         self.seq: int = 0
+        #: tenant stamp from run_created (None = unmetered submission)
+        self.tenant: str | None = None
         #: terminal error document (run_completed / run_cancelled records)
         self.error: Any = None
         # outstanding action (if the run crashed mid-action)
@@ -676,6 +678,7 @@ class RunImage:
             self.creator = rec.get("creator", "anonymous")
             self.label = rec.get("label", "")
             self.seq = rec.get("seq", 0)
+            self.tenant = rec.get("tenant")
             self._set_context(rec.get("input"))
         elif kind == "state_entered":
             self.current_state = rec["state"]

@@ -31,7 +31,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
-from .auth import Caller, principal_matches
+from .auth import AuthContext, principal_matches
 from .clock import Clock, RealClock
 from .errors import Forbidden, NotFound, QueueInvariantError
 from .journal import GroupCommitter
@@ -117,7 +117,7 @@ class QueueService:
         senders: list[str] | None = None,
         receivers: list[str] | None = None,
         visibility_timeout: float = DEFAULT_VISIBILITY_TIMEOUT,
-        caller: Caller | None = None,
+        caller: AuthContext | None = None,
     ) -> Queue:
         creator = caller.identity.username if caller else "anonymous"
         q = Queue(
@@ -133,7 +133,7 @@ class QueueService:
         self._persist()
         return q
 
-    def delete_queue(self, queue_id: str, caller: Caller | None = None) -> None:
+    def delete_queue(self, queue_id: str, caller: AuthContext | None = None) -> None:
         q = self._queue(queue_id)
         self._require_role(q, q.admins, caller, "Administrator")
         with self._lock:
@@ -141,7 +141,7 @@ class QueueService:
         self._persist()
 
     def update_queue(
-        self, queue_id: str, caller: Caller | None = None, **updates
+        self, queue_id: str, caller: AuthContext | None = None, **updates
     ) -> Queue:
         q = self._queue(queue_id)
         self._require_role(q, q.admins, caller, "Administrator")
@@ -163,7 +163,7 @@ class QueueService:
         body: Any,
         attributes: dict | None = None,
         delay: float = 0.0,
-        caller: Caller | None = None,
+        caller: AuthContext | None = None,
     ) -> str:
         q = self._queue(queue_id)
         self._require_role(q, q.senders, caller, "Sender")
@@ -214,7 +214,7 @@ class QueueService:
         queue_id: str,
         max_messages: int = 1,
         visibility_timeout: float | None = None,
-        caller: Caller | None = None,
+        caller: AuthContext | None = None,
     ) -> list[dict]:
         """Receive up to ``max_messages`` in send order.
 
@@ -271,7 +271,7 @@ class QueueService:
             self._persist()
         return out
 
-    def ack(self, queue_id: str, receipt: str, caller: Caller | None = None) -> None:
+    def ack(self, queue_id: str, receipt: str, caller: AuthContext | None = None) -> None:
         q = self._queue(queue_id)
         self._require_role(q, q.receivers, caller, "Receiver")
         now = self.clock.now()
@@ -303,7 +303,7 @@ class QueueService:
         with q.lock:
             return sum(1 for m in q.messages if not m.acked)
 
-    def can_receive(self, queue_id: str, caller: Caller | None) -> bool:
+    def can_receive(self, queue_id: str, caller: AuthContext | None) -> bool:
         """Whether ``caller`` holds the Receiver role (no message consumed).
 
         Shared consumers (the EventRouter) use this to authorize each
@@ -365,7 +365,7 @@ class QueueService:
         return q
 
     def _require_role(
-        self, q: Queue, principals: list[str], caller: Caller | None, role: str
+        self, q: Queue, principals: list[str], caller: AuthContext | None, role: str
     ) -> None:
         if self.auth is None:
             return

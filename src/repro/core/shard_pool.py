@@ -71,6 +71,8 @@ from typing import Callable
 
 from . import actions as ap
 from . import asl
+from .admission import FairAdmission
+from .auth import Tenant
 from .clock import Clock, MonotonicId, RealClock
 from .engine import RUN_ACTIVE, FlowEngine, PollingPolicy, Run, Scheduler
 from .errors import NotFound
@@ -206,6 +208,7 @@ class EngineShardPool:
         snapshot_every: int = 64,
         passivate_after: float | None = None,
         map_steal_bound: int | None = None,
+        admission_window: int | None = None,
     ):
         if num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
@@ -261,6 +264,14 @@ class EngineShardPool:
             engine.shard_id = i
         self.scheduler = PoolScheduler([e.scheduler for e in self.engines], self.clock)
         self._seq = MonotonicId()  # global submission order for list_runs
+        #: weighted-fair admission for metered (tenant-stamped) submissions:
+        #: per-tenant token buckets at the edge + deficit-round-robin release
+        #: into the shards.  ``admission_window`` caps admitted-but-active
+        #: metered runs pool-wide; unmetered submissions (no tenant) bypass
+        #: the queue entirely, so the seed fast path is unchanged.
+        self.admission = FairAdmission(
+            self.clock, self.scheduler, window=admission_window
+        )
         #: per-join cap on *concurrently* off-home Map children: the
         #: least-loaded policy stops deviating from the hash home once a
         #: join has this many stolen children in flight, which bounds the
@@ -364,9 +375,35 @@ class EngineShardPool:
         # seq is handed to the shard so it is set at Run construction —
         # stamping it on the returned (already-live) run raced the run's
         # first transitions, which could observe/journal the default seq
-        return self.shard_of(run_id).start_run(
-            flow, flow_input, run_id=run_id, seq=self._seq.next(), **kwargs
+        seq = self._seq.next()
+        shard = self.shard_of(run_id)
+        tenant: Tenant | None = kwargs.pop("tenant", None)
+        if tenant is None:
+            caller = kwargs.get("caller")
+            tenant = getattr(caller, "tenant", None) if caller is not None else None
+        if tenant is None:
+            # unmetered fast path — identical to the seed submission
+            return shard.start_run(
+                flow, flow_input, run_id=run_id, seq=seq, **kwargs
+            )
+        kwargs.setdefault("tenant_id", tenant.tenant_id)
+        if self.admission.admit_now(tenant):
+            run = shard.start_run(
+                flow, flow_input, run_id=run_id, seq=seq, **kwargs
+            )
+            self.admission.attach(tenant, run)
+            return run
+        # over quota or behind a backlog: create the run journaled-but-idle
+        # and park it in the tenant's admission lane; the DRR pump releases
+        # it into the shard in weighted order
+        run = shard.start_run(
+            flow, flow_input, run_id=run_id, seq=seq, defer_start=True,
+            **kwargs,
         )
+        self.admission.enqueue(
+            tenant, run, lambda r=run, host=shard: host.release_run(r)
+        )
+        return run
 
     def get_run(self, run_id: str) -> Run:
         return self._owner(run_id).get_run(run_id)
@@ -453,6 +490,8 @@ class EngineShardPool:
             with engine._lock:
                 for key, value in engine.stats.items():
                     totals[key] = totals.get(key, 0) + value
+        for key, value in self.admission.stats.items():
+            totals[f"admission_{key}"] = value
         return totals
 
     # ------------------------------------------------------- durability maint

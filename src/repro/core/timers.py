@@ -23,7 +23,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
-from .auth import Caller
+from .auth import AuthContext
 from .clock import Clock, RealClock
 from .engine import Scheduler
 from .errors import NotFound
@@ -58,7 +58,7 @@ class Timer:
 class TimerService:
     def __init__(
         self,
-        invoker: Callable[[dict, Caller | None], str],
+        invoker: Callable[[dict, AuthContext | None], str],
         clock: Clock | None = None,
         scheduler: Scheduler | None = None,
         persist_path: str | None = None,
@@ -78,7 +78,7 @@ class TimerService:
         self.persist_path = persist_path
         self.catch_up_missed = catch_up_missed
         self._timers: dict[str, Timer] = {}
-        self._callers: dict[str, Caller | None] = {}
+        self._callers: dict[str, AuthContext | None] = {}
         self._lock = threading.RLock()
         if persist_path and os.path.exists(persist_path):
             self._load()
@@ -93,7 +93,7 @@ class TimerService:
         count: int | None = None,
         end: float | None = None,
         owner: str = "anonymous",
-        caller: Caller | None = None,
+        caller: AuthContext | None = None,
         queue_id: str | None = None,
     ) -> Timer:
         if queue_id is not None and self.queues is None:
@@ -140,7 +140,7 @@ class TimerService:
             timer.epoch += 1  # orphan the pending fire chain
         self._persist()
 
-    def resume(self, timer_id: str, caller: Caller | None = None) -> None:
+    def resume(self, timer_id: str, caller: AuthContext | None = None) -> None:
         timer = self.get(timer_id)
         with self._lock:
             timer.active = True

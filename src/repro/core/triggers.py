@@ -52,11 +52,12 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping
 
 from . import predicate as predlang
-from .auth import Caller
+from .auth import AuthContext
 from .clock import Clock, RealClock
 from .engine import Scheduler
 from .errors import Forbidden, NotFound, QueueInvariantError
 from .journal import Journal, TriggerImage, replay_triggers
+from .admission import StrideOrder
 from .queues import QueueService
 
 
@@ -64,7 +65,7 @@ from .queues import QueueService
 class TriggerConfig:
     queue_id: str
     predicate: str
-    action_invoker: Callable[[dict, Caller | None], str]
+    action_invoker: Callable[[dict, AuthContext | None], str]
     """Invoked with (action_input, caller) -> run/action id."""
     transform: dict[str, str] = field(default_factory=dict)
     """Output parameter name -> expression over message properties."""
@@ -88,7 +89,7 @@ class Trigger:
     config: TriggerConfig
     owner: str = "anonymous"
     enabled: bool = False
-    caller: Caller | None = None
+    caller: AuthContext | None = None
     interval: float = 1.0
     stats: dict = field(
         default_factory=lambda: {
@@ -97,6 +98,7 @@ class Trigger:
             "matched": 0,
             "discarded": 0,
             "invocations": 0,
+            "rate_deferred": 0,
             "errors": 0,
         }
     )
@@ -150,8 +152,15 @@ class EventRouter:
         journal: Journal | None = None,
         journal_for: Callable[[str], Journal] | None = None,
         run_waker: Callable[[str], bool] | None = None,
+        admission=None,
     ):
         self.queues = queues
+        #: shared FairAdmission (the pool's): per-tenant rate metering for
+        #: trigger firings; None = unmetered dispatch (seed behavior)
+        self.admission = admission
+        #: weighted fair ordering of a sweep's trigger invocations across
+        #: tenants (stride scheduling; see repro.core.admission)
+        self._stride = StrideOrder()
         #: ``run_waker(run_id) -> bool`` rehydrates a dormant run (e.g.
         #: ``EngineShardPool.wake_run``); required by wake_run_key triggers
         self.run_waker = run_waker
@@ -251,7 +260,7 @@ class EventRouter:
     def enable(
         self,
         trigger_id: str,
-        caller: Caller | None = None,
+        caller: AuthContext | None = None,
         _journal: bool = True,
     ) -> None:
         """Enable the trigger with the enabling user's delegated tokens.
@@ -300,7 +309,7 @@ class EventRouter:
     # ------------------------------------------------------------- recovery
     def recover(
         self,
-        invoker_for: Callable[[TriggerImage], Callable[[dict, Caller | None], str]],
+        invoker_for: Callable[[TriggerImage], Callable[[dict, AuthContext | None], str]],
         journals: list[Journal] | None = None,
         enable_filter: Callable[[TriggerImage], bool] | None = None,
     ) -> list[Trigger]:
@@ -471,7 +480,10 @@ class EventRouter:
             )
         if not authorized:
             return
-        enabled = authorized
+        # weighted-fair dispatch order (not FIFO): triggers are served in
+        # stride order across their callers' tenants, so one tenant's
+        # trigger storm cannot keep every sweep's front slots
+        enabled = self._stride.order(authorized, _tenant_key_weight)
         for trig in enabled:
             trig.stats["polls"] += 1
         batch = max(t.config.batch for t in enabled)
@@ -526,7 +538,7 @@ class EventRouter:
         sub: _QueueSub,
         enabled: list[Trigger],
         message: dict,
-        receive_caller: Caller | None,
+        receive_caller: AuthContext | None,
     ) -> bool:
         """Evaluate every enabled predicate against one message (one pass).
 
@@ -545,12 +557,19 @@ class EventRouter:
                 all_resolved = False
             else:
                 resolved.add(trig.trigger_id)
+                tenant_id = (
+                    trig.caller.tenant_id
+                    if trig.caller is not None
+                    and getattr(trig.caller, "tenant", None) is not None
+                    else None
+                )
                 record = {
                     "type": "trigger_resolved",
                     "trigger_id": trig.trigger_id,
                     "message_id": message_id,
                     "disposition": disposition,
                     "t": self.clock.now(),
+                    **({"tenant": tenant_id} if tenant_id is not None else {}),
                 }
                 if disposition != "discarded":
                     # stats snapshots ride the rare records (replay is
@@ -641,6 +660,13 @@ class EventRouter:
             trig.stats["invocations"] += 1
             self._note(trig, {"woke_run": run_id, "input": action_input})
             return "invoked"
+        tenant = getattr(trig.caller, "tenant", None) if trig.caller else None
+        if self.admission is not None and not self.admission.try_rate(tenant):
+            # tenant over its admission rate: leave the message unacked so
+            # the visibility timeout redelivers it once the bucket refills —
+            # rate limiting with retry, not message loss
+            trig.stats["rate_deferred"] += 1
+            return "failed"
         try:
             run_id = trig.config.action_invoker(action_input, trig.caller)
         except Exception as e:
@@ -652,6 +678,14 @@ class EventRouter:
         trig.stats["invocations"] += 1
         self._note(trig, {"run_id": run_id, "input": action_input})
         return "invoked"
+
+
+def _tenant_key_weight(trig: Trigger) -> tuple[str | None, float]:
+    """Stride key/weight for a trigger: its caller's tenant (None = shared)."""
+    tenant = getattr(trig.caller, "tenant", None) if trig.caller else None
+    if tenant is None:
+        return None, 1.0
+    return tenant.tenant_id, tenant.weight
 
 
 class TriggerService:
@@ -688,7 +722,7 @@ class TriggerService:
     def get(self, trigger_id: str) -> Trigger:
         return self.router.get(trigger_id)
 
-    def enable(self, trigger_id: str, caller: Caller | None = None) -> None:
+    def enable(self, trigger_id: str, caller: AuthContext | None = None) -> None:
         self.router.enable(trigger_id, caller=caller)
 
     def disable(self, trigger_id: str) -> None:
@@ -696,6 +730,6 @@ class TriggerService:
 
     def recover(
         self,
-        invoker_for: Callable[[TriggerImage], Callable[[dict, Caller | None], str]],
+        invoker_for: Callable[[TriggerImage], Callable[[dict, AuthContext | None], str]],
     ) -> list[Trigger]:
         return self.router.recover(invoker_for)

@@ -1,6 +1,7 @@
 import pytest
 
-from repro.core.auth import AuthService, Caller, principal_matches
+from repro.core.auth import AuthContext, AuthService, Caller, principal_matches
+from repro.core.clock import VirtualClock
 from repro.core.errors import AuthError, ConsentRequired, NotFound
 
 
@@ -100,3 +101,175 @@ def test_caller_wallet():
     caller = Caller(identity=ident, tokens={"urn:a": "tok-1"})
     assert caller.token_for("urn:a") == "tok-1"
     assert caller.token_for("urn:b") is None
+
+
+# ---------------------------------------------------------------- expiry
+
+
+def timed_auth(default_lifetime=None):
+    clock = VirtualClock()
+    a = AuthService(clock=clock, default_token_lifetime_s=default_lifetime)
+    a.create_identity("alice")
+    a.register_resource_server("ap.transfer")
+    a.register_scope("ap.transfer", "urn:s:transfer")
+    a.register_resource_server("ap.compute")
+    a.register_scope("ap.compute", "urn:s:compute")
+    a.register_resource_server("flow.f1")
+    a.register_scope("flow.f1", "urn:s:flow.f1", ["urn:s:transfer", "urn:s:compute"])
+    a.grant_consent("alice", "urn:s:flow.f1")
+    return a, clock
+
+
+def test_token_expiry_clock_driven():
+    auth, clock = timed_auth()
+    token = auth.issue_token("alice", "urn:s:transfer", lifetime_s=60.0)
+    info = auth.introspect(token)
+    assert info["active"] and info["exp"] == 60.0
+    assert auth.token_live(token)
+    clock.advance(59.9)
+    assert auth.token_live(token)
+    clock.advance(0.2)
+    # expired: introspects inactive but keeps exp (distinguishable from
+    # revocation), and require() raises the precise coded error
+    info = auth.introspect(token)
+    assert info["active"] is False and info["exp"] == 60.0
+    assert not auth.token_live(token)
+    with pytest.raises(AuthError) as exc:
+        auth.require(token, "urn:s:transfer")
+    assert exc.value.code == "token_expired"
+    assert exc.value.as_result()["Code"] == "token_expired"
+
+
+def test_default_token_lifetime():
+    auth, clock = timed_auth(default_lifetime=30.0)
+    token = auth.issue_token("alice", "urn:s:transfer")
+    assert auth.introspect(token)["exp"] == 30.0
+    forever = auth.issue_token("alice", "urn:s:transfer", lifetime_s=10_000.0)
+    clock.advance(31.0)
+    assert not auth.token_live(token)
+    assert auth.token_live(forever)
+
+
+def test_dependent_tokens_inherit_parent_expiry():
+    auth, clock = timed_auth()
+    parent = auth.issue_token("alice", "urn:s:flow.f1", lifetime_s=100.0)
+    deps = auth.get_dependent_tokens(parent)
+    for t in deps.values():
+        assert auth.introspect(t)["exp"] == 100.0
+    capped = auth.get_dependent_tokens(parent, lifetime_s=10.0)
+    for t in capped.values():
+        assert auth.introspect(t)["exp"] == 10.0
+    clock.advance(101.0)
+    with pytest.raises(AuthError) as exc:
+        auth.get_dependent_tokens(parent)
+    assert exc.value.code == "token_expired"
+
+
+def test_error_codes():
+    auth, clock = timed_auth()
+    with pytest.raises(AuthError) as exc:
+        auth.require(None, "urn:s:transfer")
+    assert exc.value.code == "missing_token"
+    with pytest.raises(AuthError) as exc:
+        auth.require("tok-bogus", "urn:s:transfer")
+    assert exc.value.code == "token_invalid"
+    token = auth.issue_token("alice", "urn:s:transfer")
+    with pytest.raises(AuthError) as exc:
+        auth.require(token, "urn:s:compute")
+    assert exc.value.code == "scope_mismatch"
+    auth.revoke_consent("alice", "urn:s:transfer")
+    with pytest.raises(ConsentRequired) as exc:
+        auth.require(token, "urn:s:transfer")
+    assert exc.value.code == "consent_required"
+    assert exc.value.as_result()["Error"] == "ConsentRequired"
+
+
+def test_revoke_consent_revokes_dependency_closure():
+    """Regression: revoking the root scope must take down the whole
+    delegation chain — dependent-scope consents AND issued tokens."""
+    auth, clock = timed_auth()
+    parent = auth.issue_token("alice", "urn:s:flow.f1")
+    deps = auth.get_dependent_tokens(parent)
+    auth.revoke_consent("alice", "urn:s:flow.f1")
+    for scope in ("urn:s:flow.f1", "urn:s:transfer", "urn:s:compute"):
+        assert not auth.has_consent("alice", scope)
+    for scope, t in {**deps, "urn:s:flow.f1": parent}.items():
+        assert auth.introspect(t)["active"] is False
+        with pytest.raises(ConsentRequired):
+            auth.require(t, scope)
+    with pytest.raises(ConsentRequired):
+        auth.issue_token("alice", "urn:s:transfer")
+
+
+def test_redelegate_wallet_spans_closure():
+    auth, clock = timed_auth(default_lifetime=60.0)
+    wallet = auth.redelegate("alice", "urn:s:flow.f1")
+    assert set(wallet) == {"urn:s:flow.f1", "urn:s:transfer", "urn:s:compute"}
+    for scope, t in wallet.items():
+        assert auth.require(t, scope).username == "alice"
+    auth.revoke_consent("alice", "urn:s:flow.f1")
+    with pytest.raises(ConsentRequired):
+        auth.redelegate("alice", "urn:s:flow.f1")
+
+
+def test_auth_context_refreshes_expired_token():
+    """A parked run's wallet transparently re-delegates on wake: token_for
+    swaps an expired token for a fresh one against the standing consent."""
+    auth, clock = timed_auth()
+    stale = auth.issue_token("alice", "urn:s:transfer", lifetime_s=60.0)
+    ctx = AuthContext(
+        identity=auth.get_identity("alice"),
+        tokens={"urn:s:transfer": stale},
+        auth=auth,
+    )
+    assert ctx.token_for("urn:s:transfer") == stale  # live: no refresh
+    clock.advance(3600.0)  # parked for an hour; token long expired
+    fresh = ctx.token_for("urn:s:transfer")
+    assert fresh != stale and auth.token_live(fresh)
+    assert ctx.tokens["urn:s:transfer"] == fresh  # wallet updated in place
+    # refresh=False and no-auth-handle contexts return the stale token so
+    # the downstream require() raises the precise coded error
+    clock.advance(3600.0)
+    assert ctx.token_for("urn:s:transfer", refresh=False) == fresh
+    bare = AuthContext(identity=ctx.identity, tokens={"urn:s:transfer": fresh})
+    assert bare.token_for("urn:s:transfer") == fresh
+    # consent revoked: refresh impossible, stale token surfaces the error
+    auth.revoke_consent("alice", "urn:s:flow.f1")
+    assert ctx.token_for("urn:s:transfer") == fresh
+    with pytest.raises(AuthError):
+        auth.require(ctx.token_for("urn:s:transfer"), "urn:s:transfer")
+
+
+# ---------------------------------------------------------------- tenants
+
+
+def test_tenant_registry():
+    auth = AuthService()
+    auth.create_identity("alice")
+    auth.create_identity("bob")
+    acme = auth.register_tenant("acme", weight=4.0, rate_per_s=10.0,
+                                max_concurrency=8)
+    auth.register_tenant("beta")
+    auth.assign_tenant("alice", "acme")
+    assert auth.tenant_of(auth.get_identity("alice")) is acme
+    assert auth.get_tenant("acme").weight == 4.0
+    assert auth.tenant_of(auth.get_identity("bob")) is None  # unmetered
+    assert auth.tenant_of(None) is None
+    with pytest.raises(NotFound):
+        auth.assign_tenant("alice", "nope")
+    with pytest.raises(NotFound):
+        auth.get_tenant("nope")
+    with pytest.raises(ValueError):
+        auth.register_tenant("bad", weight=0.0)
+
+
+def test_auth_context_tenant_stamp():
+    auth = AuthService()
+    ident = auth.create_identity("alice")
+    tenant = auth.register_tenant("acme", weight=2.0)
+    auth.assign_tenant("alice", "acme")
+    ctx = AuthContext(identity=ident, tenant=auth.tenant_of(ident))
+    assert ctx.tenant is tenant and ctx.tenant_id == "acme"
+    assert AuthContext(identity=ident).tenant_id is None
+    # Caller stays a constructible alias for the same type
+    assert Caller is AuthContext

@@ -1,0 +1,280 @@
+"""Delegation chains across space-time: every provider invocation is
+authorized with a live scoped token (ARCHITECTURE invariant 11).
+
+The paper's hard case (§5.3): a flow outlives its tokens — parked for weeks
+(passivation) or interrupted by a crash — yet every action invocation it
+makes after waking must present a live, scoped, consented token.  These
+suites pin the whole chain:
+
+* the rejection matrix — ``run``/``status``/``cancel``/``release`` each
+  refuse expired, revoked, mis-scoped, and missing tokens with the precise
+  machine-readable ``code``;
+* wake-after-expiry — a passivated run's wallet transparently re-delegates
+  against the standing consent (and fails with ``token_expired`` when it
+  can't);
+* crash recovery on a 4-shard pool — recovered runs re-present freshly
+  re-delegated tokens (tokens are never journaled; consents persist);
+* ASL ``Catch`` on the coded auth errors.
+"""
+
+import pytest
+
+from repro.core import asl
+from repro.core.actions import ActionRegistry
+from repro.core.auth import AuthContext, AuthService
+from repro.core.clock import VirtualClock
+from repro.core.engine import RUN_FAILED, RUN_SUCCEEDED
+from repro.core.errors import AuthError, ConsentRequired
+from repro.core.flows_service import FlowsService
+from repro.core.providers import EchoProvider
+from repro.core.shard_pool import EngineShardPool
+
+HORIZON = 1_000_000.0
+
+WAIT_ECHO_FLOW = {
+    "StartAt": "W",
+    "States": {
+        "W": {"Type": "Wait", "Seconds": 5000, "Next": "E"},
+        "E": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string.$": "$.msg"},
+              "ResultPath": "$.echoed", "End": True},
+    },
+}
+
+
+def make_auth(lifetime=None):
+    clock = VirtualClock()
+    auth = AuthService(clock=clock, default_token_lifetime_s=lifetime)
+    auth.create_identity("alice")
+    return auth, clock
+
+
+# ---------------------------------------------------------- rejection matrix
+
+
+def test_every_provider_path_rejects_expired_and_unconsented_tokens():
+    """The acceptance matrix: run/status/cancel/release each enforce expiry
+    and consent at invocation time, with machine-readable codes."""
+    auth, clock = make_auth()
+    echo = EchoProvider(clock=clock, auth=auth)
+    auth.grant_consent("alice", echo.scope)
+    ident = auth.get_identity("alice")
+    # a second scope to provoke scope_mismatch
+    auth.register_resource_server("ap.other")
+    auth.register_scope("ap.other", "urn:s:other")
+    auth.grant_consent("alice", "urn:s:other")
+
+    def ctx(token):
+        # no auth handle: refresh is impossible, so the stale token reaches
+        # require() and the provider surfaces the precise code
+        return AuthContext(identity=ident, tokens={echo.scope: token})
+
+    good = auth.issue_token("alice", echo.scope, lifetime_s=60.0)
+    done = echo.run({"echo_string": "hi"}, caller=ctx(good))
+    assert done.status == "SUCCEEDED"
+    paths = {
+        "run": lambda c: echo.run({"echo_string": "x"}, caller=c),
+        "status": lambda c: echo.status(done.action_id, caller=c),
+        "cancel": lambda c: echo.cancel(done.action_id, caller=c),
+        "release": lambda c: echo.release(done.action_id, caller=c),
+    }
+
+    clock.advance(61.0)  # the wallet token expires
+    for name, call in paths.items():
+        with pytest.raises(AuthError) as exc:
+            call(ctx(good))
+        assert exc.value.code == "token_expired", name
+
+    mismatched = auth.issue_token("alice", "urn:s:other")
+    for name, call in paths.items():
+        with pytest.raises(AuthError) as exc:
+            call(ctx(mismatched))
+        assert exc.value.code == "scope_mismatch", name
+
+    for name, call in paths.items():
+        with pytest.raises(AuthError) as exc:
+            call(None)
+        assert exc.value.code == "missing_token", name
+
+    revoked = auth.issue_token("alice", echo.scope)
+    auth.revoke_consent("alice", echo.scope)
+    for name, call in paths.items():
+        with pytest.raises(ConsentRequired) as exc:
+            call(ctx(revoked))
+        assert exc.value.code == "consent_required", name
+
+
+# ------------------------------------------------------ wake after expiry
+
+
+def make_pool(path, clock, auth, shards=4):
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock, auth=auth))
+    return registry, EngineShardPool(
+        registry, num_shards=shards, clock=clock, journal_path=path,
+        passivate_after=0.0,
+    )
+
+
+def test_passivated_run_redelegates_expired_wallet_on_wake(tmp_path):
+    """Parked past its tokens' lifetime, a run wakes, re-delegates against
+    the standing consent, and completes (post-wake acceptance path)."""
+    auth, clock = make_auth()
+    registry, pool = make_pool(str(tmp_path / "seg"), clock, auth)
+    echo = registry.lookup("ap://echo")
+    auth.grant_consent("alice", echo.scope)
+    stale = auth.issue_token("alice", echo.scope, lifetime_s=100.0)
+    caller = AuthContext(identity=auth.get_identity("alice"),
+                         tokens={echo.scope: stale}, auth=auth)
+    run = pool.start_run(asl.parse(WAIT_ECHO_FLOW), {"msg": "wake"},
+                         caller=caller)
+    pool.scheduler.drain(until=10.0)
+    assert pool.dormant_stubs()  # parked at the Wait, paged out
+    pool.scheduler.drain(until=HORIZON)  # wakes at t=5000; token died at 100
+    woken = pool.get_run(run.run_id)
+    assert woken.status == RUN_SUCCEEDED
+    assert woken.context["echoed"]["details"]["echo_string"] == "wake"
+    fresh = caller.tokens[echo.scope]
+    assert fresh != stale and auth.token_live(fresh)
+
+
+def test_wake_without_refresh_fails_with_token_expired(tmp_path):
+    """No auth handle = no re-delegation: the woken run's invocation is
+    rejected with the precise code (post-wake rejection path)."""
+    auth, clock = make_auth()
+    registry, pool = make_pool(str(tmp_path / "seg"), clock, auth)
+    echo = registry.lookup("ap://echo")
+    auth.grant_consent("alice", echo.scope)
+    stale = auth.issue_token("alice", echo.scope, lifetime_s=100.0)
+    caller = AuthContext(identity=auth.get_identity("alice"),
+                         tokens={echo.scope: stale})  # auth=None
+    run = pool.start_run(asl.parse(WAIT_ECHO_FLOW), {"msg": "x"},
+                         caller=caller)
+    pool.scheduler.drain(until=HORIZON)
+    failed = pool.get_run(run.run_id)
+    assert failed.status == RUN_FAILED
+    assert failed.error["Error"] == "AuthError"
+    assert failed.error["Details"] == {"code": "token_expired"}
+
+
+# ------------------------------------------------------- crash + recovery
+
+
+def make_flows(path, clock, auth, shards=4):
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock, auth=auth))
+    return FlowsService(registry, clock=clock, auth=auth, shards=shards,
+                        journal_path=path)
+
+
+def publish(svc):
+    return svc.publish_flow(WAIT_ECHO_FLOW, owner="root",
+                            starters=["all_authenticated_users"],
+                            flow_id="chain-flow")
+
+
+def test_recovered_runs_represent_redelegated_tokens(tmp_path):
+    """Crash mid-flight on a 4-shard pool: tokens are never journaled, but
+    consents persist — every recovered run re-presents a live wallet and
+    completes (post-recovery acceptance path)."""
+    path = str(tmp_path / "seg")
+    auth, clock = make_auth(lifetime=30.0)
+    svc = make_flows(path, clock, auth)
+    record = publish(svc)
+    auth.grant_consent("alice", record.scope)
+    token = auth.issue_token("alice", record.scope)
+    caller = AuthContext(identity=auth.get_identity("alice"),
+                         tokens={record.scope: token}, auth=auth)
+    runs = [svc.run_flow(record.flow_id, {"msg": f"m{i}"}, caller=caller)
+            for i in range(8)]
+    originals = {r.run_id: dict(r.caller.tokens) for r in runs}
+    svc.engine.scheduler.drain(until=10.0)  # all parked mid-flight
+    svc.engine.shutdown()  # crash
+
+    clock.advance(10_000.0)  # down for hours: every original token expired
+    svc2 = make_flows(path, clock, auth)
+    record2 = publish(svc2)
+    recovered = svc2.recover_runs()
+    assert len(recovered) == 8
+    closure = set(auth.dependency_closure(record2.scope))
+    for run in recovered:
+        assert run.caller is not None
+        assert set(run.caller.tokens) == closure
+        for scope, tok in run.caller.tokens.items():
+            assert auth.token_live(tok), scope
+            assert tok not in originals[run.run_id].values()
+    svc2.engine.scheduler.drain(until=HORIZON)
+    for run in recovered:
+        assert run.status == RUN_SUCCEEDED
+    svc2.engine.shutdown()
+
+
+def test_consent_revoked_while_down_fails_recovered_run(tmp_path):
+    """Re-delegation at recovery honors revocation: the run resumes without
+    a wallet and its next invocation is rejected (post-recovery rejection)."""
+    path = str(tmp_path / "seg")
+    auth, clock = make_auth(lifetime=30.0)
+    svc = make_flows(path, clock, auth)
+    record = publish(svc)
+    auth.grant_consent("alice", record.scope)
+    token = auth.issue_token("alice", record.scope)
+    caller = AuthContext(identity=auth.get_identity("alice"),
+                         tokens={record.scope: token}, auth=auth)
+    run = svc.run_flow(record.flow_id, {"msg": "m"}, caller=caller)
+    svc.engine.scheduler.drain(until=10.0)
+    svc.engine.shutdown()
+
+    auth.revoke_consent("alice", record.scope)  # closure-wide, while down
+    svc2 = make_flows(path, clock, auth)
+    publish(svc2)
+    (recovered,) = svc2.recover_runs()
+    assert recovered.caller is None  # re-delegation refused
+    svc2.engine.scheduler.drain(until=HORIZON)
+    assert recovered.status == RUN_FAILED
+    assert recovered.error["Error"] == "AuthError"
+    assert recovered.error["Details"] == {"code": "missing_token"}
+    svc2.engine.shutdown()
+
+
+# ------------------------------------------------------------- ASL surface
+
+
+def test_consent_required_is_catchable_from_asl():
+    """Flows model re-consent with Catch: the coded auth error lands in the
+    error doc (Error name + Details.code) and routes to the handler state."""
+    clock = VirtualClock()
+    auth = AuthService(clock=clock)
+    auth.create_identity("alice")
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock, auth=auth))
+    svc = FlowsService(registry, clock=clock, auth=auth)
+    record = svc.publish_flow(
+        {
+            "StartAt": "E",
+            "States": {
+                "E": {"Type": "Action", "ActionUrl": "ap://echo",
+                      "Parameters": {"echo_string.$": "$.msg"},
+                      "Catch": [{"ErrorEquals": ["ConsentRequired"],
+                                 "ResultPath": "$.auth_error",
+                                 "Next": "Reconsent"}],
+                      "End": True},
+                "Reconsent": {"Type": "Pass",
+                              "Result": {"action": "ask the user again"},
+                              "ResultPath": "$.plan", "End": True},
+            },
+        },
+        owner="root", starters=["all_authenticated_users"],
+    )
+    auth.grant_consent("alice", record.scope)
+    token = auth.issue_token("alice", record.scope)
+    caller = AuthContext(identity=auth.get_identity("alice"),
+                         tokens={record.scope: token}, auth=auth)
+    run = svc.run_flow(record.flow_id, {"msg": "hi"}, caller=caller)
+    # the user withdraws consent after the run starts but before the action
+    # fires: the provider rejects the (revoked) wallet, the Catch routes
+    auth.revoke_consent("alice", record.scope)
+    svc.engine.scheduler.drain(until=HORIZON)
+    assert run.status == RUN_SUCCEEDED
+    assert run.context["auth_error"]["Error"] == "ConsentRequired"
+    assert run.context["auth_error"]["Details"] == {"code": "consent_required"}
+    assert run.context["plan"]["action"] == "ask the user again"

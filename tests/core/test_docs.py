@@ -16,6 +16,7 @@ from repro.core.providers import EchoProvider, SleepProvider
 DOCS = os.path.join(os.path.dirname(__file__), "..", "..", "docs")
 DOC_FILES = [
     "ARCHITECTURE.md", "providers.md", "asl.md", "events.md", "durability.md",
+    "auth.md",
 ]
 
 # dotted references like `repro.core.engine.FlowEngine` (module or symbol)
@@ -84,6 +85,12 @@ def test_events_examples_execute():
     """Every ```python block in events.md runs (self-contained examples)."""
     # queues, router, recovery, flows, timers
     _exec_python_blocks("events.md", min_blocks=5)
+
+
+def test_auth_examples_execute():
+    """Every ```python block in auth.md runs (consents, expiry/refresh,
+    delegation closure, coded errors from ASL, tenant admission)."""
+    _exec_python_blocks("auth.md", min_blocks=5)
 
 
 def test_durability_examples_execute():

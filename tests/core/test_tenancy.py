@@ -1,0 +1,396 @@
+"""Multi-tenant fairness: token buckets, weighted DRR admission, stride
+ordering, and tenant stamping through the pool and the event fabric.
+
+The paper's hosted services multiplex many users onto shared capacity; these
+suites pin the admission layer's semantics (repro.core.admission) — per-tenant
+rate/concurrency quotas, weighted deficit-round-robin release order, and the
+unmetered fast path that keeps no-tenant submissions identical to the seed.
+"""
+
+import pytest
+
+from repro.core.actions import ActionRegistry
+from repro.core.admission import FairAdmission, StrideOrder, TokenBucket
+from repro.core.auth import AuthService, Caller, Tenant
+from repro.core.clock import VirtualClock
+from repro.core.engine import RUN_SUCCEEDED
+from repro.core.flows_service import FlowsService
+from repro.core.providers import EchoProvider, SleepProvider
+from repro.core.queues import QueueService
+
+HORIZON = 1_000_000.0
+
+
+# ------------------------------------------------------------- token bucket
+
+
+def test_token_bucket_burst_and_refill():
+    bucket = TokenBucket(rate_per_s=2.0, burst=4.0)
+    assert all(bucket.try_take(0.0) for _ in range(4))  # burst capacity
+    assert not bucket.try_take(0.0)
+    assert bucket.next_available(0.0) == pytest.approx(0.5)  # 1 token / 2 per s
+    assert bucket.try_take(0.5)
+    assert not bucket.try_take(0.5)
+    # refill caps at burst, never beyond
+    assert bucket.next_available(100.0) == 100.0
+    assert all(bucket.try_take(100.0) for _ in range(4))
+    assert not bucket.try_take(100.0)
+    with pytest.raises(ValueError):
+        TokenBucket(rate_per_s=0.0)
+
+
+# ------------------------------------------------------------- stride order
+
+
+def test_stride_order_prioritizes_light_usage():
+    stride = StrideOrder()
+    # sweep 1: tenant a fires 6 triggers, b fires 1 (equal weight, tie on
+    # pass: submission order wins, so a's batch leads the first sweep)
+    out = stride.order([("a", 1.0)] * 6 + [("b", 1.0)], lambda kv: kv)
+    assert out[0][0] == "a"
+    # sweep 2: a consumed 6x the service, so b now outranks it
+    out = stride.order([("a", 1.0), ("b", 1.0)], lambda kv: kv)
+    assert out[0][0] == "b"
+
+
+def test_stride_order_weight_discounts_usage():
+    stride = StrideOrder()
+    # a (weight 3) fires 3x, b (weight 1) fires 2x: a's pass advances 1/3
+    # per firing so it sits at 1.0 vs b's 2.0 — still first next sweep
+    stride.order([("a", 3.0)] * 3 + [("b", 1.0)] * 2, lambda kv: kv)
+    out = stride.order([("a", 3.0), ("b", 1.0)], lambda kv: kv)
+    assert out[0][0] == "a"
+
+
+def test_stride_order_unmetered_and_ties():
+    stride = StrideOrder()
+    # None keys share one unmetered lane at weight 1; ties keep input order
+    out = stride.order(["x", "y"], lambda item: (None, 1.0))
+    assert out == ["x", "y"]
+    out = stride.order(["x", "y"], lambda item: (None, 0.0))  # weight floor
+    assert out == ["x", "y"]
+
+
+# ------------------------------------------------------------ fair admission
+
+
+class FakeScheduler:
+    """Deferred inline scheduler: submit() queues, run_all() drains."""
+
+    def __init__(self, clock):
+        self.clock = clock
+        self.queue = []
+        self.timers = []
+
+    def submit(self, fn):
+        self.queue.append(fn)
+
+    def call_at(self, t, fn):
+        self.timers.append((t, fn))
+
+    def run_all(self):
+        while self.queue:
+            self.queue.pop(0)()
+
+    def fire_due(self):
+        now = self.clock.now()
+        due = [fn for t, fn in self.timers if t <= now]
+        self.timers = [(t, fn) for t, fn in self.timers if t > now]
+        for fn in due:
+            fn()
+        self.run_all()
+
+
+class FakeRun:
+    def __init__(self):
+        self.status = "ACTIVE"
+        self.completion_callbacks = []
+
+
+def finish(run):
+    run.status = "SUCCEEDED"
+    for cb in run.completion_callbacks:
+        cb(run)
+
+
+def make_admission(window=None):
+    clock = VirtualClock()
+    sched = FakeScheduler(clock)
+    return FairAdmission(clock, sched, window=window), sched, clock
+
+
+def test_admit_now_gates():
+    adm, sched, clock = make_admission(window=2)
+    heavy = Tenant("heavy", max_concurrency=1)
+    other = Tenant("other")
+    run = FakeRun()
+    assert adm.admit_now(heavy)
+    adm.attach(heavy, run)
+    assert not adm.admit_now(heavy)  # tenant at max_concurrency
+    assert adm.admit_now(other)
+    assert not adm.admit_now(other)  # global window full
+    finish(run)  # frees both the tenant slot and a window slot
+    assert adm.admit_now(heavy)
+    assert adm.stats["admitted_direct"] == 3
+
+
+def test_admit_now_respects_rate():
+    adm, sched, clock = make_admission()
+    paced = Tenant("paced", rate_per_s=1.0, burst=2.0)
+    assert adm.admit_now(paced) and adm.admit_now(paced)
+    assert not adm.admit_now(paced)  # burst spent
+    clock.advance(1.0)
+    assert adm.admit_now(paced)
+
+
+def test_drr_release_order_is_weight_proportional():
+    """With the window full, backlogged tenants drain 3:1 by weight."""
+    adm, sched, clock = make_admission(window=4)
+    filler = Tenant("filler")
+    heavy = Tenant("heavy", weight=3.0)
+    light = Tenant("light", weight=1.0)
+    fillers = [FakeRun() for _ in range(4)]
+    for run in fillers:
+        assert adm.admit_now(filler)
+        adm.attach(filler, run)
+    order = []
+    for _ in range(9):
+        adm.enqueue(heavy, FakeRun(), lambda: order.append("heavy"))
+    for _ in range(3):
+        adm.enqueue(light, FakeRun(), lambda: order.append("light"))
+    sched.run_all()
+    assert order == []  # window full: everything parked
+    for run in fillers:
+        finish(run)
+    sched.run_all()
+    # each 4-slot batch serves 3 heavy + 1 light (deficit = weight per visit)
+    assert order[:4] == ["heavy", "heavy", "heavy", "light"]
+    assert adm.backlog("heavy") == 6 and adm.backlog("light") == 2
+    assert adm.stats["queued"] == 12 and adm.stats["released"] == 4
+
+
+def test_drr_serves_sub_unit_weights():
+    """A weight-0.25 lane accumulates deficit over visits; never starved."""
+    adm, sched, clock = make_admission(window=None)
+    slow = Tenant("slow", weight=0.25, max_concurrency=None)
+    order = []
+    # no window: enqueue only lands in the lane via a full-window admit path,
+    # so force the queue directly through enqueue + pump
+    for _ in range(2):
+        adm.enqueue(slow, FakeRun(), lambda: order.append("slow"))
+    sched.run_all()
+    assert order == ["slow", "slow"]  # deficit reaches 1.0 within 4 visits
+
+
+def test_rate_limited_lane_uses_timed_pump():
+    adm, sched, clock = make_admission(window=None)
+    paced = Tenant("paced", rate_per_s=1.0, burst=1.0)
+    order = []
+    for i in range(3):
+        adm.enqueue(paced, FakeRun(), lambda i=i: order.append(i))
+    sched.run_all()
+    assert order == [0]  # burst of 1; rest wait on refill
+    assert sched.timers  # timed pump scheduled at the bucket's next refill
+    clock.advance(1.0)
+    sched.fire_due()
+    assert order == [0, 1]
+    clock.advance(1.0)
+    sched.fire_due()
+    assert order == [0, 1, 2]
+
+
+def test_cancelled_queued_runs_are_skipped():
+    adm, sched, clock = make_admission(window=1)
+    tenant = Tenant("t")
+    blocker = FakeRun()
+    assert adm.admit_now(tenant)
+    adm.attach(tenant, blocker)
+    cancelled, live = FakeRun(), FakeRun()
+    order = []
+    adm.enqueue(tenant, cancelled, lambda: order.append("cancelled"))
+    adm.enqueue(tenant, live, lambda: order.append("live"))
+    cancelled.status = "CANCELLED"
+    finish(blocker)
+    sched.run_all()
+    assert order == ["live"]
+    assert adm.stats["cancelled_queued"] == 1
+
+
+def test_try_rate_meters_inline_work():
+    adm, sched, clock = make_admission()
+    paced = Tenant("paced", rate_per_s=1.0, burst=1.0)
+    assert adm.try_rate(None)  # unmetered callers always pass
+    assert adm.try_rate(Tenant("free"))  # no rate quota: always pass
+    assert adm.try_rate(paced)
+    assert not adm.try_rate(paced)
+    assert adm.stats["rate_deferred"] == 1
+    clock.advance(1.0)
+    assert adm.try_rate(paced)
+
+
+# ----------------------------------------------------- pool / service wiring
+
+
+ECHO_FLOW = {
+    "StartAt": "E",
+    "States": {
+        "E": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string.$": "$.msg"},
+              "ResultPath": "$.echoed", "End": True}
+    },
+}
+
+
+def make_service(shards=2, admission_window=None, queues=None):
+    clock = VirtualClock()
+    auth = AuthService(clock=clock)
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock, auth=auth))
+    registry.register(SleepProvider(clock=clock, auth=auth))
+    svc = FlowsService(registry, clock=clock, auth=auth, shards=shards,
+                       admission_window=admission_window, queues=queues)
+    return svc, auth, clock
+
+
+def caller_for(auth, username, record, tenant_id=None):
+    auth.create_identity(username)
+    if tenant_id is not None:
+        auth.assign_tenant(username, tenant_id)
+    auth.grant_consent(username, record.scope)
+    token = auth.issue_token(username, record.scope)
+    return Caller(identity=auth.get_identity(username),
+                  tokens={record.scope: token})
+
+
+def test_runs_are_stamped_with_their_tenant():
+    svc, auth, clock = make_service()
+    auth.register_tenant("acme", weight=2.0)
+    record = svc.publish_flow(ECHO_FLOW, owner="root",
+                              starters=["all_authenticated_users"])
+    caller = caller_for(auth, "alice", record, tenant_id="acme")
+    run = svc.run_flow(record.flow_id, {"msg": "hi"}, caller=caller)
+    assert run.tenant_id == "acme"
+    assert run.caller.tenant_id == "acme"
+    svc.engine.scheduler.drain(until=HORIZON)
+    assert run.status == RUN_SUCCEEDED
+    assert svc.engine.stats["admission_admitted_direct"] == 1
+
+
+def test_unmetered_submissions_bypass_admission():
+    svc, auth, clock = make_service(admission_window=1)
+    record = svc.publish_flow(ECHO_FLOW, owner="root",
+                              starters=["all_authenticated_users"])
+    caller = caller_for(auth, "bob", record)  # no tenant
+    runs = [svc.run_flow(record.flow_id, {"msg": str(i)}, caller=caller)
+            for i in range(5)]
+    svc.engine.scheduler.drain(until=HORIZON)
+    assert all(r.status == RUN_SUCCEEDED for r in runs)
+    assert all(r.tenant_id is None for r in runs)
+    stats = svc.engine.stats
+    assert stats["admission_admitted_direct"] == 0  # seed fast path
+    assert stats["admission_queued"] == 0
+
+
+def test_window_defers_and_completes_metered_runs():
+    svc, auth, clock = make_service(shards=4, admission_window=2)
+    auth.register_tenant("acme")
+    record = svc.publish_flow(ECHO_FLOW, owner="root",
+                              starters=["all_authenticated_users"])
+    caller = caller_for(auth, "alice", record, tenant_id="acme")
+    runs = [svc.run_flow(record.flow_id, {"msg": str(i)}, caller=caller)
+            for i in range(8)]
+    stats = svc.engine.stats
+    assert stats["admission_admitted_direct"] == 2
+    assert stats["admission_queued"] == 6
+    svc.engine.scheduler.drain(until=HORIZON)
+    assert all(r.status == RUN_SUCCEEDED for r in runs)
+    assert svc.engine.stats["admission_released"] == 6
+
+
+def test_tenant_max_concurrency_quota():
+    svc, auth, clock = make_service(admission_window=None)
+    auth.register_tenant("capped", max_concurrency=2)
+    record = svc.publish_flow(ECHO_FLOW, owner="root",
+                              starters=["all_authenticated_users"])
+    caller = caller_for(auth, "alice", record, tenant_id="capped")
+    runs = [svc.run_flow(record.flow_id, {"msg": str(i)}, caller=caller)
+            for i in range(6)]
+    stats = svc.engine.stats
+    assert stats["admission_admitted_direct"] == 2  # quota caps direct entry
+    assert stats["admission_queued"] == 4
+    svc.engine.scheduler.drain(until=HORIZON)
+    assert all(r.status == RUN_SUCCEEDED for r in runs)
+
+
+def test_tenant_survives_passivation_and_restart(tmp_path):
+    """tenant_id rides the journal: present on the dormant stub and on the
+    run recovered by a fresh pool over the same segments."""
+    path = str(tmp_path / "seg")
+    sleep_flow = {
+        "StartAt": "Z",
+        "States": {"Z": {"Type": "Wait", "Seconds": 5000, "End": True}},
+    }
+    clock = VirtualClock()
+    auth = AuthService(clock=clock)
+    auth.register_tenant("acme")
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock, auth=auth))
+    svc = FlowsService(registry, clock=clock, auth=auth, shards=2,
+                       journal_path=path, passivate_after=0.0)
+    record = svc.publish_flow(sleep_flow, owner="root",
+                              starters=["all_authenticated_users"],
+                              flow_id="flow-tenant")
+    caller = caller_for(auth, "alice", record, tenant_id="acme")
+    run = svc.run_flow(record.flow_id, {}, caller=caller)
+    assert run.tenant_id == "acme"
+    svc.engine.scheduler.drain(until=10.0)  # parks at the Wait state
+    stubs = svc.engine.dormant_stubs()
+    assert stubs and stubs[0].tenant_id == "acme"
+    svc.engine.shutdown()
+
+    registry2 = ActionRegistry()
+    registry2.register(EchoProvider(clock=clock, auth=auth))
+    svc2 = FlowsService(registry2, clock=clock, auth=auth, shards=2,
+                        journal_path=path)
+    svc2.publish_flow(sleep_flow, owner="root",
+                      starters=["all_authenticated_users"],
+                      flow_id="flow-tenant")
+    recovered = svc2.recover_runs()
+    assert len(recovered) == 1
+    assert recovered[0].tenant_id == "acme"
+    svc2.engine.scheduler.drain(until=HORIZON)
+    assert recovered[0].status == RUN_SUCCEEDED
+    svc2.engine.shutdown()
+
+
+# --------------------------------------------------------------- event fabric
+
+
+def test_trigger_firings_are_rate_limited_per_tenant():
+    """An over-rate tenant's trigger leaves messages unacked; the visibility
+    timeout redelivers them at the tenant's sustainable rate."""
+    clock = VirtualClock()
+    auth = AuthService(clock=clock)
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock, auth=auth))
+    queues = QueueService(clock=clock)
+    svc = FlowsService(registry, clock=clock, auth=auth, shards=1,
+                       queues=queues)
+    auth.register_tenant("paced", rate_per_s=0.5, burst=1.0)
+    record = svc.publish_flow(ECHO_FLOW, owner="root",
+                              starters=["all_authenticated_users"])
+    caller = caller_for(auth, "alice", record, tenant_id="paced")
+    caller.tenant = auth.tenant_of(caller.identity)
+    q = queues.create_queue("events", visibility_timeout=1.0)
+    trig = svc.create_trigger(q.queue_id, "True", record.flow_id,
+                              transform={"msg": "msg"}, owner="alice")
+    svc.enable_trigger(trig.trigger_id, caller=caller)
+    for i in range(3):
+        queues.send(q.queue_id, {"msg": f"m{i}"})
+    svc.engine.scheduler.drain(until=60.0)
+    trig = svc.router.get(trig.trigger_id)
+    assert trig.stats["invocations"] == 3  # all delivered eventually...
+    assert trig.stats["rate_deferred"] >= 1  # ...but not in one burst
+    runs = [r for r in svc.engine.runs.values()]
+    assert len(runs) == 3
+    assert all(r.tenant_id == "paced" for r in runs)
