@@ -11,8 +11,8 @@ export REPRO_PYTHONPATH := src:.
 ARGS ?=
 
 .PHONY: check bench bench-quick bench-nightly shards fanout recovery \
-        overhead map dormant noisy durability xfail-guard regression-gate \
-        baseline
+        overhead map dormant noisy mttr durability chaos xfail-guard \
+        regression-gate baseline
 
 check:
 	./scripts/check.sh $(ARGS)
@@ -27,7 +27,7 @@ bench-quick:
 # benchmarks/results/, gated against the checked-in baseline
 bench-nightly:
 	PYTHONPATH=$(REPRO_PYTHONPATH) python -m benchmarks.run --quick \
-	  --only shards,fanout,recovery,overhead,map,dormant,noisy $(ARGS)
+	  --only shards,fanout,recovery,overhead,map,dormant,noisy,mttr $(ARGS)
 
 shards:
 	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/shard_scaling.py $(ARGS)
@@ -54,6 +54,11 @@ dormant:
 noisy:
 	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/fig_noisy_neighbor.py $(ARGS)
 
+# MTTR: hang 1 of 4 shards mid-storm; heartbeat detection + fencing +
+# online re-homing must finish with survivors keeping >= 0.6x throughput
+mttr:
+	PYTHONPATH=$(REPRO_PYTHONPATH) python benchmarks/fig_mttr.py $(ARGS)
+
 # crash-point / fault-injection durability suite (CI runs it as its own
 # job with REPRO_TEST_SHARDS=4 and a dedicated timeout)
 durability:
@@ -64,7 +69,14 @@ durability:
 	  tests/core/test_queue_properties.py tests/core/test_event_router.py \
 	  tests/core/test_passivation.py tests/core/test_timer_wheel.py \
 	  tests/core/test_auth.py tests/core/test_tenancy.py \
-	  tests/core/test_auth_chain.py
+	  tests/core/test_auth_chain.py tests/core/test_chaos.py \
+	  tests/core/test_failover.py
+
+# chaos + failover: the seeded fault-injection plane and the live shard
+# failover differential suite, runnable on their own for fast iteration
+chaos:
+	PYTHONPATH=$(REPRO_PYTHONPATH) python -m pytest -q \
+	  tests/core/test_chaos.py tests/core/test_failover.py
 
 xfail-guard:
 	./scripts/check_xfails.sh

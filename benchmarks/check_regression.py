@@ -178,6 +178,22 @@ def collect_metrics() -> dict[str, dict]:
             "value": row["b_p99_ratio"], "higher_is_better": False,
             "tolerance": 0.5,
         }
+
+    # shard failover: gate mean-time-to-repair and survivor isolation.
+    # mttr_s is heartbeat-detection dominated (~timeout + takeover), so a
+    # generous tolerance absorbs sweep-phase jitter; the survivor ratio
+    # divides two short-window rates and the benchmark already hard-asserts
+    # its 0.6 floor.
+    mttr = _load("fig_mttr") or []
+    for row in mttr:
+        metrics["fig_mttr/mttr_s"] = {
+            "value": row["mttr_s"], "higher_is_better": False,
+            "tolerance": 0.75,
+        }
+        metrics["fig_mttr/survivor_throughput_ratio"] = {
+            "value": row["survivor_throughput_ratio"],
+            "higher_is_better": True, "tolerance": 0.3,
+        }
     return metrics
 
 

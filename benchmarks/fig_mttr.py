@@ -1,0 +1,202 @@
+"""MTTR: kill 1 of 4 shards mid-storm; measure repair time and survivor flow.
+
+The paper's reliability pillar demands that automation keep running through
+partial platform failure.  This benchmark hard-hangs one shard of a
+real-clock 4-shard ``EngineShardPool`` in the middle of a submission storm
+and measures the full repair arc driven by the
+:class:`~repro.core.supervisor.ShardSupervisor`:
+
+* **mttr_s** — wall time from the hang to the end of the takeover
+  (heartbeat detection + fencing + segment replay + re-homing every live
+  run onto the survivors).  Detection dominates: the sweep must see
+  ``heartbeat_timeout`` of silence before it declares the shard dead.
+* **survivor_throughput_ratio** — completions/s on the surviving shards
+  during the takeover window divided by the whole pool's completions/s
+  just before the kill.  Survivors never stop: the acceptance criterion
+  (asserted here, gated in ``check_regression.py``) is ratio >= 0.6.
+
+Correctness is asserted alongside the numbers: every run — the victim's
+included — reaches SUCCEEDED exactly once pool-wide, and the fenced
+zombie's late journal append provably raises ``JournalFenced``.
+
+    PYTHONPATH=src:. python benchmarks/fig_mttr.py [--quick]
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+from benchmarks.common import SLEEP_FLOW, csv_line, save_results
+from repro.core import asl
+from repro.core.actions import ActionRegistry
+from repro.core.clock import RealClock
+from repro.core.engine import PollingPolicy
+from repro.core.journal import JournalFenced
+from repro.core.providers import SleepProvider
+from repro.core.shard_pool import EngineShardPool
+from repro.core.supervisor import ShardSupervisor
+
+SHARDS = 4
+VICTIM = 1
+SLEEP_S = 0.01       # per-run action duration
+PACE_S = 0.002       # gap between submissions
+JOURNAL_RTT_S = 0.002
+HEARTBEAT_INTERVAL_S = 0.05
+HEARTBEAT_TIMEOUT_S = 0.3
+MIN_SURVIVOR_RATIO = 0.6  # acceptance: survivors keep >= 0.6x pre-kill rate
+
+N_FULL = 2000
+N_QUICK = 600
+
+
+def make_pool(workdir: str) -> tuple[EngineShardPool, ShardSupervisor]:
+    clock = RealClock()
+    registry = ActionRegistry()
+    sleep = SleepProvider(clock=clock)
+    registry.register(sleep)
+    pool = EngineShardPool(
+        registry,
+        num_shards=SHARDS,
+        clock=clock,
+        journal_path=os.path.join(workdir, "mttr.jsonl"),
+        journal_latency_s=JOURNAL_RTT_S,
+        group_commit=True,
+        polling=PollingPolicy(use_callbacks=True),
+    )
+    sleep.scheduler = pool.scheduler
+    supervisor = ShardSupervisor(
+        pool,
+        heartbeat_interval=HEARTBEAT_INTERVAL_S,
+        heartbeat_timeout=HEARTBEAT_TIMEOUT_S,
+    )
+    supervisor.start()
+    return pool, supervisor
+
+
+def completions_per_s(runs, t_from: float, t_to: float) -> float:
+    if t_to <= t_from:
+        return 0.0
+    n = sum(1 for r in runs if r.completion_time is not None
+            and t_from < r.completion_time <= t_to)
+    return n / (t_to - t_from)
+
+
+def bench(n_runs: int) -> dict:
+    workdir = tempfile.mkdtemp(prefix="fig_mttr_")
+    pool, supervisor = make_pool(workdir)
+    flow = asl.parse(SLEEP_FLOW)
+    clock = pool.clock
+    runs = []
+    try:
+        t0 = time.perf_counter()
+        # first half of the storm: steady submissions on a healthy pool
+        for _ in range(n_runs // 2):
+            runs.append(pool.start_run(flow, {"seconds": SLEEP_S}))
+            time.sleep(PACE_S)
+
+        # mid-storm: hard-hang the victim.  Nothing reports the failure —
+        # the heartbeat sweep has to notice the silence.
+        zombie_journal = pool.engines[VICTIM].journal
+        t_kill = clock.now()
+        supervisor.hang_shard(VICTIM)
+
+        # the storm keeps coming while the supervisor detects and repairs
+        for _ in range(n_runs - n_runs // 2):
+            runs.append(pool.start_run(flow, {"seconds": SLEEP_S}))
+            time.sleep(PACE_S)
+
+        for run in runs:
+            pool.wait(run.run_id, timeout=120.0)
+        elapsed = time.perf_counter() - t0
+
+        assert supervisor.stats["failovers"] == 1, supervisor.stats
+        event = supervisor.timeline[0]
+        assert event["shard"] == VICTIM
+        mttr_s = event["completed_at"] - t_kill
+        detect_s = event["detected_at"] - t_kill
+
+        # every run terminal, exactly once pool-wide (journaled request_id
+        # dedup holds across the re-homing)
+        assert all(r.status == "SUCCEEDED" for r in runs)
+        succeeded = sum(e.stats["runs_succeeded"] for e in pool.engines)
+        assert succeeded == len(runs), (succeeded, len(runs))
+
+        # the fenced zombie's late append is rejected, not interleaved
+        try:
+            zombie_journal.append({"type": "noise", "run_id": "z", "t": 0.0})
+        except JournalFenced:
+            fencing_ok = True
+        else:
+            fencing_ok = False
+        assert fencing_ok, "zombie append was accepted after fencing"
+
+        # survivor throughput through the takeover window, normalized to
+        # the whole pool's rate over an equal window just before the kill
+        window = max(mttr_s, 1e-3)
+        pre_rate = completions_per_s(runs, t_kill - window, t_kill)
+        during_rate = completions_per_s(runs, t_kill, t_kill + window)
+        ratio = during_rate / pre_rate if pre_rate > 0 else 0.0
+        assert ratio >= MIN_SURVIVOR_RATIO, (
+            f"survivors degraded: {during_rate:.0f}/s during takeover vs "
+            f"{pre_rate:.0f}/s pre-kill (ratio {ratio:.2f} < "
+            f"{MIN_SURVIVOR_RATIO})"
+        )
+        rehomed = (event["runs_rehomed"] + event["stubs_reparked"]
+                   + event["torn_completed"])
+        stats = dict(pool.stats)
+    finally:
+        supervisor.stop()
+        pool.shutdown()
+        shutil.rmtree(workdir, ignore_errors=True)
+    return {
+        "n_runs": len(runs),
+        "elapsed_s": elapsed,
+        "mttr_s": mttr_s,
+        "detect_s": detect_s,
+        "takeover_s": event["takeover_s"],
+        "runs_rehomed": rehomed,
+        "pre_kill_runs_per_s": pre_rate,
+        "during_takeover_runs_per_s": during_rate,
+        "survivor_throughput_ratio": ratio,
+        "fencing_ok": fencing_ok,
+        "runs_succeeded": stats["runs_succeeded"],
+    }
+
+
+def run(quick: bool = False) -> list[dict]:
+    row = bench(N_QUICK if quick else N_FULL)
+    row["phase"] = "kill-1-of-4"
+    return [row]
+
+
+def main(quick: bool = False):
+    rows = run(quick=quick)
+    save_results("fig_mttr", rows)
+    lines = []
+    for row in rows:
+        derived = (
+            f"mttr_s={row['mttr_s']:.3f};"
+            f"detect_s={row['detect_s']:.3f};"
+            f"takeover_s={row['takeover_s']:.3f};"
+            f"rehomed={row['runs_rehomed']};"
+            f"survivor_ratio={row['survivor_throughput_ratio']:.2f};"
+            f"fencing_ok={row['fencing_ok']}"
+        )
+        lines.append(csv_line(
+            f"fig_mttr/{row['phase']}/shards={SHARDS}",
+            row["mttr_s"] * 1e6,
+            derived,
+        ))
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true")
+    args = parser.parse_args()
+    print("\n".join(main(quick=args.quick)))

@@ -14,8 +14,8 @@ import time
 import traceback
 
 BENCHES = ["fig7", "fig8", "fig9", "table1", "fig10", "shards", "fanout",
-           "recovery", "overhead", "map", "dormant", "noisy", "soak",
-           "roofline"]
+           "recovery", "overhead", "map", "dormant", "noisy", "mttr",
+           "soak", "roofline"]
 
 
 def _run_roofline() -> list[str]:
@@ -84,6 +84,9 @@ def main() -> int:
     if "noisy" in selected:
         from benchmarks import fig_noisy_neighbor
         runners["noisy"] = fig_noisy_neighbor.main
+    if "mttr" in selected:
+        from benchmarks import fig_mttr
+        runners["mttr"] = fig_mttr.main
     if "soak" in selected:
         from benchmarks import soak
         runners["soak"] = soak.main

@@ -125,6 +125,11 @@ class ActionProvider:
         #: optional scheduler (attached by the engine): lets time-based
         #: actions fire completion callbacks instead of being poll-discovered
         self.scheduler = None
+        #: optional ChaosPlane (armed by ChaosPlane.arm_providers): injects
+        #: seeded invoke/status faults and latency spikes keyed on the
+        #: caller's request_id, after the dedup check — a failover
+        #: re-dispatch of an already-run request never re-draws
+        self.chaos = None
         self._lock = threading.RLock()
         self._actions: dict[str, _Action] = {}
         self._requests: dict[str, str] = {}  # request_id -> action_id
@@ -172,6 +177,12 @@ class ActionProvider:
         with self._lock:
             if request_id is not None and request_id in self._requests:
                 return self._status_of(self._actions[self._requests[request_id]])
+        if self.chaos is not None and request_id is not None:
+            # after the dedup check: a retry carries a NEW request_id (the
+            # attempt number is part of it) and draws fresh, while an
+            # idempotent re-dispatch of an existing request resolved above
+            # without consulting chaos at all
+            self.chaos.invoke("provider.run", self.url, request_id)
         body = jsonschema.validate(dict(body), self.input_schema)
         action = _Action(
             action_id=f"{self.scope_suffix}-" + secrets.token_hex(8),
@@ -200,6 +211,16 @@ class ActionProvider:
         self._authorize_view(action, caller)
         with self._lock:
             self.stats["poll"] += 1
+        if self.chaos is not None and action.request_id is not None:
+            # keyed on (request, poll time): each poll of an action is an
+            # independent draw, but the same poll at the same virtual time
+            # draws identically across shard counts
+            self.chaos.invoke(
+                "provider.status",
+                self.url,
+                action.request_id,
+                f"{self.clock.now():.9f}",
+            )
         if action.status == ACTIVE:
             self._poll(action)
         return self._status_of(action)

@@ -192,6 +192,17 @@ class FairAdmission:
         """Bind a directly-admitted run's completion to its admission slot."""
         run.completion_callbacks.append(self._slot_callback(tenant.tenant_id))
 
+    def readopt(self, tenant_id: str, run: "Run") -> None:
+        """Re-attach a slot callback WITHOUT consuming a new slot.
+
+        Failover path: a metered run rebuilt from a fenced shard's journal
+        image lost its in-memory callbacks, but the slot its original
+        admission took is still counted in this lane — re-binding (rather
+        than re-admitting) keeps the window accounting exact, and the slot
+        credits back when the re-homed run completes.
+        """
+        run.completion_callbacks.append(self._slot_callback(tenant_id))
+
     def enqueue(self, tenant: Tenant, run: "Run", release: Callable[[], None]) -> None:
         """Park a deferred run; the DRR pump will ``release()`` it in turn."""
         with self._lock:

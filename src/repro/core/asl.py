@@ -187,6 +187,14 @@ class RetryRule:
     interval_seconds: float = 1.0
     max_attempts: int = 3
     backoff_rate: float = 2.0
+    #: ceiling on the exponential backoff curve (None = uncapped)
+    max_delay_seconds: float | None = None
+    #: "NONE" (exact exponential delays) or "FULL" (each delay is drawn
+    #: uniformly from [0, capped delay) — decorrelates the retry storms a
+    #: mass provider outage would otherwise synchronize).  The draw is a
+    #: deterministic hash of (run, state, attempt), so virtual-clock
+    #: schedules replay identically.
+    jitter_strategy: str = "NONE"
 
 
 @dataclass
@@ -379,12 +387,35 @@ def _parse_retry(doc: dict, where: str) -> list[RetryRule]:
     for i, r in enumerate(doc.get("Retry", []) or []):
         if not isinstance(r, dict):
             raise FlowValidationError(f"{where}/Retry[{i}]: must be an object")
+        max_delay = r.get("MaxDelaySeconds")
+        if max_delay is not None:
+            if isinstance(max_delay, bool) or not isinstance(
+                max_delay, (int, float)
+            ):
+                raise FlowValidationError(
+                    f"{where}/Retry[{i}]: MaxDelaySeconds must be a "
+                    f"number, got {max_delay!r}"
+                )
+            max_delay = float(max_delay)
+            if max_delay <= 0:
+                raise FlowValidationError(
+                    f"{where}/Retry[{i}]: MaxDelaySeconds must be > 0, "
+                    f"got {max_delay}"
+                )
+        jitter = r.get("JitterStrategy", "NONE")
+        if jitter not in ("NONE", "FULL"):
+            raise FlowValidationError(
+                f"{where}/Retry[{i}]: JitterStrategy must be "
+                f"'NONE' or 'FULL', got {jitter!r}"
+            )
         rules.append(
             RetryRule(
                 error_equals=list(r.get("ErrorEquals", ["States.ALL"])),
                 interval_seconds=float(r.get("IntervalSeconds", 1.0)),
                 max_attempts=int(r.get("MaxAttempts", 3)),
                 backoff_rate=float(r.get("BackoffRate", 2.0)),
+                max_delay_seconds=max_delay,
+                jitter_strategy=jitter,
             )
         )
     return rules

@@ -45,7 +45,16 @@ from .errors import (
     StateMachineError,
     error_matches,
 )
-from .journal import Journal, RunImage, replay_segment, terminal_map_children
+from .chaos import hash_uniform
+from .journal import (
+    Journal,
+    JournalCrashed,
+    JournalFenced,
+    RunImage,
+    SimulatedCrash,
+    replay_segment,
+    terminal_map_children,
+)
 from .timer_wheel import TimerHandle, TimerWheel
 
 RUN_ACTIVE = "ACTIVE"
@@ -169,6 +178,12 @@ class Run:
     #: True when the least-loaded policy placed this Map child off its
     #: hash-home shard (releases the join's ``stolen_live`` budget slot)
     foreign_placed: bool = False
+
+    #: True while the run is journaled-but-idle in an admission lane
+    #: (``defer_start=True``); cleared when the DRR pump releases it.  A
+    #: failover must transplant such a run without scheduling its first
+    #: transition — the admission queue still owns that.
+    deferred: bool = False
 
     # global submission order, stamped by EngineShardPool (0 = shard-internal)
     seq: int = 0
@@ -545,12 +560,25 @@ class FlowEngine:
         t.start()
         self._threads.append(t)
 
-    @staticmethod
-    def _guarded(fn: Callable[[], None]) -> None:
+    def _guarded(self, fn: Callable[[], None]) -> None:
         try:
             fn()
+        except (SimulatedCrash, JournalCrashed, JournalFenced) as exc:
+            # the crash channel: a durability-layer failure escaped a worker
+            # — report it to the shard supervisor (when one is attached) so
+            # the pool can fence this shard and re-home its runs online
+            self._report_crash(exc)
         except Exception:  # never kill the pool on a bug; runs fail instead
             traceback.print_exc()
+
+    def _report_crash(self, exc: BaseException) -> None:
+        pool = self.pool
+        supervisor = pool.supervisor if pool is not None else None
+        if supervisor is not None and supervisor.on_worker_crash(
+            self.shard_id, exc
+        ):
+            return
+        traceback.print_exc()
 
     def shutdown(self) -> None:
         self.scheduler.stop()
@@ -620,7 +648,9 @@ class FlowEngine:
             }
         )
         run.log_event(run.start_time, "FlowStarted", input=flow_input)
-        if not defer_start:
+        if defer_start:
+            run.deferred = True
+        else:
             self.scheduler.submit(lambda: self._enter_state(run, flow.start_at))
         return run
 
@@ -635,6 +665,7 @@ class FlowEngine:
         """
         if run.status != RUN_ACTIVE:
             return
+        run.deferred = False
         self.scheduler.submit(
             lambda: self._enter_state(run, run.flow.start_at)
         )
@@ -866,6 +897,12 @@ class FlowEngine:
                 self._exec_map(run, state)
             else:  # pragma: no cover
                 raise StateMachineError(f"unhandled state kind {state.kind}")
+        except (SimulatedCrash, JournalCrashed, JournalFenced):
+            # durability-layer crash signals are NOT run failures: they mean
+            # this whole shard is dying (or already fenced).  Swallowing
+            # them into _state_failed would corrupt a run another shard now
+            # owns — let them propagate to the crash channel instead.
+            raise
         except AutomationError as e:
             self._state_failed(run, state, e.error_name, e.cause, _error_details(e))
         except Exception as e:
@@ -1710,6 +1747,12 @@ class FlowEngine:
                 return
             if child in parent.children:
                 parent.children.remove(child)
+            else:
+                # already accounted: a completion can be delivered twice
+                # when failover re-synthesizes routing events that raced
+                # the shard death — the removal above is the idempotence
+                # gate, so a duplicate must not double-decrement the join
+                return
             join.live -= 1
             join.done += 1
             # a child cancelled while the join is healthy (someone cancelled
@@ -1810,6 +1853,20 @@ class FlowEngine:
                     delay = rule.interval_seconds * (
                         rule.backoff_rate ** run.attempt
                     )
+                    if rule.max_delay_seconds is not None:
+                        # cap the exponential curve: a long outage must not
+                        # push retries out to astronomic delays
+                        delay = min(delay, rule.max_delay_seconds)
+                    if rule.jitter_strategy == "FULL":
+                        # full decorrelated jitter (uniform over [0, delay)):
+                        # a mass provider outage fails thousands of runs at
+                        # the same instant, and without jitter their retries
+                        # re-converge as a synchronized storm.  The draw is
+                        # a pure hash of (run, state, attempt) so virtual-
+                        # clock schedules stay deterministic and replayable.
+                        delay *= hash_uniform(
+                            0, "retry", run.run_id, state.name, run.attempt
+                        )
                     with self._lock:
                         self.stats["retries"] += 1
                     attempt = run.attempt + 1

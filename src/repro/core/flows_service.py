@@ -382,6 +382,34 @@ class FlowsService:
         with self._lock:
             return {fid: rec.flow for fid, rec in self._flows.items()}
 
+    def enable_supervision(
+        self,
+        heartbeat_interval: float = 0.5,
+        heartbeat_timeout: float = 2.0,
+        chaos=None,
+    ):
+        """Attach and start a :class:`~repro.core.supervisor.ShardSupervisor`.
+
+        Live partial-failure tolerance for the service's shard pool: shard
+        heartbeats, journal fencing on failure, online re-homing of the
+        dead shard's runs onto the survivors.  ``chaos`` optionally wires a
+        :class:`~repro.core.chaos.ChaosPlane` whose kill plans the
+        supervisor executes.  The supervisor resolves flow definitions
+        through this service, so runs rebuilt from a fenced shard's journal
+        can resume flows published at any time.  Returns the supervisor.
+        """
+        from .supervisor import ShardSupervisor
+
+        supervisor = ShardSupervisor(
+            self.engine,
+            heartbeat_interval=heartbeat_interval,
+            heartbeat_timeout=heartbeat_timeout,
+            chaos=chaos,
+            flows=self.flows_by_id,
+        )
+        supervisor.start()
+        return supervisor
+
     def recover_runs(self, resume: bool = True) -> list[Run]:
         """Resume unfinished runs of published flows after a restart.
 

@@ -72,6 +72,18 @@ class JournalCrashed(RuntimeError):
     """The journal's committer died; no further appends are possible."""
 
 
+class JournalFenced(RuntimeError):
+    """The journal was fenced by a failover takeover; appends are rejected.
+
+    When the :class:`~repro.core.supervisor.ShardSupervisor` declares a
+    shard dead it calls :meth:`Journal.fence` on the victim's segment
+    *before* re-homing its runs.  A zombie worker thread that wakes up
+    later and tries to append sees this error instead of silently writing
+    into a segment whose runs now live (and journal) elsewhere — the
+    classic split-brain append is structurally impossible.
+    """
+
+
 class GroupCommitter:
     """Leader-based group commit: coalesce concurrent durability requests.
 
@@ -251,6 +263,12 @@ class Journal:
         self._fh: io.TextIOBase | None = None
         #: checkpoint generation of the current segment (0 = never compacted)
         self.generation = 0
+        #: fencing epoch of the current segment (0 = never failed over);
+        #: bumped by each failover takeover via :meth:`bump_epoch`
+        self.epoch = 0
+        #: non-None once :meth:`fence` was called; every later append raises
+        #: :class:`JournalFenced` with this reason
+        self.fenced: str | None = None
         #: records appended since the last checkpoint (compaction trigger)
         self._since_checkpoint = 0
         #: one auto-compaction at a time (concurrent appenders all cross the
@@ -295,8 +313,11 @@ class Journal:
                         break  # torn/corrupt: nothing past here is trusted
                     if rec.get("type") == "checkpoint":
                         self.generation = rec.get("generation", self.generation)
+                        self.epoch = rec.get("epoch", self.epoch)
                         self._since_checkpoint = 0
                     else:
+                        if rec.get("type") == "epoch":
+                            self.epoch = rec.get("epoch", self.epoch)
                         self._since_checkpoint += 1
                 good_end += len(raw)
         if good_end < os.path.getsize(path):
@@ -315,6 +336,8 @@ class Journal:
         entry: rehydrating a dormant run seeks straight to its
         ``run_passivated`` record instead of replaying the segment.
         """
+        if self.fenced is not None:
+            raise JournalFenced(self.fenced)
         line = json.dumps(record, separators=(",", ":"), default=_jsonable)
         try:
             if self.group_commit:
@@ -362,6 +385,11 @@ class Journal:
 
     def _flush_batch(self, lines: list[str]) -> None:
         """One durable commit for a whole batch (the group-commit payoff)."""
+        if self.fenced is not None:
+            # a batch that raced the fence (submitted before, flushed after)
+            # dies here; the committer poisons itself, which is exactly
+            # right — the segment belongs to the takeover journal now
+            raise JournalFenced(self.fenced)
         self._hook("pre-write", lines)
         if self.latency_s:
             time.sleep(self.latency_s)  # one simulated RTT per batch
@@ -442,6 +470,75 @@ class Journal:
                 self._fh.close()
                 self._fh = None
 
+    # --------------------------------------------------------------- fencing
+    def fence(self, reason: str = "journal fenced by failover") -> None:
+        """Reject every subsequent append with :class:`JournalFenced`.
+
+        Idempotent.  Called on a dead shard's segment before its runs are
+        re-homed, so a zombie worker's late appends are provably rejected
+        instead of corrupting state the takeover journal now owns.
+        """
+        with self._lock:
+            if self.fenced is None:
+                self.fenced = reason
+
+    def bump_epoch(self, reason: str = "") -> int:
+        """Journal a new fencing epoch for this segment and return it.
+
+        The epoch record is ordinary (durable, replayed, checkpointed), so
+        any reader of the segment — online takeover or cold recovery — sees
+        the highest epoch and can reject state stamped with an older one.
+        """
+        new_epoch = self.epoch + 1
+        self.append(
+            {"type": "epoch", "epoch": new_epoch, "reason": reason,
+             "t": time.time()}
+        )
+        self.epoch = new_epoch
+        return new_epoch
+
+    def takeover(self, reason: str = "shard failover") -> "Journal":
+        """Fence this journal and return a successor for the same segment.
+
+        The successor owns the segment under epoch ``+1`` (journaled as its
+        first record): file journals are reopened from disk (sealing any
+        torn tail the dead worker left), in-memory journals share the same
+        record list.  The fenced predecessor keeps serving reads
+        (:meth:`records`, :meth:`record_at`) but every append on it raises
+        :class:`JournalFenced`.
+        """
+        self.fence(reason)
+        successor = Journal.__new__(Journal)
+        successor.path = self.path
+        successor.fsync = self.fsync
+        successor.latency_s = self.latency_s
+        successor.group_commit = self.group_commit
+        successor.fault_hook = None  # faults targeted the dead shard
+        successor.compact_every = self.compact_every
+        successor._lock = threading.RLock()
+        successor._memory = self._memory  # shared for in-memory journals
+        successor._fh = None
+        successor.generation = self.generation
+        successor.epoch = self.epoch
+        successor.fenced = None
+        successor._since_checkpoint = self._since_checkpoint
+        successor._auto_compacting = False
+        successor.last_compact_error = None
+        successor._pos = len(self._memory)
+        successor._offsets = {}
+        if self.path is not None:
+            self.close()  # release the dead shard's append handle
+            successor.generation = 0
+            successor.epoch = 0
+            successor._since_checkpoint = 0
+            if os.path.exists(self.path):
+                successor._scan_existing(self.path)
+            successor._fh = open(self.path, "a", encoding="utf-8")
+            successor._pos = os.path.getsize(self.path)
+        successor._committer = GroupCommitter(successor._flush_batch)
+        successor.bump_epoch(reason)
+        return successor
+
     # ------------------------------------------------------------- compaction
     def compact(self, counters: dict | None = None) -> dict:
         """Collapse history into one checkpoint record (generation swap).
@@ -479,6 +576,7 @@ class Journal:
             checkpoint = {
                 "type": "checkpoint",
                 "generation": self.generation + 1,
+                "epoch": self.epoch,
                 "runs": live_runs,
                 "triggers": [
                     image.to_state() for image in view.triggers.values()
@@ -724,6 +822,20 @@ class RunImage:
             self.status = "CANCELLED"
             self.error = rec.get("error")
             self._context_from(rec)
+        elif kind == "run_rehomed":
+            # the run arrived here from a fenced shard: the record embeds a
+            # full image snapshot (identity + context + progress) because
+            # this segment has none of the run's earlier history
+            state = rec.get("image") or {}
+            for name in self._STATE_FIELDS:
+                if name in state:
+                    setattr(self, name, state[name])
+            self._ctx_owned = False
+        elif kind == "run_rehomed_out":
+            # tombstone on the victim's (taken-over) segment: the live image
+            # now journals on rec["to_shard"], so cold recovery of *this*
+            # segment must neither resume it nor checkpoint it as live
+            self.status = "REHOMED"
 
 
 class SegmentView:
@@ -740,6 +852,8 @@ class SegmentView:
         self.triggers: dict[str, TriggerImage] = {}
         self.counters: dict = {}
         self.generation = 0
+        #: highest fencing epoch seen in the segment (0 = never failed over)
+        self.epoch = 0
         self.record_count = 0
 
 
@@ -767,6 +881,10 @@ def replay_segment(journal: Journal) -> SegmentView:
             }
             view.counters = rec.get("counters", {}) or {}
             view.generation = rec.get("generation", view.generation)
+            view.epoch = rec.get("epoch", view.epoch)
+            continue
+        if rec.get("type") == "epoch":
+            view.epoch = rec.get("epoch", view.epoch)
             continue
         run_id = rec.get("run_id")
         if run_id is not None:
@@ -899,6 +1017,21 @@ class TriggerImage:
                 self.resolved_message_ids.add(mid)
                 if rec.get("disposition") == "invoked":
                     self.invoked_message_ids.add(mid)
+        elif kind == "trigger_rehomed":
+            # failover moved this trigger's journal ownership here: the
+            # record embeds the full image (lifecycle + ack-progress) as
+            # replayed from the fenced shard's segment.  Ack-progress
+            # merges — this segment may also hold records of its own.
+            state = rec.get("image") or {}
+            for name in self._STATE_FIELDS:
+                if name in state:
+                    setattr(self, name, state[name])
+            self.resolved_message_ids |= set(
+                state.get("resolved_message_ids", ())
+            )
+            self.invoked_message_ids |= set(
+                state.get("invoked_message_ids", ())
+            )
 
 
 def replay_triggers(journal: Journal) -> dict[str, TriggerImage]:

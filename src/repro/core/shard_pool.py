@@ -76,7 +76,13 @@ from .auth import Tenant
 from .clock import Clock, MonotonicId, RealClock
 from .engine import RUN_ACTIVE, FlowEngine, PollingPolicy, Run, Scheduler
 from .errors import NotFound
-from .journal import Journal, segment_path
+from .journal import (
+    Journal,
+    JournalCrashed,
+    JournalFenced,
+    SimulatedCrash,
+    segment_path,
+)
 
 
 def placement_key(run_id: str) -> str:
@@ -123,16 +129,38 @@ class PoolScheduler:
     def __init__(self, schedulers: list[Scheduler], clock: Clock):
         self.clock = clock
         self._schedulers = schedulers
+        #: scheduler indices excluded from drain and facade routing: hung
+        #: shards (ShardSupervisor.hang_shard) and fenced-dead shards
+        #: (EngineShardPool.mark_dead).  Their queued events never execute.
+        self._skip: set[int] = set()
+        #: (scheduler_index, exc) -> bool; installed by attach_supervisor.
+        #: Receives crash-channel exceptions raised out of drained events;
+        #: True = handled (failover ran), False = re-raise.
+        self._crash_handler: Callable[[int, BaseException], bool] | None = None
 
-    # -- Scheduler-compatible submission (auxiliary events -> shard 0) -------
+    def append_scheduler(self, sched: Scheduler) -> None:
+        """Add an auxiliary scheduler (the supervisor's) to the drain merge."""
+        self._schedulers.append(sched)
+
+    def pause_shard(self, index: int) -> None:
+        """Stop draining/routing to one scheduler (hang or death)."""
+        self._skip.add(index)
+
+    def _first_live(self) -> Scheduler:
+        for i, sched in enumerate(self._schedulers):
+            if i not in self._skip:
+                return sched
+        return self._schedulers[0]
+
+    # -- Scheduler-compatible submission (auxiliary events -> first live shard)
     def call_at(self, t: float, fn: Callable[[], None]) -> None:
-        self._schedulers[0].call_at(t, fn)
+        self._first_live().call_at(t, fn)
 
     def call_later(self, delay: float, fn: Callable[[], None]) -> None:
-        self._schedulers[0].call_later(delay, fn)
+        self._first_live().call_later(delay, fn)
 
     def submit(self, fn: Callable[[], None]) -> None:
-        self._schedulers[0].submit(fn)
+        self._first_live().submit(fn)
 
     def pending(self) -> int:
         return sum(s.pending() for s in self._schedulers)
@@ -161,12 +189,15 @@ class PoolScheduler:
                 return n
             best_t: float | None = None
             best_sched: Scheduler | None = None
-            for sched in self._schedulers:
+            best_i = -1
+            for i, sched in enumerate(self._schedulers):
+                if i in self._skip:
+                    continue
                 t = sched.peek_time()
                 if t is None:
                     continue
                 if best_t is None or t < best_t:
-                    best_t, best_sched = t, sched
+                    best_t, best_sched, best_i = t, sched, i
             if best_sched is None or (until is not None and best_t > until):
                 return n
             popped = best_sched.pop_next(best_t)
@@ -174,7 +205,16 @@ class PoolScheduler:
                 continue
             t, fn = popped
             self.clock.advance_to(t)
-            fn()
+            try:
+                fn()
+            except (SimulatedCrash, JournalCrashed, JournalFenced) as exc:
+                # the virtual-mode crash channel: what a worker thread would
+                # report in real mode surfaces here.  The supervisor (when
+                # attached) turns it into a failover; otherwise it escapes
+                # to the caller exactly as before.
+                handler = self._crash_handler
+                if handler is None or not handler(best_i, exc):
+                    raise
             n += 1
         return n
 
@@ -285,11 +325,57 @@ class EngineShardPool:
         #: resolve misses in O(1) instead of scanning every shard.
         self._foreign: dict[str, int] = {}
         self._foreign_lock = threading.Lock()
+        #: shard indices fenced off by a ShardSupervisor failover.  Routing
+        #: (``live_shard_index``) re-hashes anything homed on a dead shard
+        #: onto the survivors; the supervisor re-homed the existing state
+        #: with the same formula, so lookups need no forwarding table.
+        self.dead: set[int] = set()
+        #: the attached ShardSupervisor (None until attach_supervisor)
+        self.supervisor = None
+
+    # ------------------------------------------------------------- failover
+    def live_shard_index(self, run_id: str) -> int:
+        """``shard_index`` restricted to live shards.
+
+        The raw hash home when it is alive; otherwise a stable re-hash over
+        the survivor set — the same formula the supervisor re-homes by, so
+        a re-homed run's new location is computable from its id alone.
+        """
+        idx = shard_index(run_id, self.num_shards)
+        if idx not in self.dead:
+            return idx
+        survivors = [i for i in range(self.num_shards) if i not in self.dead]
+        if not survivors:
+            raise NotFound(f"no live shard for {run_id!r}: whole pool dead")
+        key = zlib.crc32(placement_key(run_id).encode("utf-8"))
+        return survivors[key % len(survivors)]
+
+    def mark_dead(self, shard_id: int) -> None:
+        """Exclude a shard from routing and (virtual-mode) draining."""
+        self.dead.add(shard_id)
+        self.scheduler.pause_shard(shard_id)
+
+    def attach_supervisor(self, supervisor) -> None:
+        """Wire a ShardSupervisor into the pool (called by its start()).
+
+        Adds the supervisor's scheduler to the drain merge, installs the
+        crash channel, and unifies the per-engine recovered-Map-results
+        tables into one shared dict — after a failover, a surviving parent
+        must be able to adopt a terminal child replayed from the *victim's*
+        segment, exactly as pool recovery already guarantees.
+        """
+        self.supervisor = supervisor
+        self.scheduler.append_scheduler(supervisor.scheduler)
+        self.scheduler._crash_handler = supervisor.on_worker_crash
+        shared: dict[str, tuple] = {}
+        for engine in self.engines:
+            shared.update(engine.recovered_map_results)
+            engine.recovered_map_results = shared
 
     # ------------------------------------------------------------- routing
     def shard_of(self, run_id: str) -> FlowEngine:
-        """The home shard that owns (or would own) ``run_id``."""
-        return self.engines[shard_index(run_id, self.num_shards)]
+        """The live shard that owns (or would own) ``run_id``."""
+        return self.engines[self.live_shard_index(run_id)]
 
     def journal_for(self, owner_id: str) -> Journal:
         """The journal segment owned by ``owner_id``'s home shard.
@@ -298,8 +384,9 @@ class EngineShardPool:
         records from the :class:`~repro.core.triggers.EventRouter` — is
         hash-owned by shards exactly like runs: records for ``owner_id`` land
         in ``shard_index(owner_id, N)``'s segment and are recovered with it.
+        After a failover the ownership re-hashes to a live shard.
         """
-        return self.engines[shard_index(owner_id, self.num_shards)].journal
+        return self.engines[self.live_shard_index(owner_id)].journal
 
     @property
     def journals(self) -> list[Journal]:
@@ -336,13 +423,14 @@ class EngineShardPool:
         (no engine locks; the caller holds only the parent's run lock), so
         under a VirtualClock the decision is still deterministic.
         """
-        home_idx = shard_index(child_id, self.num_shards)
-        if self.num_shards == 1:
-            return self.engines[0], False
-        loads = [engine.map_hosted for engine in self.engines]
-        best = min(range(self.num_shards), key=lambda i: (loads[i], i))
+        home_idx = self.live_shard_index(child_id)
+        live = [i for i in range(self.num_shards) if i not in self.dead]
+        if len(live) == 1:
+            return self.engines[live[0]], False
+        best = min(live, key=lambda i: (self.engines[i].map_hosted, i))
         if (
-            loads[home_idx] <= loads[best]
+            self.engines[home_idx].map_hosted
+            <= self.engines[best].map_hosted
             or join.stolen_live >= self.map_steal_bound
         ):
             return self.engines[home_idx], False
@@ -354,7 +442,7 @@ class EngineShardPool:
         A no-op for home placements; off-home runs go into the foreign
         index so ``_owner`` finds them without scanning.
         """
-        if shard_index(run_id, self.num_shards) != shard_id:
+        if self.live_shard_index(run_id) != shard_id:
             with self._foreign_lock:
                 self._foreign[run_id] = shard_id
 
@@ -400,8 +488,11 @@ class EngineShardPool:
             flow, flow_input, run_id=run_id, seq=seq, defer_start=True,
             **kwargs,
         )
+        # late-bound host: a failover may transplant the parked run to a
+        # surviving shard before the DRR pump releases it — release where
+        # it lives NOW, not where it was created
         self.admission.enqueue(
-            tenant, run, lambda r=run, host=shard: host.release_run(r)
+            tenant, run, lambda r=run, home=shard: (r.engine or home).release_run(r)
         )
         return run
 
@@ -451,6 +542,8 @@ class EngineShardPool:
         return self.scheduler.drain(until=until)
 
     def shutdown(self) -> None:
+        if self.supervisor is not None:
+            self.supervisor.stop()
         for engine in self.engines:
             engine.shutdown()
 

@@ -337,6 +337,16 @@ class EventRouter:
                     continue
                 with self._lock:
                     if image.trigger_id in self._triggers:
+                        # a trigger_rehomed record can land this trigger's
+                        # image in a second segment: the first image won the
+                        # rebuild, but the later one may carry ack-progress
+                        # journaled after the split — merge it so a crash
+                        # straddling a failover still never double-invokes
+                        sub = self._sub(image.queue_id)
+                        for mid in image.resolved_message_ids:
+                            sub.resolved.setdefault(mid, set()).add(
+                                image.trigger_id
+                            )
                         continue
                 config = TriggerConfig(
                     queue_id=image.queue_id,

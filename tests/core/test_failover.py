@@ -1,0 +1,423 @@
+"""Live shard failover: heartbeats, fencing, online re-homing.
+
+The acceptance property is *failover equivalence* (ARCHITECTURE invariant
+12): under a VirtualClock and a seeded :class:`ChaosPlane`, killing one
+shard of a pool mid-storm and re-homing its runs onto the survivors yields
+the **same terminal state for every run** as the uninterrupted execution —
+none lost, none double-executed — while a fenced zombie's late journal
+appends provably raise :class:`JournalFenced`.
+"""
+
+import pytest
+
+from repro.core import asl
+from repro.core.actions import ActionRegistry
+from repro.core.chaos import ChaosPlane
+from repro.core.clock import VirtualClock
+from repro.core.engine import RUN_ACTIVE, RUN_SUCCEEDED
+from repro.core.journal import JournalFenced, SimulatedCrash
+from repro.core.shard_pool import EngineShardPool, shard_index
+from repro.core.providers import EchoProvider, SleepProvider
+from repro.core.supervisor import ShardSupervisor
+
+HORIZON = 20_000.0
+
+#: every state retries injected ChaosErrors with capped, jittered backoff
+RETRY = [{"ErrorEquals": ["ChaosError"], "IntervalSeconds": 1.0,
+          "MaxAttempts": 6, "BackoffRate": 2.0,
+          "MaxDelaySeconds": 8.0, "JitterStrategy": "FULL"}]
+
+CHAIN = {
+    "StartAt": "A",
+    "States": {
+        "A": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string.$": "$.msg"},
+              "Retry": RETRY, "ResultPath": "$.a", "Next": "Pause"},
+        "Pause": {"Type": "Action", "ActionUrl": "ap://sleep",
+                  "Parameters": {"seconds": 50.0},
+                  "Retry": RETRY, "ResultPath": "$.pause", "Next": "B"},
+        "B": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string.$": "$.a.details.echo_string"},
+              "Retry": RETRY, "ResultPath": "$.b", "End": True},
+    },
+}
+
+MAP_FAN = {
+    "StartAt": "Fan",
+    "States": {
+        "Fan": {
+            "Type": "Map",
+            "ItemsPath": "$.xs",
+            "MaxConcurrency": 4,
+            "Iterator": {
+                "StartAt": "Nap",
+                "States": {
+                    "Nap": {"Type": "Action", "ActionUrl": "ap://sleep",
+                            "Parameters": {"seconds": 20.0},
+                            "Retry": RETRY, "ResultPath": "$.nap",
+                            "Next": "Echo"},
+                    "Echo": {"Type": "Action", "ActionUrl": "ap://echo",
+                             "Parameters": {"echo_string.$": "$.index"},
+                             "Retry": RETRY, "ResultPath": "$.echoed",
+                             "End": True},
+                },
+            },
+            "ResultPath": "$.results",
+            "End": True,
+        },
+    },
+}
+
+PARK = {
+    "StartAt": "Park",
+    "States": {
+        "Park": {"Type": "Wait", "Seconds": 7000.0, "Next": "Done"},
+        "Done": {"Type": "Pass", "Result": {"ok": True},
+                 "ResultPath": "$.done", "End": True},
+    },
+}
+
+
+def make_pool(num_shards, chaos=None, journal_path=None,
+              passivate_after=None, supervise=True,
+              heartbeat_interval=5.0, heartbeat_timeout=20.0, flows=None):
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    registry.register(SleepProvider(clock=clock))
+    if chaos is not None:
+        chaos.clock = clock
+        chaos.arm_providers(registry)
+    pool = EngineShardPool(registry, num_shards=num_shards, clock=clock,
+                           journal_path=journal_path,
+                           passivate_after=passivate_after)
+    supervisor = None
+    if supervise:
+        supervisor = ShardSupervisor(
+            pool, heartbeat_interval=heartbeat_interval,
+            heartbeat_timeout=heartbeat_timeout, chaos=chaos, flows=flows,
+        )
+        supervisor.start()
+    return pool, clock, supervisor
+
+
+def chaotic_plane(seed, kills=()):
+    plane = ChaosPlane(seed=seed)
+    plane.configure("provider.run", error_rate=0.15)
+    plane.configure("provider.status", error_rate=0.05)
+    for shard_id, at, mode in kills:
+        plane.plan_kill(shard_id, at, mode=mode)
+    return plane
+
+
+def run_storm(num_shards, seed, kills=(), n_runs=16):
+    """A fixed seeded workload; return (pool, supervisor, plane, runs)."""
+    plane = chaotic_plane(seed, kills)
+    pool, _, supervisor = make_pool(num_shards, chaos=plane)
+    flow = asl.parse(CHAIN)
+    runs = {}
+    for i in range(n_runs):
+        r = pool.start_run(flow, {"msg": f"m{i}"}, run_id=f"run-{i:04d}")
+        runs[r.run_id] = r
+    pool.drain(until=HORIZON)
+    return pool, supervisor, plane, runs
+
+
+# ------------------------------------------------- differential equivalence
+
+@pytest.mark.parametrize("num_shards", [2, 4, 8])
+def test_killed_shard_equals_uninterrupted(num_shards):
+    """Kill 1 shard mid-storm: every victim run reaches the same terminal
+    state as the uninterrupted reference — none lost, none double-run."""
+    ref_pool, _, ref_plane, ref_runs = run_storm(num_shards, seed=7)
+    assert all(r.status == RUN_SUCCEEDED for r in ref_runs.values())
+
+    pool, supervisor, plane, runs = run_storm(
+        num_shards, seed=7, kills=[(1, 10.0, "crash")]
+    )
+    assert supervisor.stats["failovers"] == 1
+    assert 1 in pool.dead
+    for rid, ref in ref_runs.items():
+        got = pool.get_run(rid)
+        assert got.status == ref.status == RUN_SUCCEEDED
+        assert got.context["a"]["details"] == ref.context["a"]["details"]
+        assert got.context["b"]["details"] == ref.context["b"]["details"]
+    # totals add up: every run completed exactly once pool-wide
+    assert sum(e.stats["runs_succeeded"] for e in pool.engines) == len(runs)
+    # identical invoke-fault decisions were drawn (keyed hashing, not RNG
+    # streams): the killed pool may legitimately *re-draw* a request id
+    # when a failed dispatch is re-entered after the takeover, but never
+    # draw a different decision for an id the reference saw.  (status
+    # draws are keyed on poll *time*, which shifts for re-homed runs —
+    # they are excluded by construction.)
+    invokes = lambda p: {t for t in p.timeline if t[0] == "provider.run"}
+    assert invokes(plane) >= invokes(ref_plane)
+
+
+def test_same_seed_same_faults_across_shard_counts():
+    """The chaos timeline is a function of the seed and the workload's
+    request ids — not of shard count or interleaving."""
+    timelines = {}
+    for n in (1, 4, 8):
+        _, _, plane, runs = run_storm(n, seed=21)
+        assert all(r.status == RUN_SUCCEEDED for r in runs.values())
+        timelines[n] = set(plane.timeline)
+    assert timelines[1] == timelines[4] == timelines[8]
+    assert timelines[1]  # the storm did inject faults
+
+
+def test_map_fanout_killed_equals_uninterrupted():
+    flow = asl.parse(MAP_FAN)
+    xs = list(range(12))
+
+    def fan(kills):
+        plane = chaotic_plane(3, kills)
+        pool, _, supervisor = make_pool(4, chaos=plane)
+        run = pool.start_run(flow, {"xs": xs}, run_id="run-fan")
+        pool.drain(until=HORIZON)
+        return pool, supervisor, run
+
+    _, _, ref = fan([])
+    assert ref.status == RUN_SUCCEEDED
+
+    pool, supervisor, got = fan([(1, 25.0, "crash")])
+    assert supervisor.stats["failovers"] == 1
+    assert got.status == RUN_SUCCEEDED
+    assert len(got.context["results"]) == len(xs)
+    for i, (g, r) in enumerate(zip(got.context["results"],
+                                   ref.context["results"])):
+        assert g["echoed"]["details"] == r["echoed"]["details"], i
+
+
+# ----------------------------------------------------------------- fencing
+
+def test_zombie_appends_rejected_after_fencing(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    pool, _, supervisor = make_pool(4, journal_path=path)
+    flow = asl.parse(CHAIN)
+    runs = [pool.start_run(flow, {"msg": str(i)}, run_id=f"run-{i:04d}")
+            for i in range(8)]
+    pool.drain(until=10.0)  # everyone parked in Pause
+
+    zombie_journal = pool.engines[2].journal
+    supervisor.fail_shard(2, reason="test")
+    # the zombie's handle is fenced: its late appends provably raise,
+    # they are never silently interleaved into the segment
+    with pytest.raises(JournalFenced):
+        zombie_journal.append({"type": "noise", "run_id": "run-0000", "t": 0})
+    # the successor epoch is journaled and strictly newer
+    assert supervisor.timeline[0]["epoch"] == zombie_journal.epoch + 1
+    pool.drain(until=HORIZON)
+    assert all(r.status == RUN_SUCCEEDED for r in runs)
+
+
+def test_fail_shard_idempotent_and_refuses_last_survivor():
+    pool, _, supervisor = make_pool(2)
+    flow = asl.parse(CHAIN)
+    runs = [pool.start_run(flow, {"msg": str(i)}) for i in range(6)]
+    pool.drain(until=10.0)
+    supervisor.fail_shard(1, reason="first")
+    supervisor.fail_shard(1, reason="again")  # no-op
+    assert supervisor.stats["failovers"] == 1
+    with pytest.raises(RuntimeError):
+        supervisor.fail_shard(0, reason="nowhere to go")
+    pool.drain(until=HORIZON)
+    assert all(r.status == RUN_SUCCEEDED for r in runs)
+
+
+# ----------------------------------------------------- detection channels
+
+def test_hang_detected_by_heartbeat_sweep():
+    """A hung shard reports nothing — only its missed beacons betray it."""
+    plane = ChaosPlane(seed=1)
+    plane.plan_kill(1, 5.0, mode="hang")
+    pool, _, supervisor = make_pool(
+        4, chaos=plane, heartbeat_interval=0.5, heartbeat_timeout=2.0
+    )
+    flow = asl.parse(CHAIN)
+    runs = [pool.start_run(flow, {"msg": str(i)}) for i in range(12)]
+    pool.drain(until=1000.0)
+    assert supervisor.stats["failovers"] == 1
+    event = supervisor.timeline[0]
+    assert event["shard"] == 1
+    assert "heartbeat silent" in event["reason"]
+    # detection lag is bounded by timeout + one sweep interval
+    assert 5.0 < event["detected_at"] <= 5.0 + 2.0 + 2 * 0.5
+    assert all(r.status == RUN_SUCCEEDED for r in runs)
+
+
+def test_worker_crash_reported_through_channel():
+    """An unhandled SimulatedCrash in a shard's worker loop short-circuits
+    detection: the crash channel fails the shard immediately."""
+    pool, _, supervisor = make_pool(4)
+    flow = asl.parse(CHAIN)
+    runs = [pool.start_run(flow, {"msg": str(i)}) for i in range(12)]
+    pool.drain(until=5.0)
+
+    def boom():
+        raise SimulatedCrash("injected worker crash")
+
+    pool.engines[3].scheduler.submit(boom)
+    pool.drain(until=HORIZON)
+    assert supervisor.stats["failovers"] == 1
+    assert supervisor.timeline[0]["shard"] == 3
+    assert "worker crash" in supervisor.timeline[0]["reason"]
+    assert all(r.status == RUN_SUCCEEDED for r in runs)
+
+
+# ------------------------------------------------------------- re-homing
+
+def test_dormant_stubs_repark_on_survivors():
+    pool, _, supervisor = make_pool(
+        2, passivate_after=0.0, heartbeat_interval=50.0,
+        heartbeat_timeout=200.0,
+    )
+    flow = asl.parse(PARK)
+    runs = [pool.start_run(flow, {}, flow_id="f", run_id=f"run-{i:04d}")
+            for i in range(8)]
+    pool.drain(until=10.0)
+    parked_on_1 = [r.run_id for r in runs
+                   if r.run_id in pool.engines[1].dormant]
+    assert parked_on_1  # the victim does hold stubs
+
+    supervisor.fail_shard(1, reason="test")
+    assert supervisor.stats["stubs_reparked"] == len(parked_on_1)
+    for rid in parked_on_1:
+        assert rid in pool.engines[0].dormant
+    pool.drain(until=HORIZON)
+    for r in runs:
+        done = pool.get_run(r.run_id)
+        assert done.status == RUN_SUCCEEDED
+        assert done.context["done"] == {"ok": True}
+
+
+def test_torn_run_completed_on_host():
+    """The victim died inside _complete_run: terminal in memory, not yet
+    journaled.  The host journals the decision and finishes the protocol."""
+    pool, _, supervisor = make_pool(2)
+    flow = asl.parse(CHAIN)
+    runs = [pool.start_run(flow, {"msg": str(i)}, run_id=f"run-{i:04d}")
+            for i in range(8)]
+    pool.drain(until=10.0)
+    victim_runs = [r for r in runs if shard_index(r.run_id, 2) == 1]
+    torn = victim_runs[0]
+    with torn.lock:
+        torn.status = RUN_SUCCEEDED  # mutated, never journaled, done unset
+        torn.current_state = None
+    assert not torn.done.is_set()
+
+    supervisor.fail_shard(1, reason="test")
+    assert supervisor.stats["torn_completed"] == 1
+    assert torn.done.is_set()
+    assert pool.get_run(torn.run_id) is torn
+    pool.drain(until=HORIZON)
+    for r in runs:
+        assert r.status == RUN_SUCCEEDED
+
+
+def test_rehoming_is_durable_for_cold_recovery(tmp_path):
+    """Cold restart *mid-flight after* a live failover: every run — the
+    re-homed ones included — is found exactly once, on its new segment
+    (the ``run_rehomed_out`` tombstone keeps the fenced segment from
+    resurrecting its copy), and completes."""
+    path = str(tmp_path / "journal.jsonl")
+    flow = asl.parse(CHAIN)
+    pool1, _, supervisor = make_pool(4, journal_path=path)
+    runs = [pool1.start_run(flow, {"msg": f"m{i}"}, run_id=f"run-{i:04d}")
+            for i in range(12)]
+    pool1.drain(until=10.0)
+    supervisor.fail_shard(1, reason="test")
+    pool1.drain(until=30.0)  # takeover done, everyone still mid-Pause
+    assert all(r.status == RUN_ACTIVE for r in runs)
+
+    pool2, _, _ = make_pool(4, journal_path=path, supervise=False)
+    resumed = pool2.recover({"flow": flow})
+    assert sorted(r.run_id for r in resumed) == [r.run_id for r in runs]
+    pool2.drain(until=HORIZON)
+    for r in runs:
+        got = pool2.get_run(r.run_id)
+        assert got.status == RUN_SUCCEEDED
+        assert got.context["b"]["details"]["echo_string"] == \
+            r.context["a"]["details"]["echo_string"]
+
+
+# --------------------------------------------------------------- triggers
+
+def test_trigger_journal_ownership_rehashes(tmp_path):
+    from repro.core.flows_service import FlowsService
+    from repro.core.queues import QueueService
+
+    clock = VirtualClock()
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock))
+    registry.register(SleepProvider(clock=clock))
+    queues = QueueService(clock=clock)
+    svc = FlowsService(registry, clock=clock, shards=2, queues=queues,
+                       journal_path=str(tmp_path / "journal.jsonl"))
+    supervisor = svc.enable_supervision(heartbeat_interval=50.0,
+                                        heartbeat_timeout=200.0)
+    record = svc.publish_flow(
+        {"StartAt": "E",
+         "States": {"E": {"Type": "Action", "ActionUrl": "ap://echo",
+                          "Parameters": {"echo_string.$": "$.path"},
+                          "End": True}}},
+        title="triggered",
+    )
+    q = queues.create_queue("instrument")
+    # pick a trigger id homed on the shard we will kill
+    tid = next(f"trig-{i}" for i in range(64) if shard_index(f"trig-{i}", 2) == 1)
+    svc.create_trigger(q.queue_id, 'filename.endswith(".tiff")',
+                       record.flow_id,
+                       transform={"path": "filename"}, trigger_id=tid)
+    svc.enable_trigger(tid)
+    queues.send(q.queue_id, {"filename": "a.tiff"})
+    svc.engine.drain(until=60.0)
+
+    supervisor.fail_shard(1, reason="test")
+    assert supervisor.stats["triggers_rehomed"] >= 1
+    # the re-journaled image landed on the trigger's new live home
+    host = svc.engine.journal_for(tid)
+    assert any(rec.get("type") == "trigger_rehomed"
+               and rec.get("trigger_id") == tid
+               for rec in host.records())
+    # the trigger keeps firing after the failover
+    queues.send(q.queue_id, {"filename": "b.tiff"})
+    svc.engine.drain(until=1000.0)
+    fired = [r for r in svc.engine.runs.values() if r.parent is None]
+    assert len(fired) == 2
+    assert all(r.status == RUN_SUCCEEDED for r in fired)
+
+
+# --------------------------------------------------------- metered tenants
+
+def test_metered_runs_survive_failover_with_admission_credit():
+    from repro.core.auth import AuthService, Caller
+    from repro.core.flows_service import FlowsService
+
+    clock = VirtualClock()
+    auth = AuthService(clock=clock)
+    registry = ActionRegistry()
+    registry.register(EchoProvider(clock=clock, auth=auth))
+    registry.register(SleepProvider(clock=clock, auth=auth))
+    svc = FlowsService(registry, clock=clock, auth=auth, shards=2,
+                       admission_window=2)
+    supervisor = svc.enable_supervision(heartbeat_interval=50.0,
+                                        heartbeat_timeout=200.0)
+    auth.register_tenant("acme")
+    auth.create_identity("alice")
+    auth.assign_tenant("alice", "acme")
+    record = svc.publish_flow(CHAIN, owner="root",
+                              starters=["all_authenticated_users"])
+    auth.grant_consent("alice", record.scope)
+    token = auth.issue_token("alice", record.scope)
+    caller = Caller(identity=auth.get_identity("alice"),
+                    tokens={record.scope: token})
+    runs = [svc.run_flow(record.flow_id, {"msg": str(i)}, caller=caller)
+            for i in range(8)]
+    svc.engine.drain(until=10.0)  # window=2: most runs still deferred
+
+    supervisor.fail_shard(1, reason="test")
+    svc.engine.drain(until=HORIZON)
+    # the window kept cycling across the takeover: deferred runs were
+    # admitted by slots credited back from re-homed completions
+    assert all(r.status == RUN_SUCCEEDED for r in runs)

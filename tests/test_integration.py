@@ -110,27 +110,45 @@ def test_engine_crash_recovery_resumes_training_flow(fabric, tmp_path):
     registry.register(search)
 
     definition = build_flow(fabric, registry, compute)
+
+    # Gate the first train_steps call on a rendezvous so the "crash" is
+    # provably mid-action: the orchestrator goes down while the compute
+    # action is still running — exactly the scenario journal replay must
+    # recover.  (Polling run events for ActionStarted instead is a race:
+    # with a warm JAX cache the whole flow can finish inside one poll
+    # interval and the ACTIVE assertion below flakes.)
+    import threading
+
+    started, release = threading.Event(), threading.Event()
+    cf = next(f for f in compute._functions.values()
+              if f.name == "train_steps")
+    inner_train = cf.fn
+
+    def gated_train(**kwargs):
+        started.set()
+        assert release.wait(timeout=120), "gated train step never released"
+        return inner_train(**kwargs)
+
+    cf.fn = gated_train
+
     flow = asl.parse(definition)
     engine1 = FlowEngine(registry, clock=clock,
                          journal=Journal(journal_path), polling=FAST_POLL)
     run1 = engine1.start_run(flow, {}, flow_id="train-flow")
-    # let it progress into the flow, then "crash" the orchestrator while the
-    # (long) Train action is still in flight — crashing on ActionCompleted
-    # is a race: the remaining states can finish inside the poll gap and
-    # leave nothing to recover
-    import time
-
-    for _ in range(200):
-        if any(e["code"] == "ActionStarted" for e in run1.events):
-            break
-        time.sleep(0.05)
+    assert started.wait(timeout=30), "Train action never dispatched"
     engine1.shutdown()
     assert run1.status == "ACTIVE"  # crashed mid-flight, not after the end
+    # Freeze the dead orchestrator's run object: a real crash takes the
+    # worker thread with it, but here the thread is parked inside the gate
+    # and would otherwise advance run1 (journalling duplicate records and
+    # releasing the action out from under engine2) once released.
+    run1.status = "ABORTED"
 
     engine2 = FlowEngine(registry, clock=clock,
                          journal=Journal(journal_path), polling=FAST_POLL)
     resumed = engine2.recover({"train-flow": flow})
     assert [r.run_id for r in resumed] == [run1.run_id]
+    release.set()  # the in-flight compute action now completes
     run2 = engine2.wait(run1.run_id, timeout=600)
     engine2.shutdown()
     assert run2.status == "SUCCEEDED", run2.error
