@@ -70,7 +70,7 @@ durability:
 	  tests/core/test_passivation.py tests/core/test_timer_wheel.py \
 	  tests/core/test_auth.py tests/core/test_tenancy.py \
 	  tests/core/test_auth_chain.py tests/core/test_chaos.py \
-	  tests/core/test_failover.py
+	  tests/core/test_failover.py tests/core/test_process_backend.py
 
 # chaos + failover: the seeded fault-injection plane and the live shard
 # failover differential suite, runnable on their own for fast iteration

@@ -14,7 +14,6 @@ import jax           # noqa: E402
 
 from repro import configs  # noqa: E402
 from repro.launch import specs as specs_mod  # noqa: E402
-from repro.launch.dryrun import make_step_fn  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 
 SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")

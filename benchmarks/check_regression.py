@@ -27,7 +27,6 @@ import argparse
 import json
 import os
 import platform
-import sys
 
 RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
 BASELINE_PATH = os.path.join(RESULTS_DIR, "baseline.json")
@@ -55,6 +54,18 @@ def collect_metrics() -> dict[str, dict]:
         if "speedup_vs_serialized" in row and row.get("group_commit"):
             metrics["shard_scaling/group_commit_speedup"] = {
                 "value": row["speedup_vs_serialized"],
+                "higher_is_better": True,
+            }
+        # process-backend sweep (ISSUE 10): gate the 8-shard worker-process
+        # throughput and its speedup over the recorded 2-shard thread floor
+        if row.get("backend") == "process" and row.get("shards") == 8 \
+                and "runs_per_s" in row:
+            metrics["shard_scaling/shards=8/backend=process/runs_per_s"] = {
+                "value": row["runs_per_s"], "higher_is_better": True,
+            }
+        if "process_speedup_8v2" in row:
+            metrics["shard_scaling/process_speedup_8v2"] = {
+                "value": row["process_speedup_8v2"],
                 "higher_is_better": True,
             }
 

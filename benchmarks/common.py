@@ -46,8 +46,25 @@ def virtual_stack(polling=None, auth=None, shards=1):
     return flows, clock, registry
 
 
+def bench_registry():
+    """Echo + Sleep registry factory, importable by spawned workers.
+
+    The process backend re-resolves this by its ``"module:callable"`` spec
+    inside each worker (providers are live objects and never cross the
+    boundary), so it must live at module level in an importable module.
+    """
+    from repro.core.actions import ActionRegistry
+    from repro.core.providers import EchoProvider, SleepProvider
+
+    registry = ActionRegistry()
+    registry.register(EchoProvider())
+    registry.register(SleepProvider())
+    return registry
+
+
 def real_stack(polling=None, max_workers=8, shards=1, journal_path=None,
-               fsync=False, journal_latency_s=0.0, group_commit=True):
+               fsync=False, journal_latency_s=0.0, group_commit=True,
+               backend="thread"):
     from repro.core.actions import ActionRegistry
     from repro.core.clock import RealClock
     from repro.core.flows_service import FlowsService
@@ -58,12 +75,19 @@ def real_stack(polling=None, max_workers=8, shards=1, journal_path=None,
     registry.register(EchoProvider(clock=clock))
     sleep = SleepProvider(clock=clock)
     registry.register(sleep)
+    backend_options = None
+    if backend == "process":
+        backend_options = {"registry_spec": "benchmarks.common:bench_registry"}
     flows = FlowsService(registry, clock=clock, polling=polling,
                          max_workers=max_workers, shards=shards,
                          journal_path=journal_path, fsync=fsync,
                          journal_latency_s=journal_latency_s,
-                         group_commit=group_commit)
-    sleep.scheduler = flows.engine.scheduler
+                         group_commit=group_commit, backend=backend,
+                         backend_options=backend_options)
+    if backend == "thread":
+        # with worker processes the parent registry's providers never run,
+        # so there is no engine scheduler to wire the sleep provider to
+        sleep.scheduler = flows.engine.scheduler
     return flows, clock, registry
 
 

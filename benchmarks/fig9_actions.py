@@ -17,17 +17,14 @@ import os
 import tempfile
 
 from benchmarks.common import csv_line, save_results, stats
-from repro.core.actions import ActionRegistry
 from repro.core.auth import AuthService, Caller
 from repro.core.clock import VirtualClock
-from repro.core.engine import Scheduler
 from repro.core.providers import (
     ComputeProvider,
     DOIProvider,
     EchoProvider,
     EmailProvider,
     SearchProvider,
-    SleepProvider,
     TransferProvider,
     UserSelectionProvider,
 )

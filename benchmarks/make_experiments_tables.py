@@ -63,7 +63,6 @@ def main():
     for marker, mesh in (("<!-- ROOFLINE_TABLE_SINGLE -->", "single"),
                           ("<!-- ROOFLINE_TABLE_MULTI -->", "multi")):
         block = marker + "\n" + table_for(mesh)
-        pattern = re.escape(marker) + r"(?:\n\|.*?(?:\n\n|\n(?=#))|\n(?=#)|\s*\n)"
         # simple replacement: marker + everything until the next blank-line+
         # heading is regenerated
         parts = text.split(marker)

@@ -11,7 +11,6 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import csv_line, save_results, virtual_stack
-from repro.core import asl
 from repro.core.engine import PollingPolicy
 
 FLAKY_FLOW = {

@@ -18,7 +18,6 @@ the resulting table reproduces the paper's spread structurally.
 from __future__ import annotations
 
 import hashlib
-import json
 import os
 import tempfile
 

@@ -9,7 +9,7 @@ resolves ids like ``"phi3-mini-3.8b"``.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

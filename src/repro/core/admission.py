@@ -179,9 +179,20 @@ class FairAdmission:
             self.stats["admitted_direct"] += 1
             return True
 
+    def credit(self, tenant_id: str) -> None:
+        """Return one admission slot for ``tenant_id``.
+
+        The cross-boundary slot-credit path: the process backend's parent
+        keeps tenant metering here while runs execute in worker processes,
+        so when a worker reports a terminal run over the pipe the parent
+        credits the slot by tenant *id* — no Run object crosses the
+        boundary.  Equivalent to the callback :meth:`attach` binds inline.
+        """
+        self._finish(tenant_id)
+
     def _slot_callback(self, tenant_id: str) -> Callable:
         def credit(_run):
-            self._finish(tenant_id)
+            self.credit(tenant_id)
 
         # the engine's passivation path recognizes this marker: a parked
         # (dormant) run credits its slot back instead of staying resident

@@ -92,7 +92,9 @@ class KillPlan:
 
     shard_id: int
     at: float
-    mode: str = "crash"  # "crash" (reported) | "hang" (heartbeat-detected)
+    #: "crash" (reported) | "hang" (heartbeat-detected) | "sigkill"
+    #: (real SIGKILL to a worker process — process backend only)
+    mode: str = "crash"
     executed: bool = False
 
 
@@ -127,10 +129,17 @@ class ChaosPlane:
         ``mode="crash"``: the supervisor fails the shard immediately at
         ``at`` (the crash-report channel).  ``mode="hang"``: the shard's
         event loop freezes at ``at`` and the failure is only discovered by
-        missed heartbeats (the sweep channel).
+        missed heartbeats (the sweep channel).  ``mode="sigkill"``: the
+        process backend sends a real ``SIGKILL`` to the worker process
+        hosting the shard at fire time — the plan itself stays a pure
+        keyed draw (deterministic given the seed), only the delivery is a
+        live signal.  Inline (thread) pools treat ``sigkill`` like
+        ``crash``: there is no separate process to kill.
         """
-        if mode not in ("crash", "hang"):
-            raise ValueError(f"kill mode must be 'crash' or 'hang', not {mode!r}")
+        if mode not in ("crash", "hang", "sigkill"):
+            raise ValueError(
+                f"kill mode must be 'crash', 'hang' or 'sigkill', not {mode!r}"
+            )
         plan = KillPlan(shard_id=shard_id, at=at, mode=mode)
         self.kills.append(plan)
         return plan

@@ -510,6 +510,10 @@ class FlowEngine:
         #: itself, exactly as before cross-shard placement existed.
         self.pool = None
         self.shard_id = 0
+        #: set by the process backend's worker host: called with the
+        #: escaped durability-layer exception when no supervisor claims a
+        #: crash (the process is the shard; the listener typically exits)
+        self.crash_listener: Callable[[BaseException], None] | None = None
         #: live Map children resident on THIS engine (load gauge for the
         #: pool's least-loaded placement; guarded by ``_lock`` for writes,
         #: read dirty by the placement policy)
@@ -577,6 +581,12 @@ class FlowEngine:
         if supervisor is not None and supervisor.on_worker_crash(
             self.shard_id, exc
         ):
+            return
+        # the process backend's worker host sets this instead of a
+        # supervisor: the process *is* the shard, so a durability-layer
+        # crash ends the process and the parent's pid-wait takes over
+        if self.crash_listener is not None:
+            self.crash_listener(exc)
             return
         traceback.print_exc()
 

@@ -29,19 +29,16 @@ from dataclasses import dataclass, field
 
 from . import asl, schema as jsonschema
 from .actions import (
-    ACTIVE as AP_ACTIVE,
     FAILED as AP_FAILED,
     SUCCEEDED as AP_SUCCEEDED,
     ActionProvider,
     ActionRegistry,
-    ActionStatus,
     _Action,
 )
 from .auth import AuthContext, AuthService, Identity, principal_matches
 from .clock import Clock, RealClock
 from .engine import (
     RUN_ACTIVE,
-    RUN_FAILED,
     RUN_SUCCEEDED,
     PollingPolicy,
     Run,
@@ -49,6 +46,7 @@ from .engine import (
 from .errors import AutomationError, Forbidden, InputValidationError, NotFound
 from .journal import Journal, TriggerImage
 from .queues import QueueService
+from .backend import make_backend
 from .shard_pool import EngineShardPool
 from .triggers import EventRouter, Trigger, TriggerConfig
 
@@ -97,16 +95,29 @@ class FlowsService:
         passivate_after: float | None = None,
         map_steal_bound: int | None = None,
         admission_window: int | None = None,
+        backend: str = "thread",
+        backend_options: dict | None = None,
     ):
         self.clock = clock or RealClock()
         self.auth = auth
         self.registry = registry
-        #: sharded execution layer; ``max_workers`` is the per-shard pool
-        #: size.  Map fan-outs spread their item children across all
-        #: ``shards`` (deterministic hash placement with a least-loaded
-        #: override capped by ``map_steal_bound``); the join stays on the
-        #: parent's shard — see repro.core.shard_pool.
-        self.engine = EngineShardPool(
+        if backend != "thread" and queues is not None:
+            raise ValueError(
+                "queue triggers (EventRouter) require the thread backend; "
+                "the process backend has no shared scheduler to route on"
+            )
+        #: sharded execution layer behind the ExecutionBackend seam;
+        #: ``backend="thread"`` (default) is the in-process
+        #: thread-per-shard pool, ``backend="process"`` hosts shard groups
+        #: in spawned worker processes (``backend_options`` must carry the
+        #: worker registry factory spec — see repro.core.process_backend).
+        #: ``max_workers`` is the per-shard pool size.  Map fan-outs
+        #: spread their item children across all ``shards`` (deterministic
+        #: hash placement with a least-loaded override capped by
+        #: ``map_steal_bound``); the join stays on the parent's shard —
+        #: see repro.core.shard_pool.
+        self.engine = make_backend(
+            backend,
             registry,
             num_shards=shards,
             clock=self.clock,
@@ -123,6 +134,7 @@ class FlowsService:
             passivate_after=passivate_after,
             map_steal_bound=map_steal_bound,
             admission_window=admission_window,
+            options=backend_options,
         )
         self._flows: dict[str, FlowRecord] = {}
         self._lock = threading.RLock()
@@ -192,6 +204,12 @@ class FlowsService:
             ).urn
         with self._lock:
             self._flows[flow_id] = record
+        # a backend hosting execution elsewhere (worker processes) needs
+        # the definition document pushed to it — flows cross the boundary
+        # as plain ASL, never as compiled objects
+        forward = getattr(self.engine, "publish_flow_definition", None)
+        if forward is not None:
+            forward(flow_id, definition)
         # every flow is an action provider: register it behind the AP API
         self.registry.register(
             FlowActionProvider(self, record, clock=self.clock), f"flow://{flow_id}"
@@ -400,6 +418,12 @@ class FlowsService:
         """
         from .supervisor import ShardSupervisor
 
+        if not isinstance(self.engine, EngineShardPool):
+            raise ValueError(
+                f"the {self.engine.backend_name!r} backend supervises its "
+                "own workers (pid-wait + pipe heartbeats); ShardSupervisor "
+                "only attaches to the inline thread pool"
+            )
         supervisor = ShardSupervisor(
             self.engine,
             heartbeat_interval=heartbeat_interval,

@@ -281,12 +281,18 @@ class Journal:
         #: and the per-append offset handoff (see :meth:`append`)
         self._pos = 0
         self._offsets: dict[int, int] = {}
+        #: pid that opened the current append handle.  File handles are
+        #: opened lazily in the *owning* process (first append wins): a
+        #: Journal constructed before a spawn/fork must not ship an fd —
+        #: or a shared flock — into the child, and a handle inherited
+        #: across fork is abandoned (never close()d, which would re-flush
+        #: the parent's buffered data) and reopened under the child's pid.
+        self._fh_pid: int | None = None
         if path is not None:
             os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
             if os.path.exists(path):
                 self._scan_existing(path)
-            self._fh = open(path, "a", encoding="utf-8")
-            self._pos = os.path.getsize(path)
+                self._pos = os.path.getsize(path)
         self._committer = GroupCommitter(self._flush_batch)
 
     def _scan_existing(self, path: str) -> None:
@@ -393,7 +399,8 @@ class Journal:
         self._hook("pre-write", lines)
         if self.latency_s:
             time.sleep(self.latency_s)  # one simulated RTT per batch
-        if self._fh is not None:
+        if self.path is not None:
+            fh = self._ensure_fh()
             # park each record's byte offset for its append() caller, keyed
             # by the submitted string object's identity (unique while the
             # caller holds the reference).  json.dumps emits ASCII
@@ -402,13 +409,13 @@ class Journal:
             for line in lines:
                 self._offsets[id(line)] = base
                 base += len(line) + 1
-            self._fh.write("".join(line + "\n" for line in lines))
+            fh.write("".join(line + "\n" for line in lines))
             self._pos = base
             self._hook("post-write", lines)
-            self._fh.flush()
+            fh.flush()
             self._hook("post-flush", lines)
             if self.fsync:
-                os.fsync(self._fh.fileno())
+                os.fsync(fh.fileno())
         else:
             base = len(self._memory)
             for i, line in enumerate(lines):
@@ -457,18 +464,50 @@ class Journal:
         undecodable line is a suspect partial write, never silently skipped
         past.
         """
-        if self._fh is None and self.path is None:
+        if self.path is None:
             with self._lock:
                 yield from list(self._memory)
             return
-        assert self.path is not None
         yield from _read_records(self.path)
+
+    def _ensure_fh(self) -> io.TextIOBase:
+        """Return the append handle, opening it lazily in *this* process.
+
+        A handle opened by another pid (inherited across fork) is abandoned
+        and replaced: closing it here would flush the parent's buffered
+        data from the child, and sharing it would interleave two processes'
+        buffered writes into the segment.  ``_pos`` is re-read from disk on
+        every (re)open so offsets stay byte-accurate.
+        """
+        fh = self._fh
+        if fh is not None and self._fh_pid == os.getpid():
+            return fh
+        with self._lock:
+            fh = self._fh
+            if fh is not None and self._fh_pid == os.getpid():
+                return fh
+            assert self.path is not None
+            self._fh = open(self.path, "a", encoding="utf-8")
+            self._fh_pid = os.getpid()
+            self._pos = os.path.getsize(self.path)
+            return self._fh
+
+    def _drop_fh(self) -> None:
+        """Forget the append handle (caller holds ``_lock``).
+
+        Only the pid that opened the handle may close it — a handle
+        inherited across fork is dropped without close so the child never
+        flushes the parent's buffer.
+        """
+        fh, owner = self._fh, self._fh_pid
+        self._fh = None
+        self._fh_pid = None
+        if fh is not None and owner == os.getpid():
+            fh.close()
 
     def close(self) -> None:
         with self._lock:
-            if self._fh is not None:
-                self._fh.close()
-                self._fh = None
+            self._drop_fh()
 
     # --------------------------------------------------------------- fencing
     def fence(self, reason: str = "journal fenced by failover") -> None:
@@ -526,6 +565,7 @@ class Journal:
         successor.last_compact_error = None
         successor._pos = len(self._memory)
         successor._offsets = {}
+        successor._fh_pid = None
         if self.path is not None:
             self.close()  # release the dead shard's append handle
             successor.generation = 0
@@ -533,8 +573,9 @@ class Journal:
             successor._since_checkpoint = 0
             if os.path.exists(self.path):
                 successor._scan_existing(self.path)
-            successor._fh = open(self.path, "a", encoding="utf-8")
-            successor._pos = os.path.getsize(self.path)
+                successor._pos = os.path.getsize(self.path)
+            else:
+                successor._pos = 0
         successor._committer = GroupCommitter(successor._flush_batch)
         successor.bump_epoch(reason)
         return successor
@@ -599,12 +640,12 @@ class Journal:
                     if self.fsync:
                         os.fsync(fh.fileno())
                 with self._lock:
-                    if self._fh is not None:
-                        self._fh.close()
+                    self._drop_fh()
                     try:
                         os.replace(tmp, self.path)
                     finally:
-                        self._fh = open(self.path, "a", encoding="utf-8")
+                        # next append reopens lazily; only _pos must track
+                        # the swapped (or, on failure, surviving) segment
                         self._pos = os.path.getsize(self.path)
                     if self.fsync:
                         _fsync_dir(os.path.dirname(os.path.abspath(self.path)))

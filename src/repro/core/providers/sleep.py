@@ -7,7 +7,7 @@ overhead benchmark sweep sleep times of 0..1024 s deterministically.
 
 from __future__ import annotations
 
-from ..actions import SUCCEEDED, ActionProvider, _Action
+from ..actions import ActionProvider, _Action
 from ..auth import Identity
 
 

@@ -115,6 +115,21 @@ def shard_index(run_id: str, num_shards: int) -> int:
     return zlib.crc32(placement_key(run_id).encode("utf-8")) % num_shards
 
 
+def survivor_index(key: str, num_slots: int, dead: set[int]) -> int:
+    """Stable re-hash of ``key`` over the live slots of ``range(num_slots)``.
+
+    The shared failover formula: the inline pool re-homes a dead shard's
+    runs with it (``key`` = :func:`placement_key`), and the process backend
+    picks a dead worker's successor with it (``key`` = the worker's shard
+    label) — both sides compute the same answer from the id and the dead
+    set alone, with no coordination state.
+    """
+    survivors = [i for i in range(num_slots) if i not in dead]
+    if not survivors:
+        raise NotFound(f"no live slot for {key!r}: every slot is dead")
+    return survivors[zlib.crc32(key.encode("utf-8")) % len(survivors)]
+
+
 class PoolScheduler:
     """Facade over the per-shard schedulers.
 
@@ -344,11 +359,7 @@ class EngineShardPool:
         idx = shard_index(run_id, self.num_shards)
         if idx not in self.dead:
             return idx
-        survivors = [i for i in range(self.num_shards) if i not in self.dead]
-        if not survivors:
-            raise NotFound(f"no live shard for {run_id!r}: whole pool dead")
-        key = zlib.crc32(placement_key(run_id).encode("utf-8"))
-        return survivors[key % len(survivors)]
+        return survivor_index(placement_key(run_id), self.num_shards, self.dead)
 
     def mark_dead(self, shard_id: int) -> None:
         """Exclude a shard from routing and (virtual-mode) draining."""

@@ -240,6 +240,9 @@ class ShardSupervisor:
         if plan.mode == "hang":
             self.hang_shard(plan.shard_id)
         else:
+            # "crash" and — for inline (thread) pools, where there is no
+            # separate worker process to signal — "sigkill" both land here;
+            # the process backend delivers "sigkill" plans as real signals
             self.fail_shard(
                 plan.shard_id, reason=f"chaos kill (mode={plan.mode})"
             )

@@ -49,7 +49,7 @@ import ast
 import secrets
 import threading
 from dataclasses import dataclass, field
-from typing import Any, Callable, Mapping
+from typing import Any, Callable
 
 from . import predicate as predlang
 from .auth import AuthContext

@@ -105,8 +105,8 @@ def _attn_kernel(
 
     @pl.when(jk == n_kv_blocks - 1)
     def _finish():
-        l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
 @functools.partial(

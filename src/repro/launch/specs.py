@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
@@ -22,7 +22,7 @@ from repro.parallel.sharding import (
     logical_spec,
     param_shardings,
 )
-from repro.train.loop import TrainState, init_state, make_train_step
+from repro.train.loop import TrainState, init_state
 from repro.train.optimizer import AdamWState
 
 #: whisper's architectural decoder-position cap

@@ -153,7 +153,6 @@ def apply_attention(
         new_cache = {"k": ck, "v": cv}
         T = ck.shape[1]
         kv_pos = jnp.arange(T)
-        q_pos = positions if positions.ndim else positions[None]
         valid = (kv_pos[None, :] < cache_position + x.shape[1])
         valid = jnp.broadcast_to(valid, (x.shape[0], T))
         out = attend_xla(

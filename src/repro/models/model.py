@@ -22,9 +22,7 @@ from repro.configs.base import ModelConfig
 from repro.models import attention as attn_mod
 from repro.models import encdec as encdec_mod
 from repro.models import layers as L
-from repro.models import ssm as ssm_mod
 from repro.models import transformer as tfm
-from repro.models import xlstm as xlstm_mod
 from repro.models.layers import ParamSpec
 
 

@@ -19,7 +19,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import layers as L
 from repro.models.layers import ParamSpec
 from repro.parallel.sharding import shard
 

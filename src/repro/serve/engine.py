@@ -9,8 +9,6 @@ The jitted step functions are cached per (batch, prompt_len) bucket.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -57,7 +55,6 @@ class ServeEngine:
     ) -> dict:
         """Generate for a batch of equal-length prompts."""
         B, S = prompts.shape
-        cfg = self.model.cfg
         self.stats["requests"] += B
         self.stats["batches"] += 1
         self.stats["prefill_tokens"] += int(B * S)

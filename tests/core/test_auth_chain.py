@@ -220,7 +220,7 @@ def test_consent_revoked_while_down_fails_recovered_run(tmp_path):
     token = auth.issue_token("alice", record.scope)
     caller = AuthContext(identity=auth.get_identity("alice"),
                          tokens={record.scope: token}, auth=auth)
-    run = svc.run_flow(record.flow_id, {"msg": "m"}, caller=caller)
+    svc.run_flow(record.flow_id, {"msg": "m"}, caller=caller)
     svc.engine.scheduler.drain(until=10.0)
     svc.engine.shutdown()
 

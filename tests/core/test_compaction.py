@@ -23,7 +23,6 @@ from repro.core.journal import (
     SimulatedCrash,
     replay,
     replay_counters,
-    replay_triggers,
     segment_path,
 )
 from repro.core.providers import EchoProvider, SleepProvider

@@ -158,7 +158,6 @@ def test_catch_routes_failure():
 
 
 def test_catch_wildcard_and_action_failed():
-    selection = UserSelectionProvider(clock=VirtualClock())
     definition = {
         "StartAt": "Bad",
         "States": {
@@ -195,7 +194,6 @@ def test_retry_with_backoff_then_success():
                 raise RuntimeError("transient")
             super()._start(action, identity)
 
-    clock = VirtualClock()
     engine, _ = make_engine()
     engine.registry.register(Flaky(clock=engine.clock), "ap://flaky")
     definition = {

@@ -7,7 +7,6 @@ and recovered per segment.
 
 import pytest
 
-from repro.core import asl
 from repro.core.actions import ActionRegistry
 from repro.core.clock import VirtualClock
 from repro.core.engine import Scheduler
@@ -610,7 +609,7 @@ def test_event_storm_crash_recovery(tmp_path):
 def _router_workload(num_shards):
     """Fixed trigger + message schedule; returns the router dispatch log."""
     flows, queues, clock = make_flows(shards=num_shards)
-    record = flows.publish_flow(ECHO_FLOW, title="det", flow_id="det-flow")
+    flows.publish_flow(ECHO_FLOW, title="det", flow_id="det-flow")
     q = queues.create_queue("det")
     for i in range(6):
         trig = flows.create_trigger(

@@ -6,7 +6,7 @@ import pytest
 from repro.core.actions import ActionRegistry
 from repro.core.auth import AuthService, Caller
 from repro.core.clock import VirtualClock
-from repro.core.engine import RUN_FAILED, RUN_SUCCEEDED
+from repro.core.engine import RUN_SUCCEEDED
 from repro.core.errors import (
     FlowValidationError,
     Forbidden,

@@ -321,8 +321,8 @@ def test_crash_mid_map_recovers_to_reference(seed, tmp_path_factory=None):
         assert ref.status == RUN_SUCCEEDED
 
         crash_pool = make_pool(os.path.join(base, "crash.jsonl"))
-        victim = crash_pool.start_run(flow, {"xs": items}, flow_id="f1",
-                                      run_id="run-x")
+        crash_pool.start_run(flow, {"xs": items}, flow_id="f1",
+                              run_id="run-x")
         crash_pool.scheduler.drain(until=cut)  # "crash": abandon the pool
 
         recovered_pool = make_pool(os.path.join(base, "crash.jsonl"))

@@ -1,0 +1,402 @@
+"""Process backend: spawn-safe journals, inline equivalence, SIGKILL failover.
+
+The acceptance property is *backend equivalence* (ARCHITECTURE invariant
+13): for the same flows and inputs, :class:`~repro.core.backend.InlineBackend`
+(thread-per-shard, in-process) and
+:class:`~repro.core.process_backend.ProcessBackend` (shard groups in spawned
+worker processes) produce the same terminal state for every run — the
+process boundary is an execution detail, never a semantic one.  On top of
+that sits the failure model: SIGKILL of one worker mid-storm must recover
+every run exactly once (journaled dedup + fencing epochs), matching the
+uninterrupted reference.
+
+The journal tests pin the fd-inheritance contract that makes worker-hosted
+segments safe at all: a :class:`~repro.core.journal.Journal` opens its file
+handle lazily in the *owning* process, so a segment written before a spawn
+round-trips in the worker with fencing intact, and a handle inherited
+across ``fork`` is re-opened rather than written through.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import signal
+import time
+
+import pytest
+
+from repro.core import asl
+from repro.core.actions import ActionRegistry
+from repro.core.auth import Tenant
+from repro.core.backend import ExecutionBackend, InlineBackend, make_backend
+from repro.core.chaos import ChaosPlane
+from repro.core.clock import RealClock
+from repro.core.engine import RUN_SUCCEEDED
+from repro.core.journal import (
+    Journal,
+    JournalFenced,
+    replay_segment,
+    segment_path,
+)
+from repro.core.process_backend import ProcessBackend
+from repro.core.providers import EchoProvider, SleepProvider
+from repro.core.shard_pool import EngineShardPool
+
+#: worker processes rebuild their registries from this spec — echo + sleep,
+#: the same providers the inline reference uses
+REGISTRY_SPEC = "repro.core.process_backend:default_registry"
+
+WAIT_S = 120.0
+
+ECHO = {
+    "StartAt": "E",
+    "States": {
+        "E": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string.$": "$.msg"},
+              "ResultPath": "$.r", "End": True},
+    },
+}
+
+#: Map fan-out: children co-locate with the parent inside a worker process,
+#: but the rolled-up result must match the inline pool's cross-shard spread
+MAP_FAN = {
+    "StartAt": "Fan",
+    "States": {
+        "Fan": {
+            "Type": "Map",
+            "ItemsPath": "$.xs",
+            "MaxConcurrency": 4,
+            "Iterator": {
+                "StartAt": "Echo",
+                "States": {
+                    "Echo": {"Type": "Action", "ActionUrl": "ap://echo",
+                             "Parameters": {"echo_string.$": "$.index"},
+                             "ResultPath": "$.echoed", "End": True},
+                },
+            },
+            "ResultPath": "$.results",
+            "End": True,
+        },
+    },
+}
+
+#: the storm flow holds each run in flight long enough for a SIGKILL to
+#: land mid-run (real seconds: the process backend runs on a real clock)
+CHAIN = {
+    "StartAt": "A",
+    "States": {
+        "A": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string.$": "$.msg"},
+              "ResultPath": "$.a", "Next": "Pause"},
+        "Pause": {"Type": "Action", "ActionUrl": "ap://sleep",
+                  "Parameters": {"seconds": 0.1},
+                  "ResultPath": "$.pause", "Next": "B"},
+        "B": {"Type": "Action", "ActionUrl": "ap://echo",
+              "Parameters": {"echo_string.$": "$.a.details.echo_string"},
+              "ResultPath": "$.b", "End": True},
+    },
+}
+
+
+def fresh_registry() -> ActionRegistry:
+    registry = ActionRegistry()
+    registry.register(EchoProvider())
+    registry.register(SleepProvider())
+    return registry
+
+
+def submit_workload(backend) -> dict[str, object]:
+    """The shared differential workload: echo runs (a third of them
+    tenant-stamped and metered through admission), plus Map fan-outs."""
+    echo_flow = asl.parse(ECHO)
+    fan_flow = asl.parse(MAP_FAN)
+    acme = Tenant(tenant_id="acme", max_concurrency=2)
+    handles = {}
+    for i in range(12):
+        kwargs = {"tenant": acme} if i % 3 == 0 else {}
+        h = backend.start_run(echo_flow, {"msg": f"m{i}"}, flow_id="echo",
+                              run_id=f"run-e{i:02d}", **kwargs)
+        handles[h.run_id] = h
+    for i in range(3):
+        h = backend.start_run(fan_flow, {"xs": list(range(8))},
+                              flow_id="fan", run_id=f"run-f{i}")
+        handles[h.run_id] = h
+    for rid in handles:
+        assert backend.wait(rid, timeout=WAIT_S).status == RUN_SUCCEEDED, rid
+    return handles
+
+
+def project(ctx: dict):
+    """The semantically-meaningful slice of a terminal context (action
+    envelopes carry per-execution ids/timestamps that legitimately differ
+    between backends)."""
+    if "results" in ctx:
+        return [item["echoed"]["details"]["echo_string"]
+                for item in ctx["results"]]
+    return ctx["r"]["details"]["echo_string"]
+
+
+def signature(handles) -> dict[str, tuple]:
+    return {rid: (h.status, h.tenant_id, project(h.context))
+            for rid, h in handles.items()}
+
+
+# ------------------------------------------------------------ backend seam
+
+def test_make_backend_thread_is_inline_pool(tmp_path):
+    backend = make_backend("thread", fresh_registry(), num_shards=2,
+                           clock=RealClock(),
+                           journal_path=str(tmp_path / "j.jsonl"))
+    try:
+        assert isinstance(backend, InlineBackend)
+        assert isinstance(backend, EngineShardPool)
+        assert isinstance(backend, ExecutionBackend)
+        assert backend.backend_name == "thread"
+    finally:
+        backend.shutdown()
+
+
+def test_make_backend_process_rejects_inline_only_knobs():
+    with pytest.raises(ValueError, match="journals="):
+        make_backend("process", fresh_registry(), journals=[object()],
+                     options={"registry_spec": REGISTRY_SPEC})
+    with pytest.raises(ValueError, match="registry_spec"):
+        make_backend("process", fresh_registry())
+    with pytest.raises(ValueError, match="unknown execution backend"):
+        make_backend("carrier-pigeon", fresh_registry())
+
+
+# --------------------------------------------------- journal spawn safety
+
+def _spawn_probe(path: str, conn) -> None:
+    """Reopen a pre-spawn segment in a worker process and extend it."""
+    journal = Journal(path)
+    seen_epoch = journal.epoch
+    new_epoch = journal.bump_epoch("worker takeover")
+    journal.append({"type": "note", "who": "child", "pid": os.getpid()})
+    journal.close()
+    conn.send({"seen_epoch": seen_epoch, "new_epoch": new_epoch})
+    conn.close()
+
+
+def test_journal_segment_round_trips_across_spawn(tmp_path):
+    """A segment written before a spawn is reopened in the worker with
+    fencing intact: the worker sees the parent's epoch, supersedes it, and
+    the fenced pre-spawn handle can never append again."""
+    path = segment_path(str(tmp_path / "journal.jsonl"), 0, 2)
+    journal = Journal(path)
+    journal.append({"type": "note", "who": "parent", "pid": os.getpid()})
+    assert journal.bump_epoch("pre-spawn handoff") == 1
+    # the parent handle stays open (lazily, in this pid) across the spawn
+    ctx = mp.get_context("spawn")
+    recv, send = ctx.Pipe(duplex=False)
+    proc = ctx.Process(target=_spawn_probe, args=(path, send))
+    proc.start()
+    proc.join(60)
+    assert proc.exitcode == 0
+    assert recv.recv() == {"seen_epoch": 1, "new_epoch": 2}
+    # the superseded pre-spawn holder is fenced; its late appends bounce
+    journal.fence("superseded by spawned successor")
+    with pytest.raises(JournalFenced):
+        journal.append({"type": "note", "who": "zombie"})
+    journal.close()
+    # a fresh reader sees both writers' records under the highest epoch
+    reader = Journal(path)
+    assert reader.epoch == 2
+    notes = [r["who"] for r in reader.records() if r.get("type") == "note"]
+    assert notes == ["parent", "child"]
+    reader.close()
+
+
+def _fork_appender(journal: Journal, conn) -> None:
+    try:
+        journal.append({"type": "note", "who": "forked-child",
+                        "pid": os.getpid()})
+        conn.send(("ok", journal._fh_pid))
+    except BaseException as exc:  # pragma: no cover - diagnostic path
+        conn.send(("err", repr(exc)))
+    finally:
+        conn.close()
+
+
+def test_inherited_fh_reopened_not_shared(tmp_path):
+    """A journal object carried across ``fork`` must not write through the
+    parent's inherited file handle: the child re-opens under its own pid,
+    and the parent's handle keeps working afterwards."""
+    if "fork" not in mp.get_all_start_methods():
+        pytest.skip("platform has no fork start method")
+    path = str(tmp_path / "seg.jsonl")
+    journal = Journal(path)
+    journal.append({"type": "note", "who": "parent-1"})  # fh now open here
+    ctx = mp.get_context("fork")
+    recv, send = ctx.Pipe(duplex=False)
+    proc = ctx.Process(target=_fork_appender, args=(journal, send))
+    proc.start()
+    proc.join(60)
+    assert proc.exitcode == 0
+    status, owner_pid = recv.recv()
+    assert status == "ok"
+    assert owner_pid == proc.pid  # child re-opened; never the parent's fd
+    journal.append({"type": "note", "who": "parent-2"})  # parent fh intact
+    journal.close()
+    notes = [r["who"] for r in Journal(path).records()
+             if r.get("type") == "note"]
+    assert notes == ["parent-1", "forked-child", "parent-2"]
+
+
+# ------------------------------------------------- inline ≡ process runs
+
+@pytest.mark.parametrize("shards", [2, 4, 8])
+def test_process_equals_inline_terminal_states(tmp_path, shards):
+    """Invariant 13 at 2/4/8 shards: identical workload (echo storms, Map
+    fan-out, tenant-stamped metered runs) → identical terminal states."""
+    inline = make_backend(
+        "thread", fresh_registry(), num_shards=shards, clock=RealClock(),
+        journal_path=str(tmp_path / "inline.jsonl"), admission_window=4,
+    )
+    try:
+        ref = signature(submit_workload(inline))
+    finally:
+        inline.shutdown()
+
+    proc = make_backend(
+        "process", fresh_registry(), num_shards=shards,
+        journal_path=str(tmp_path / "proc.jsonl"), admission_window=4,
+        options={"registry_spec": REGISTRY_SPEC},
+    )
+    try:
+        assert isinstance(proc, ProcessBackend)
+        assert proc.backend_name == "process"
+        got = signature(submit_workload(proc))
+        # Map children count as runs too, so >= the top-level submissions
+        assert proc.stats["runs_succeeded"] >= len(got)
+    finally:
+        proc.shutdown()
+
+    assert got == ref
+    assert all(status == RUN_SUCCEEDED for status, _, _ in ref.values())
+    # the tenant stamp crossed the boundary on every metered run
+    assert {rid for rid, (_, t, _) in got.items() if t == "acme"} \
+        == {f"run-e{i:02d}" for i in range(0, 12, 3)}
+
+
+# ------------------------------------------- SIGKILL mid-storm failover
+
+def _storm(backend, n_runs: int) -> dict[str, object]:
+    flow = asl.parse(CHAIN)
+    handles = {}
+    for i in range(n_runs):
+        h = backend.start_run(flow, {"msg": f"m{i}"}, flow_id="chain",
+                              run_id=f"run-{i:04d}")
+        handles[h.run_id] = h
+    return handles
+
+
+def test_sigkill_midstorm_recovers_exactly_once(tmp_path):
+    """SIGKILL one worker of a 4-shard process-backend storm: every run
+    reaches the uninterrupted reference's terminal state, exactly once at
+    the durability layer (one ``run_completed`` per run across all
+    segments), under a bumped fencing epoch on the victim's segment."""
+    n_runs = 32
+    # uninterrupted reference: same topology, no chaos
+    ref_backend = ProcessBackend(
+        REGISTRY_SPEC, num_shards=4, num_workers=4,
+        journal_path=str(tmp_path / "ref.jsonl"),
+    )
+    try:
+        ref_handles = _storm(ref_backend, n_runs)
+        for rid in ref_handles:
+            assert ref_backend.wait(rid, WAIT_S).status == RUN_SUCCEEDED
+        ref = {rid: (h.status, h.context["b"]["details"]["echo_string"])
+               for rid, h in ref_handles.items()}
+    finally:
+        ref_backend.shutdown()
+
+    chaos = ChaosPlane(seed=11, clock=RealClock())
+    journal_base = str(tmp_path / "storm.jsonl")
+    backend = ProcessBackend(
+        REGISTRY_SPEC, num_shards=4, num_workers=4,
+        journal_path=journal_base,
+        heartbeat_interval=0.2, heartbeat_timeout=0.8, chaos=chaos,
+    )
+    try:
+        # plan the kill only once the fleet is up: the plan stays a pure
+        # keyed draw, the delivery is a real signal mid-flight
+        plan = chaos.plan_kill(1, at=time.time() + 0.4, mode="sigkill")
+        handles = _storm(backend, n_runs)
+        for rid in handles:
+            assert backend.wait(rid, WAIT_S).status == RUN_SUCCEEDED, rid
+        deadline = time.time() + 30.0
+        while not backend.failovers and time.time() < deadline:
+            time.sleep(0.05)
+
+        # the plan fired as a real SIGKILL and was detected + repaired
+        assert plan.executed
+        assert ("kill", "worker1", "sigkill") in chaos.timeline
+        assert len(backend.failovers) == 1
+        fo = backend.failovers[0]
+        assert fo["worker"] == 1
+        assert fo["shards"] == [1]  # num_workers == num_shards: 1:1 mapping
+        assert fo["completed_at"] >= fo["detected_at"]
+        assert fo["takeover_s"] < 30.0
+        assert fo["runs_resumed"] + fo["terminal_resolved"] \
+            + fo["resubmitted"] >= 0
+        # the orphaned shard was re-homed onto a survivor
+        assert backend.shard_owner(1) != 1
+
+        got = {rid: (h.status, h.context["b"]["details"]["echo_string"])
+               for rid, h in handles.items()}
+        assert got == ref
+    finally:
+        backend.shutdown()
+
+    # exactly-once at the durability layer: across all four segments every
+    # run carries exactly one terminal record, and the victim's segment was
+    # taken over under a bumped fencing epoch
+    completed: dict[str, int] = {}
+    epochs = {}
+    for shard in range(4):
+        journal = Journal(segment_path(journal_base, shard, 4))
+        for rec in journal.records():
+            if rec.get("type") == "run_completed":
+                rid = rec.get("run_id") or rec.get("run")
+                completed[rid] = completed.get(rid, 0) + 1
+        epochs[shard] = replay_segment(journal).epoch
+        journal.close()
+    assert completed == {f"run-{i:04d}": 1 for i in range(n_runs)}
+    assert epochs[1] >= 1  # takeover bumped the victim's epoch
+    assert all(epochs[s] == 0 for s in (0, 2, 3))  # survivors undisturbed
+
+
+def test_direct_kill_rehomes_and_reports_takeover(tmp_path):
+    """fig_mttr-style takeover: kill a worker pid directly (no chaos) and
+    read the failover timeline — detection, takeover latency, re-homing."""
+    backend = ProcessBackend(
+        REGISTRY_SPEC, num_shards=2, num_workers=2,
+        journal_path=str(tmp_path / "mttr.jsonl"),
+        heartbeat_interval=0.2, heartbeat_timeout=0.8,
+    )
+    try:
+        flow = asl.parse(CHAIN)
+        handles = {}
+        for i in range(8):
+            h = backend.start_run(flow, {"msg": f"m{i}"}, flow_id="chain",
+                                  run_id=f"run-{i:04d}")
+            handles[h.run_id] = h
+        time.sleep(0.15)  # let submissions reach the workers
+        os.kill(backend.worker_pid(1), signal.SIGKILL)
+        for rid, h in handles.items():
+            assert backend.wait(rid, WAIT_S).status == RUN_SUCCEEDED, rid
+        deadline = time.time() + 30.0
+        while not backend.failovers and time.time() < deadline:
+            time.sleep(0.05)
+        assert len(backend.failovers) == 1
+        fo = backend.failovers[0]
+        assert fo["worker"] == 1
+        assert fo["shards"] == [1]
+        assert fo["takeover_s"] >= 0.0
+        assert backend.shard_owner(1) == 0  # survivor adopted the shard
+        assert 1 in backend.dead_workers
+    finally:
+        backend.shutdown()

@@ -10,7 +10,6 @@ from repro.core.providers import (
     DOIProvider,
     EchoProvider,
     EmailProvider,
-    Endpoint,
     SearchProvider,
     SleepProvider,
     TransferProvider,

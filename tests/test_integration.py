@@ -4,8 +4,6 @@ The full loop — flow-orchestrated training with failure injection and
 journal-based engine recovery — on a tiny model, virtual where possible.
 """
 
-import os
-
 import jax
 import pytest
 
